@@ -1,0 +1,44 @@
+"""Beyond-paper extensions bench: FedLAMB / FedLion (the optimizers the
+paper's conclusion points at) and int8-quantized uploads, against
+FedAdamW — accuracy and wire bytes."""
+import jax
+
+from benchmarks.common import Rows, bench_fl, print_table
+from repro.core import build_fed_state, get_algorithm
+from repro.core.extensions import wire_bytes
+from repro.config import FedConfig, get_arch
+from repro.config.model_config import reduced_variant
+from repro.models import build_model
+
+
+def _wire_mb(algorithm: str) -> float:
+    import jax.numpy as jnp
+    cfg = reduced_variant(get_arch("vit-tiny-fl"))
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    fed = FedConfig(algorithm=algorithm, num_clients=4, clients_per_round=2,
+                    local_steps=1)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    up = jax.eval_shape(lambda: alg.upload(
+        params, alg.init_client(params, sstate, fed, specs=specs),
+        specs, fed))
+    return wire_bytes(up, delta_int8=algorithm.endswith("+int8")) / 1e6
+
+
+def run() -> Rows:
+    rows = Rows("beyond_paper")
+    for algo, lr in (("fedadamw", None), ("fedlamb", None),
+                     ("fedlion", 1e-4), ("fedadamw+int8", None)):
+        h = bench_fl(algo, dirichlet=0.1, lr=lr)
+        rows.add(algorithm=algo,
+                 test_acc=round(h["test_acc"][-1], 4),
+                 train_loss=round(h["train_loss"][-1], 4),
+                 wire_mb_per_client=round(_wire_mb(algo), 3))
+    rows.save()
+    print_table("Beyond paper — FedLAMB / FedLion / int8 uploads",
+                rows.rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,107 @@
+"""Paper Figure 2: (a) data heterogeneity inflates the cross-client
+variance of the second-moment estimate v under Local AdamW, and FedAdamW's
+block-mean aggregation suppresses it; (b) Local AdamW drifts further from
+the global average than Local SGD, and the alpha-correction reduces drift.
+
+Measured directly on the round engine by instrumenting per-client local
+phases (no jit barrier needed at this scale)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows, budget, print_table
+from repro.config import FedConfig, get_arch
+from repro.config.model_config import reduced_variant
+from repro.core import build_fed_state, make_local_phase
+from repro.core.tree_util import global_norm, tree_sub
+from repro.data import make_task, round_batches, sample_clients
+from repro.models import build_model
+
+
+def _per_client_final_states(model, cfg, fed, task, rounds, seed=0):
+    """Runs rounds manually, returning per-client (v, x) after local
+    training in the final round."""
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(seed), cfg=cfg)
+    rng = np.random.default_rng(seed)
+    loss_fn = model.loss
+
+    import repro.core.rounds as rounds_mod
+    local_phase = rounds_mod.make_local_phase(loss_fn, alg, fed, specs)
+
+    @jax.jit
+    def run_client(gparams, sst, batches):
+        cstate = alg.init_client(gparams, sst, fed, specs=specs)
+
+        def step(carry, batch):
+            p, cst = carry
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+            p, cst = alg.local_step(p, g, cst, sst, fed, 1.0)
+            return (p, cst), loss
+
+        (p_k, cst_k), losses = jax.lax.scan(step, (gparams, cstate), batches)
+        return p_k, cst_k, losses.mean()
+
+    b = budget(16, 4)
+    for r in range(rounds):
+        cids = sample_clients(fed.num_clients, fed.clients_per_round, rng)
+        rb = round_batches(task, cids, fed.local_steps, b, rng)
+        rb = {k: jnp.asarray(v) for k, v in rb.items()}
+        clients = []
+        for si in range(fed.clients_per_round):
+            cb = {k: v[si] for k, v in rb.items()}
+            clients.append(run_client(params, sstate, cb))
+        deltas = [tree_sub(p_k, params) for (p_k, _, _) in clients]
+        mean_delta = jax.tree.map(
+            lambda *xs: jnp.mean(jnp.stack(xs), 0), *deltas)
+        uploads = [alg.upload(d, cst, specs, fed)
+                   for d, (_, cst, _) in zip(deltas, clients)]
+        mean_up = jax.tree.map(lambda *xs: jnp.mean(jnp.stack(xs), 0),
+                               *uploads)
+        params, sstate = alg.server_update(params, sstate, mean_up, specs,
+                                           fed)
+    return params, sstate, clients
+
+
+def run() -> Rows:
+    rows = Rows("fig2_variance_drift")
+    cfg = reduced_variant(get_arch("vit-tiny-fl"))
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    rounds = budget(4, 2)
+
+    for label, algo, agg, alpha in (
+            ("local_adamw", "local_adamw", "none", 0.0),
+            ("fedadamw", "fedadamw", "mean_v", 0.5)):
+        for dirichlet in (0.6, 0.1):
+            fed = FedConfig(algorithm=algo, v_aggregation=agg, alpha=alpha,
+                            num_clients=budget(16, 4),
+                            clients_per_round=budget(8, 2),
+                            local_steps=budget(10, 2), lr=3e-4)
+            task = make_task("class_lm", vocab_size=cfg.vocab_size,
+                             seq_len=32, num_samples=2048,
+                             num_clients=fed.num_clients,
+                             dirichlet_alpha=dirichlet, seed=0)
+            params, sstate, clients = _per_client_final_states(
+                model, cfg, fed, task, rounds)
+            # (a) cross-client variance of v (flattened, mean over dims)
+            vs = [jnp.concatenate([x.reshape(-1) for x in
+                                   jax.tree.leaves(cst["v"])])
+                  for (_, cst, _) in clients]
+            vstack = jnp.stack(vs)
+            v_var = float(jnp.mean(jnp.var(vstack, axis=0)))
+            # (b) client drift: mean distance of client model from average
+            ps = [p for (p, _, _) in clients]
+            pavg = jax.tree.map(lambda *xs: jnp.mean(jnp.stack(xs), 0), *ps)
+            drift = float(np.mean([
+                float(global_norm(tree_sub(p, pavg))) for p in ps]))
+            rows.add(setting=label, dirichlet=dirichlet,
+                     v_variance=f"{v_var:.3e}", client_drift=round(drift, 4))
+    rows.save()
+    print_table("Fig.2 — v-variance & client drift", rows.rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Roofline table generator (deliverable g): reads the dry-run JSON records
+from experiments/dryrun and prints the per-(arch x shape x mesh) three-term
+roofline with the dominant bottleneck. Also emits the EXPERIMENTS.md
+§Roofline markdown table."""
+import glob
+import json
+import os
+
+from benchmarks.common import OUT_DIR, Rows, print_table
+
+DRYRUN_DIR = os.environ.get(
+    "DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun"))
+
+
+def load_records(mesh: str = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run() -> Rows:
+    rows = Rows("roofline_report")
+    for r in load_records():
+        if r.get("status") == "skip":
+            rows.add(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                     status="SKIP", compute_s="-", memory_s="-",
+                     collective_s="-", bottleneck="-", useful="-",
+                     temp_gb="-")
+            continue
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        rows.add(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                 status="ok",
+                 compute_s=f"{rf['compute_s']:.3g}",
+                 memory_s=f"{rf['memory_s']:.3g}",
+                 collective_s=f"{rf['collective_s']:.3g}",
+                 bottleneck=rf["bottleneck"],
+                 useful=(f"{r['useful_flops_ratio']:.2f}"
+                         if r.get("useful_flops_ratio") else "-"),
+                 temp_gb=f"{(r['memory']['bytes_per_device'] or 0)/1e9:.1f}")
+    rows.save()
+    print_table("Roofline — per (arch x shape x mesh), per-chip seconds",
+                rows.rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

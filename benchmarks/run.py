@@ -1,0 +1,53 @@
+"""Benchmark aggregator: one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, where
+us_per_call is the benchmark's wall time and ``derived`` is its headline
+result. Set BENCH_QUICK=1 for a fast pass.
+"""
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (beyond_paper, fig1_adamw_vs_sgd,
+                            fig2_variance_drift, kernels_bench,
+                            roofline_report, speedup_theorem1, table1_main,
+                            table4_ablation, table5_alpha,
+                            table6_weight_decay, table7_aggregation)
+    benches = [
+        ("fig1_adamw_vs_sgd", fig1_adamw_vs_sgd.run),
+        ("fig2_variance_drift", fig2_variance_drift.run),
+        ("table1_main", table1_main.run),
+        ("table4_ablation", table4_ablation.run),
+        ("table5_alpha", table5_alpha.run),
+        ("table6_weight_decay", table6_weight_decay.run),
+        ("table7_aggregation", table7_aggregation.run),
+        ("speedup_theorem1", speedup_theorem1.run),
+        ("beyond_paper", beyond_paper.run),
+        ("kernels_bench", kernels_bench.run),
+        ("roofline_report", roofline_report.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        try:
+            rows = fn()
+            derived = ""
+            if rows.rows:
+                last = rows.rows[-1]
+                derived = ";".join(f"{k}={v}" for k, v in last.items())
+            print(f"{name},{rows.wall_us():.0f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{name},FAILED,")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Theorem 1 linear-speedup check: the convergence rate improves with the
+product S*K (participating clients x local steps). We fix the total
+gradient budget per round and report training loss after a fixed number of
+rounds for increasing S*K."""
+from benchmarks.common import Rows, bench_fl, budget, print_table
+
+
+def run() -> Rows:
+    rows = Rows("speedup_theorem1")
+    for s, k in ((2, 2), (4, 4), (8, 8)):
+        h = bench_fl("fedadamw", dirichlet=0.6,
+                     num_clients=max(8, s), clients_per_round=s,
+                     local_steps=k, rounds=budget(10, 2))
+        rows.add(S=s, K=k, SK=s * k,
+                 train_loss=round(h["train_loss"][-1], 4),
+                 test_acc=round(h["test_acc"][-1], 4))
+    rows.save()
+    print_table("Theorem 1 — loss after fixed rounds vs S*K", rows.rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Table 1/11: all 8 algorithms under Dir-0.6 and Dir-0.1 on the
+ViT-Tiny analogue. Reproduces the RELATIVE ordering (FedAdamW best) on the
+synthetic non-iid task — absolute CIFAR accuracies are out of scope on CPU
+(DESIGN.md §6)."""
+from benchmarks.common import Rows, bench_fl, print_table
+
+ALGOS = ["fedavg", "scaffold", "fedcm", "local_adam", "fedadam",
+         "fedlada", "local_adamw", "fedadamw"]
+
+
+def run() -> Rows:
+    rows = Rows("table1_main")
+    for dirichlet in (0.6, 0.1):
+        for algo in ALGOS:
+            h = bench_fl(algo, dirichlet=dirichlet)
+            rows.add(algorithm=algo, dirichlet=dirichlet,
+                     test_acc=round(h["test_acc"][-1], 4),
+                     train_loss=round(h["train_loss"][-1], 4),
+                     comm_mb=round(h["upload_mbytes"][-1], 3))
+    rows.save()
+    print_table("Table 1 — main comparison (synthetic, 2 heterogeneity "
+                "levels)", rows.rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

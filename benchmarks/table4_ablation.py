@@ -1,0 +1,37 @@
+"""Paper Table 4: component ablations.
+A1 w/o v-bar aggregation; A2 w/o global alignment (alpha=0); A3 w/o
+decoupled weight decay (coupled L2); A4 full FedAdamW."""
+from benchmarks.common import Rows, bench_fl, print_table
+
+
+def run() -> Rows:
+    rows = Rows("table4_ablation")
+    variants = [
+        ("A1_no_v_agg", dict(v_aggregation="none")),
+        ("A2_no_global_align", dict(alpha=0.0)),
+        ("A3_coupled_wd", dict(decoupled_wd=False)),
+        ("A4_full", dict()),
+    ]
+    for name, extra in variants:
+        # extra FedConfig fields ride through run_training via fed overrides
+        h = bench_fl("fedadamw", dirichlet=0.1, **_as_overrides(extra))
+        rows.add(variant=name, test_acc=round(h["test_acc"][-1], 4),
+                 train_loss=round(h["train_loss"][-1], 4))
+    rows.save()
+    print_table("Table 4 — ablations (Dir-0.1)", rows.rows)
+    return rows
+
+
+def _as_overrides(extra):
+    out = {}
+    if "v_aggregation" in extra:
+        out["v_aggregation"] = extra["v_aggregation"]
+    if "alpha" in extra:
+        out["alpha"] = extra["alpha"]
+    if "decoupled_wd" in extra:
+        out["decoupled_wd"] = extra["decoupled_wd"]
+    return out
+
+
+if __name__ == "__main__":
+    run()

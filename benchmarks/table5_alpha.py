@@ -1,0 +1,17 @@
+"""Paper Table 5: sweep of the global-update correction strength alpha."""
+from benchmarks.common import Rows, bench_fl, print_table
+
+
+def run() -> Rows:
+    rows = Rows("table5_alpha")
+    for alpha in (0.0, 0.25, 0.5, 0.75, 1.0):
+        h = bench_fl("fedadamw", dirichlet=0.1, alpha=alpha)
+        rows.add(alpha=alpha, test_acc=round(h["test_acc"][-1], 4),
+                 train_loss=round(h["train_loss"][-1], 4))
+    rows.save()
+    print_table("Table 5 — alpha sweep (Dir-0.1)", rows.rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Table 7: second-moment aggregation strategies vs communication.
+NoAgg / Agg-v (full) / Agg-vm (full) / Agg-mean-v (ours, O(B))."""
+from benchmarks.common import Rows, bench_fl, print_table
+
+STRATEGIES = [
+    ("NoAgg", "none"),
+    ("Agg-v", "full_v"),
+    ("Agg-vm", "full_vm"),
+    ("Agg-mean-v", "mean_v"),
+]
+
+
+def run() -> Rows:
+    rows = Rows("table7_aggregation")
+    for label, agg in STRATEGIES:
+        h = bench_fl("fedadamw", dirichlet=0.1, v_aggregation=agg)
+        rows.add(strategy=label,
+                 test_acc=round(h["test_acc"][-1], 4),
+                 train_loss=round(h["train_loss"][-1], 4),
+                 comm_mb_per_client=round(h["upload_mbytes"][-1], 3))
+    rows.save()
+    print_table("Table 7 — aggregation strategy vs communication", rows.rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Quickstart: 10 rounds of FedAdamW on a synthetic non-iid task.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the paper's ViT-Tiny analogue, partitions a synthetic
+classification task across 8 clients with Dirichlet(0.3) label skew, and
+runs FedAdamW (block-mean v aggregation + global-update correction +
+decoupled weight decay) for 10 communication rounds.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FedConfig, get_arch
+from repro.config.model_config import reduced_variant
+from repro.core import build_fed_state, make_round_fn, total_blocks
+from repro.core.partition import partition_report
+from repro.data import make_task, round_batches, sample_clients
+from repro.models import build_model
+
+
+def main():
+    cfg = reduced_variant(get_arch("vit-tiny-fl"))
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    fed = FedConfig(algorithm="fedadamw", num_clients=8,
+                    clients_per_round=4, local_steps=8, lr=1e-3,
+                    weight_decay=0.01, alpha=0.5)
+
+    task = make_task("class_lm", vocab_size=cfg.vocab_size, seq_len=32,
+                     num_samples=2048, num_clients=fed.num_clients,
+                     dirichlet_alpha=0.3, seed=0)
+
+    params, specs, alg, sstate = build_fed_state(model, fed,
+                                                 jax.random.key(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  params={n_params/1e6:.2f}M  "
+          f"hessian blocks={total_blocks(specs)} "
+          f"(v upload is {total_blocks(specs)} floats, not {n_params})")
+    print(partition_report(specs))
+
+    round_fn = jax.jit(make_round_fn(model, fed, specs, alg=alg))
+    rng = np.random.default_rng(1)
+    for r in range(10):
+        cids = sample_clients(fed.num_clients, fed.clients_per_round, rng)
+        batches = round_batches(task, cids, fed.local_steps, 16, rng)
+        batches = {k: jnp.asarray(v) for k, v in batches.items()}
+        params, sstate, m = round_fn(params, sstate, batches,
+                                     jnp.asarray(cids), jnp.asarray(r))
+        print(f"round {r:2d}  train loss {float(m['loss_mean']):.4f}")
+
+    test = {k: jnp.asarray(v) for k, v in task.test_batch(256).items()}
+    loss, metrics = jax.jit(model.loss)(params, test)
+    print(f"test loss {float(loss):.4f}  "
+          f"test acc {float(metrics['accuracy']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

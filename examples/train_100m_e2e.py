@@ -1,0 +1,80 @@
+"""End-to-end driver (deliverable b): federated training of a ~100M-param
+dense Transformer for a few hundred local steps.
+
+    PYTHONPATH=src python examples/train_100m_e2e.py [--rounds 20]
+
+The model is a 12L/d768 decoder (~110M params incl. embeddings) — the
+largest thing this CPU container trains in reasonable wall time. 20 rounds
+x 4 clients x 5 local steps = 400 optimizer steps. Use --rounds to extend.
+Checkpoints every 5 rounds; restores and resumes if a checkpoint exists.
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.config import FedConfig, get_arch
+from repro.core import build_fed_state, make_round_fn
+from repro.data import make_task, round_batches, sample_clients
+from repro.metrics import Meter
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_arch("roberta-base-fl")  # 12L d768: ~110M params
+    model = build_model(cfg, compute_dtype=jnp.bfloat16)
+    fed = FedConfig(algorithm="fedadamw", num_clients=8,
+                    clients_per_round=4, local_steps=5, lr=3e-4,
+                    weight_decay=0.01, alpha=0.5)
+    task = make_task("lm", vocab_size=1024, seq_len=128, num_samples=4096,
+                     num_clients=fed.num_clients, dirichlet_alpha=0.3,
+                     seed=0)
+    # the task vocab is a subset of the model's padded vocab: fine for LM
+
+    params, specs, alg, sstate = build_fed_state(model, fed,
+                                                 jax.random.key(0))
+    start = 0
+    if os.path.exists(os.path.join(args.ckpt_dir, "latest")):
+        params, sstate, start = restore_checkpoint(
+            args.ckpt_dir, params_template=params, state_template=sstate)
+        print(f"resumed from round {start}")
+
+    n = sum(p.size for p in jax.tree.leaves(params))
+    print(f"training {cfg.name}: {n/1e6:.0f}M params, "
+          f"{fed.num_clients} clients, K={fed.local_steps}")
+
+    round_fn = jax.jit(make_round_fn(model, fed, specs, alg=alg,
+                                     cosine_total_rounds=args.rounds))
+    rng = np.random.default_rng(start + 1)
+    meter = Meter()
+    for r in range(start, args.rounds):
+        t0 = time.perf_counter()
+        cids = sample_clients(fed.num_clients, fed.clients_per_round, rng)
+        batches = round_batches(task, cids, fed.local_steps, 8, rng)
+        batches = {k: jnp.asarray(v) for k, v in batches.items()}
+        params, sstate, m = round_fn(params, sstate, batches,
+                                     jnp.asarray(cids), jnp.asarray(r))
+        loss = float(m["loss_mean"])
+        meter.update(loss)
+        print(f"round {r:3d}  loss {loss:.4f} (ema {meter.value:.4f})  "
+              f"{time.perf_counter()-t0:.1f}s")
+        if (r + 1) % 5 == 0:
+            save_checkpoint(args.ckpt_dir, r + 1, params=params,
+                            server_state=sstate)
+            print(f"  checkpointed @ {r + 1}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Configuration system: model/fed/run configs, arch registry, input shapes."""
+from repro.config.model_config import (
+    AttentionConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+)
+from repro.config.fed_config import FedConfig
+from repro.config.run_config import RunConfig, InputShape, INPUT_SHAPES
+from repro.config.registry import register_arch, get_arch, list_archs
+
+__all__ = [
+    "AttentionConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "FedConfig",
+    "RunConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "register_arch",
+    "get_arch",
+    "list_archs",
+]

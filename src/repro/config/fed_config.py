@@ -1,0 +1,82 @@
+"""Federated optimization configuration (FedAdamW and baselines)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """Hyperparameters of a federated optimization run.
+
+    Defaults follow the paper's experimental section (Appendix C):
+    lr 3e-4, weight decay 0.01, alpha 0.5, beta1 0.9, beta2 0.999,
+    server lr (gamma) 1.0, K=50 local steps.
+    """
+
+    algorithm: str = "fedadamw"
+    # fedadamw | fedavg | scaffold | fedcm | fedadam | fedlada
+    # | local_adam | local_adamw | local_sgd (alias of fedavg)
+
+    num_clients: int = 64              # N
+    clients_per_round: int = 16        # S
+    local_steps: int = 50              # K
+    rounds: int = 100                  # R
+
+    lr: float = 3e-4                   # local learning rate (eta)
+    server_lr: float = 1.0             # gamma
+    weight_decay: float = 0.01         # lambda (decoupled)
+    alpha: float = 0.5                 # global-update correction strength
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+    # FedAdamW aggregation strategy ablation (paper Table 7):
+    # mean_v (ours, O(B)) | full_v (Agg-v, O(d)) | full_vm (Agg-vm, O(2d)) | none
+    v_aggregation: str = "mean_v"
+
+    # continuous time-step bias correction for v (Algorithm 2 keeps a global t)
+    global_t_bias_correction: bool = True
+
+    # ablation A3 (paper Table 4): couple the weight decay into the gradient
+    # (Adam-style L2) instead of the decoupled AdamW form
+    decoupled_wd: bool = True
+
+    # baseline-specific
+    fedcm_alpha: float = 0.1           # FedCM momentum mixing
+    fedadam_tau: float = 1e-3          # FedAdam server adaptivity epsilon
+    fedadam_server_lr: float = 1e-2
+    fedlada_alpha: float = 0.5         # FedLADA mixing
+
+    # block partition controls (Appendix D)
+    min_block_size: int = 512
+    max_blocks: int = 65536
+
+    # placement: client_parallel | client_sequential (see DESIGN.md §2)
+    layout: str = "client_parallel"
+    # number of sequential client chunks when layout == client_sequential
+    sequential_clients: int = 4
+
+    use_pallas_update: bool = False    # route local update through the Pallas kernel
+
+    # gradient micro-batching inside each local step: the per-step batch is
+    # split into this many chunks whose gradients are accumulated (identical
+    # semantics — the mean of micro-gradients IS the batch gradient) so the
+    # activation working set shrinks by the same factor. Required to fit the
+    # >30B architectures' train_4k shape in 16 GB HBM (EXPERIMENTS.md
+    # §Dry-run memory iteration).
+    grad_microbatches: int = 1
+
+    def validate(self) -> None:
+        base = self.algorithm.removesuffix("+int8")
+        if base not in (
+            "fedadamw", "fedavg", "scaffold", "fedcm", "fedadam", "fedlada",
+            "local_adam", "local_adamw", "local_sgd",
+            "fedlamb", "fedlion",  # beyond-paper (paper conclusion)
+        ):
+            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if self.v_aggregation not in ("mean_v", "full_v", "full_vm", "none"):
+            raise ValueError(f"unknown v_aggregation {self.v_aggregation!r}")
+        if self.layout not in ("client_parallel", "client_sequential"):
+            raise ValueError(f"unknown layout {self.layout!r}")
+        if self.clients_per_round > self.num_clients:
+            raise ValueError("clients_per_round > num_clients")

@@ -1,0 +1,226 @@
+"""Model configuration dataclasses.
+
+A single ``ModelConfig`` describes every architecture family in the assigned
+pool: dense decoder-only Transformers (with GQA / qk-norm / QKV-bias /
+non-parametric-LN variants), mixture-of-experts, Mamba2 SSD state-space
+models, Zamba2-style hybrids, encoder-decoder (audio) stacks and VLM language
+towers fed by stub modality frontends.
+
+Configs are frozen dataclasses so they can be used as static (hashable)
+arguments to ``jax.jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    """Attention block configuration (GQA by default)."""
+
+    num_heads: int = 8
+    num_kv_heads: int = 8               # kv_heads == num_heads -> MHA
+    head_dim: Optional[int] = None      # default: d_model // num_heads
+    qkv_bias: bool = False              # Qwen2-style bias on QKV projections
+    qk_norm: bool = False               # Qwen3-style RMSNorm on per-head q,k
+    sliding_window: Optional[int] = None  # None -> full causal attention
+    rope_theta: float = 10000.0
+    use_mrope: bool = False             # Qwen2-VL multimodal rotary embedding
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t/h/w split of head_dim/2
+
+    def resolved_head_dim(self, d_model: int) -> int:
+        return self.head_dim if self.head_dim is not None else d_model // self.num_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration."""
+
+    num_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: Optional[int] = None   # expert hidden size (default: ModelConfig.d_ff)
+    capacity_factor: float = 1.25       # dispatch capacity per expert
+    aux_loss_weight: float = 0.01       # load-balance auxiliary loss
+    router_jitter: float = 0.0
+    num_shared_experts: int = 0         # llama4-style always-on shared expert
+    tokens_per_group: int = 512         # routing group size (bounds dispatch memory)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD, state-space duality) configuration."""
+
+    state_dim: int = 128                # N: SSM state size
+    head_dim: int = 64                  # P: channels per SSD head
+    expand: int = 2                     # d_inner = expand * d_model
+    chunk_size: int = 256               # SSD chunked-scan block length
+    conv_width: int = 4                 # depthwise causal conv width
+    ngroups: int = 1                    # B/C groups
+    # cross-chunk recurrence: "scan" = sequential lax.scan over chunks
+    # (the paper's formulation); "closed" = exact closed-form masked
+    # decay-matrix einsum — no serial dependency, MXU-friendly, and it
+    # removes the per-trip stacked-state traffic that dominates the train
+    # memory roofline (EXPERIMENTS.md §Perf pair 2)
+    cross_chunk: str = "closed"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Top-level architecture description."""
+
+    name: str = "model"
+    family: str = "dense"               # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int = 2
+    d_model: int = 256
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    attention: AttentionConfig = dataclasses.field(default_factory=AttentionConfig)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    norm_type: str = "rmsnorm"          # rmsnorm | layernorm | nonparam_ln (OLMo)
+    mlp_type: str = "swiglu"            # swiglu | gelu
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    # hybrid (zamba2): attention block shared across the stack, inserted
+    # every `hybrid_attn_every` layers; the rest are Mamba2 blocks.
+    hybrid_attn_every: int = 6
+    hybrid_shared_attn: bool = True
+
+    # encoder-decoder (audio / seamless): number of encoder layers (decoder
+    # uses `num_layers`); cross-attention in every decoder block.
+    encoder_layers: int = 0
+
+    # modality frontend stubs (vlm/audio): dimensionality of precomputed
+    # patch/frame embeddings consumed via a linear projector.
+    frontend_embed_dim: int = 0
+    frontend_tokens_per_sample: int = 0
+
+    # attention implementation: "naive" materializes (b, h, s, s) scores;
+    # "chunked" is an exact flash-style online-softmax over KV chunks (the
+    # only way 32k+ sequences fit HBM); "auto" picks by sequence length.
+    attn_impl: str = "auto"
+    attn_chunk_threshold: int = 2048
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+
+    # max positions for rotary tables / cache sizing sanity checks
+    max_seq_len: int = 1 << 20
+
+    # source citation for the config (paper / model card)
+    source: str = ""
+
+    # ----- sharding hints (consumed by repro.sharding.specs) ---------------
+    # axis of attention projections sharded over the `model` mesh axis:
+    # "heads" (column parallel, default) | "embed" (row parallel; for archs
+    # whose head count does not divide the model axis, e.g. qwen2-vl 12H)
+    attn_shard: str = "heads"
+    # MoE expert weights: "ep" (experts over model axis) | "tp" (d_ff_expert
+    # over model axis; for E < mesh model size, e.g. mixtral 8E on 16 chips)
+    moe_shard: str = "ep"
+    # FL placement layout this arch requires (see DESIGN.md §2)
+    fl_layout: str = "client_parallel"  # client_parallel | client_sequential
+
+    # ----- derived helpers -------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        return self.attention.resolved_head_dim(self.d_model)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context_decode(self) -> bool:
+        """True iff decode memory is sub-linear in context (SSM state) or the
+        attention cache is windowed (sliding-window attention)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.attention.sliding_window is not None
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Sequence of per-layer block kinds for the decoder stack."""
+        kinds = []
+        for i in range(self.num_layers):
+            if self.family == "hybrid":
+                if (i + 1) % self.hybrid_attn_every == 0:
+                    kinds.append("attn")
+                else:
+                    kinds.append("ssm")
+            elif self.family == "ssm":
+                kinds.append("ssm")
+            else:
+                kinds.append("attn")
+        return tuple(kinds)
+
+    def validate(self) -> None:
+        a = self.attention
+        if self.family not in ("dense", "moe", "ssm", "hybrid", "vlm", "audio"):
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.family != "ssm":
+            if a.num_heads % a.num_kv_heads != 0:
+                raise ValueError("num_heads must be divisible by num_kv_heads")
+        if self.family == "moe" and self.moe is None:
+            raise ValueError("moe family requires MoEConfig")
+        if self.family in ("ssm", "hybrid") and self.ssm is None:
+            raise ValueError(f"{self.family} family requires SSMConfig")
+        if self.family == "audio" and self.encoder_layers <= 0:
+            raise ValueError("audio family requires encoder_layers > 0")
+        if self.family in ("vlm", "audio") and self.frontend_embed_dim <= 0:
+            raise ValueError("modality family requires frontend_embed_dim")
+
+
+def reduced_variant(cfg: ModelConfig, *, num_layers: int = 2, d_model: int = 256,
+                    max_experts: int = 4) -> ModelConfig:
+    """Smoke-test variant of the same family: ≤2 layers, d_model ≤ 512, ≤4 experts.
+
+    Keeps the family-defining features (GQA ratio, qk_norm, biases, MoE top-k,
+    SSM state, hybrid cadence, enc-dec, frontends) while shrinking dims.
+    """
+    a = cfg.attention
+    # head count must divide d_model and keep head_dim even (RoPE halves)
+    heads = 4 if a.num_heads >= 4 else 2
+    # preserve "GQA vs MHA" character
+    if a.num_kv_heads == a.num_heads:
+        kv = heads
+    else:
+        kv = max(1, heads // max(1, a.num_heads // a.num_kv_heads))
+    att = dataclasses.replace(
+        a,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=d_model // heads,
+        sliding_window=min(a.sliding_window, 128) if a.sliding_window else None,
+    )
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(
+            cfg.moe,
+            num_experts=min(max_experts, cfg.moe.num_experts),
+            top_k=min(cfg.moe.top_k, min(max_experts, cfg.moe.num_experts)),
+            d_ff_expert=d_model * 2,
+        )
+    ssm = None
+    if cfg.ssm is not None:
+        ssm = dataclasses.replace(cfg.ssm, state_dim=min(cfg.ssm.state_dim, 32),
+                                  head_dim=32, chunk_size=64)
+    enc = min(cfg.encoder_layers, 2) if cfg.encoder_layers else 0
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        num_layers=num_layers,
+        d_model=d_model,
+        d_ff=d_model * 4,
+        vocab_size=min(cfg.vocab_size, 1024),
+        attention=att,
+        moe=moe,
+        ssm=ssm,
+        hybrid_attn_every=2,
+        encoder_layers=enc,
+        frontend_embed_dim=min(cfg.frontend_embed_dim, 64) if cfg.frontend_embed_dim else 0,
+        frontend_tokens_per_sample=min(cfg.frontend_tokens_per_sample, 16)
+        if cfg.frontend_tokens_per_sample else 0,
+        max_seq_len=4096,
+    )

@@ -1,0 +1,44 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Every module in ``repro.configs`` registers one architecture (plus optional
+variants). Importing :mod:`repro.configs` populates the registry.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from repro.config.model_config import ModelConfig
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register_arch(arch_id: str):
+    """Decorator registering a zero-arg ModelConfig factory under ``arch_id``."""
+
+    def deco(fn: Callable[[], ModelConfig]):
+        if arch_id in _REGISTRY:
+            raise ValueError(f"duplicate arch id {arch_id!r}")
+        _REGISTRY[arch_id] = fn
+        return fn
+
+    return deco
+
+
+def _ensure_loaded() -> None:
+    importlib.import_module("repro.configs")
+
+
+def get_arch(arch_id: str) -> ModelConfig:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[arch_id]()
+    cfg.validate()
+    return cfg
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)

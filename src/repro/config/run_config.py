@@ -1,0 +1,50 @@
+"""Run configuration: input shapes, mesh layout, precision, remat policy."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """An assigned (seq_len, global_batch) workload."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Everything the launcher needs beyond the model + fed configs."""
+
+    shape: str = "train_4k"
+    mesh_shape: Tuple[int, ...] = (16, 16)
+    mesh_axes: Tuple[str, ...] = ("data", "model")
+    multi_pod: bool = False
+
+    remat: str = "none"                # none | full | dots (checkpoint policy)
+    scan_layers: bool = True           # lax.scan over layers vs python unroll
+    param_dtype: str = "float32"       # master copy dtype
+    compute_dtype: str = "bfloat16"
+    opt_state_dtype: str = "float32"
+
+    seed: int = 0
+    log_every: int = 10
+    checkpoint_every: int = 0          # 0 = disabled
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+
+    # decode-specific
+    decode_page_seq_shards: bool = True  # seq-sharded KV cache + LSE merge
+
+    def input_shape(self) -> InputShape:
+        return INPUT_SHAPES[self.shape]

@@ -1,0 +1,16 @@
+"""Assigned architecture configs (``--arch <id>``). Importing this package
+registers every architecture with the registry. Each module cites its
+source paper / model card."""
+from repro.configs import (  # noqa: F401
+    olmo_1b,
+    stablelm_12b,
+    qwen2_72b,
+    qwen3_32b,
+    qwen2_vl_2b,
+    mixtral_8x7b,
+    zamba2_2p7b,
+    llama4_maverick,
+    seamless_m4t,
+    mamba2_780m,
+    paper_models,
+)

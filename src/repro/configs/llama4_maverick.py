@@ -1,0 +1,33 @@
+"""Llama-4 Maverick 400B-A17B [hf:meta-llama/Llama-4-Scout-17B-16E family
+card]: MoE decoder, 128 experts top-1 + one always-on shared expert,
+early-fusion multimodal (text path modeled; the fusion frontend follows the
+VLM stub carve-out but this assignment lists the language backbone).
+
+48L, d_model 5120, 40 heads / 8 KV, expert d_ff 8192, vocab 202048.
+128 experts % 16 chips == 0 -> expert-parallel sharding. ~400B total
+parameters, ~17B active -> client_sequential layout + MoE FLOP accounting
+uses N_active (DESIGN.md roofline notes)."""
+from repro.config import AttentionConfig, MoEConfig, ModelConfig, register_arch
+
+
+@register_arch("llama4-maverick-400b-a17b")
+def llama4_maverick() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        num_layers=48,
+        d_model=5120,
+        d_ff=8192,
+        vocab_size=202048,
+        attention=AttentionConfig(num_heads=40, num_kv_heads=8,
+                                  head_dim=128,
+                                  rope_theta=500000.0),
+        moe=MoEConfig(num_experts=128, top_k=1, d_ff_expert=8192,
+                      capacity_factor=1.25, aux_loss_weight=0.01,
+                      num_shared_experts=1),
+        norm_type="rmsnorm",
+        mlp_type="swiglu",
+        moe_shard="ep",
+        fl_layout="client_sequential",
+        source="Llama 4 [hf:meta-llama/Llama-4-Scout-17B-16E model card]",
+    )

@@ -1,0 +1,29 @@
+"""Mamba2-780m [arXiv:2405.21060]: attention-free SSD (state-space duality)
+stack. 48L, d_model 1536 (d_inner 3072, 48 SSD heads of 64), state 128,
+vocab 50280.
+
+FedAdamW applicability (DESIGN.md §Arch-applicability): the paper's
+attention-specific Hessian partition classes (query/key per head, value per
+neuron) are inapplicable; SSD tensors fall back to Appendix D Algorithm 4
+per-tensor blocks refined per head where a head dimension exists
+(A_log/D/dt_bias) and per channel for conv/projections."""
+from repro.config import AttentionConfig, ModelConfig, SSMConfig, register_arch
+
+
+@register_arch("mamba2-780m")
+def mamba2_780m() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-780m",
+        family="ssm",
+        num_layers=48,
+        d_model=1536,
+        d_ff=0,                           # attention-free: no MLP blocks
+        vocab_size=50280,
+        attention=AttentionConfig(num_heads=1, num_kv_heads=1),  # unused
+        ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, chunk_size=256,
+                      conv_width=4, ngroups=1),
+        norm_type="rmsnorm",
+        tie_embeddings=True,
+        fl_layout="client_parallel",
+        source="Mamba2 / SSD [arXiv:2405.21060]",
+    )

@@ -1,0 +1,30 @@
+"""Mixtral-8x7B [arXiv:2401.04088]: sparse MoE decoder, 8 experts top-2,
+sliding-window attention (4096). 32L, d_model 4096, 32 heads / 8 KV,
+expert d_ff 14336, vocab 32000.
+
+8 experts < 16 model-axis chips -> tensor-parallel expert sharding
+(``moe_shard="tp"``: the expert F dim shards over ``model``); native SWA
+means the ``long_500k`` decode shape runs with a windowed KV cache."""
+from repro.config import AttentionConfig, MoEConfig, ModelConfig, register_arch
+
+
+@register_arch("mixtral-8x7b")
+def mixtral_8x7b() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b",
+        family="moe",
+        num_layers=32,
+        d_model=4096,
+        d_ff=14336,
+        vocab_size=32000,
+        attention=AttentionConfig(num_heads=32, num_kv_heads=8,
+                                  sliding_window=4096,
+                                  rope_theta=1000000.0),
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=14336,
+                      capacity_factor=1.25, aux_loss_weight=0.01),
+        norm_type="rmsnorm",
+        mlp_type="swiglu",
+        moe_shard="tp",
+        fl_layout="client_sequential",
+        source="Mixtral of Experts [arXiv:2401.04088]",
+    )

@@ -1,0 +1,43 @@
+"""OLMo-1B [arXiv:2402.00838]: dense decoder, non-parametric LayerNorm.
+
+16L, d_model 2048, 16 heads (MHA: kv=16), d_ff 8192, vocab 50304.
+The ``olmo-1b-swa`` variant adds a 4096-token sliding window so at least
+one *dense* architecture exercises the ``long_500k`` decode path
+(beyond-paper; DESIGN.md §4 shape-skip table).
+"""
+import dataclasses
+
+from repro.config import AttentionConfig, ModelConfig, register_arch
+
+
+def _base() -> ModelConfig:
+    return ModelConfig(
+        name="olmo-1b",
+        family="dense",
+        num_layers=16,
+        d_model=2048,
+        d_ff=8192,
+        vocab_size=50304,
+        attention=AttentionConfig(num_heads=16, num_kv_heads=16,
+                                  rope_theta=10000.0),
+        norm_type="nonparam_ln",
+        mlp_type="swiglu",
+        tie_embeddings=True,          # OLMo-1B ties embeddings
+        fl_layout="client_parallel",
+        source="OLMo: Accelerating the Science of LMs [arXiv:2402.00838]",
+    )
+
+
+@register_arch("olmo-1b")
+def olmo_1b() -> ModelConfig:
+    return _base()
+
+
+@register_arch("olmo-1b-swa")
+def olmo_1b_swa() -> ModelConfig:
+    cfg = _base()
+    return dataclasses.replace(
+        cfg, name="olmo-1b-swa",
+        attention=dataclasses.replace(cfg.attention, sliding_window=4096),
+        source=cfg.source + " + sliding-window variant (this work)",
+    )

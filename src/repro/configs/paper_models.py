@@ -1,0 +1,45 @@
+"""The paper's own experimental models, as registry entries.
+
+``vit-tiny-fl``   the paper's ViT-Tiny-on-CIFAR-100 setting, mapped to the
+                  synthetic class_lm task (DESIGN.md §6 assumption #1): a
+                  6-layer, d=192, 3-head dense transformer matching the
+                  paper's Appendix C ViT-Tiny dims.
+``roberta-base-fl`` proxy for the paper's RoBERTa-Base+LoRA GLUE setting:
+                  12L, d=768, 12 heads, GELU MLP, LayerNorm (RoPE instead
+                  of learned positions — noted deviation).
+"""
+from repro.config import AttentionConfig, ModelConfig, register_arch
+
+
+@register_arch("vit-tiny-fl")
+def vit_tiny_fl() -> ModelConfig:
+    return ModelConfig(
+        name="vit-tiny-fl",
+        family="dense",
+        num_layers=6,
+        d_model=192,
+        d_ff=768,
+        vocab_size=128,                 # synthetic class_lm vocab
+        attention=AttentionConfig(num_heads=3, num_kv_heads=3),
+        norm_type="layernorm",
+        mlp_type="gelu",
+        fl_layout="client_parallel",
+        source="paper Appendix C ViT-Tiny (synthetic-task analogue)",
+    )
+
+
+@register_arch("roberta-base-fl")
+def roberta_base_fl() -> ModelConfig:
+    return ModelConfig(
+        name="roberta-base-fl",
+        family="dense",
+        num_layers=12,
+        d_model=768,
+        d_ff=3072,
+        vocab_size=50304,
+        attention=AttentionConfig(num_heads=12, num_kv_heads=12),
+        norm_type="layernorm",
+        mlp_type="gelu",
+        fl_layout="client_parallel",
+        source="paper Appendix C RoBERTa-Base (+LoRA) proxy",
+    )

@@ -1,0 +1,26 @@
+"""Qwen2-72B [arXiv:2407.10671]: dense decoder, GQA with QKV bias.
+
+80L, d_model 8192, 64 heads / 8 KV (head_dim 128), d_ff 29568,
+vocab 152064. AdamW state for 72B params cannot fit the client_parallel
+layout's 16-chip replicas -> client_sequential (FSDPxTP; DESIGN.md §2).
+"""
+from repro.config import AttentionConfig, ModelConfig, register_arch
+
+
+@register_arch("qwen2-72b")
+def qwen2_72b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-72b",
+        family="dense",
+        num_layers=80,
+        d_model=8192,
+        d_ff=29568,
+        vocab_size=152064,
+        attention=AttentionConfig(num_heads=64, num_kv_heads=8,
+                                  head_dim=128, qkv_bias=True,
+                                  rope_theta=1000000.0),
+        norm_type="rmsnorm",
+        mlp_type="swiglu",
+        fl_layout="client_sequential",
+        source="Qwen2 Technical Report [arXiv:2407.10671]",
+    )

@@ -1,0 +1,32 @@
+"""Qwen2-VL-2B [arXiv:2409.12191]: VLM language tower with M-RoPE and
+dynamic-resolution patch input. 28L, d_model 1536, 12 heads / 2 KV
+(head_dim 128), d_ff 8960, vocab 151936.
+
+The vision encoder is the allowed stub: ``input_specs`` provides
+precomputed patch embeddings (1280-d, the ViT output dim) consumed through
+a linear projector; the language tower interleaves them with text tokens
+and rotates positions with the (t, h, w)-split M-RoPE."""
+from repro.config import AttentionConfig, ModelConfig, register_arch
+
+
+@register_arch("qwen2-vl-2b")
+def qwen2_vl_2b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b",
+        family="vlm",
+        num_layers=28,
+        d_model=1536,
+        d_ff=8960,
+        vocab_size=151936,
+        attention=AttentionConfig(num_heads=12, num_kv_heads=2,
+                                  head_dim=128, qkv_bias=True,
+                                  use_mrope=True,
+                                  mrope_sections=(16, 24, 24),
+                                  rope_theta=1000000.0),
+        norm_type="rmsnorm",
+        mlp_type="swiglu",
+        frontend_embed_dim=1280,          # ViT patch-embedding dim (stub)
+        frontend_tokens_per_sample=64,    # one 8x8 patch grid per sample
+        fl_layout="client_parallel",
+        source="Qwen2-VL [arXiv:2409.12191]",
+    )

@@ -1,0 +1,23 @@
+"""Qwen3-32B [hf:Qwen/Qwen3-8B card, scaled per assignment]: dense decoder,
+GQA + per-head q/k RMSNorm (qk_norm). 64L, d_model 5120, 64 heads / 8 KV
+(head_dim 128 as in the Qwen3 family), d_ff 25600, vocab 151936."""
+from repro.config import AttentionConfig, ModelConfig, register_arch
+
+
+@register_arch("qwen3-32b")
+def qwen3_32b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-32b",
+        family="dense",
+        num_layers=64,
+        d_model=5120,
+        d_ff=25600,
+        vocab_size=151936,
+        attention=AttentionConfig(num_heads=64, num_kv_heads=8,
+                                  head_dim=128, qk_norm=True,
+                                  rope_theta=1000000.0),
+        norm_type="rmsnorm",
+        mlp_type="swiglu",
+        fl_layout="client_sequential",
+        source="Qwen3 [hf:Qwen/Qwen3-8B model card]",
+    )

@@ -1,0 +1,31 @@
+"""SeamlessM4T-Large-v2 [arXiv:2308.11596]: encoder-decoder speech/text
+model. 24 encoder + 24 decoder layers, d_model 1024, 16 heads (MHA),
+d_ff 8192, vocab 256206.
+
+The speech frontend (mel-spectrogram + conformer conv feature extractor)
+is the allowed stub: ``input_specs`` provides precomputed 1024-d frame
+embeddings; we implement the transformer encoder over those frames and the
+causal decoder with per-layer cross-attention. Decode shapes run the
+*decoder* step against a fixed encoder memory (DESIGN.md §4)."""
+from repro.config import AttentionConfig, ModelConfig, register_arch
+
+
+@register_arch("seamless-m4t-large-v2")
+def seamless_m4t() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2",
+        family="audio",
+        num_layers=24,
+        encoder_layers=24,
+        d_model=1024,
+        d_ff=8192,
+        vocab_size=256206,
+        attention=AttentionConfig(num_heads=16, num_kv_heads=16,
+                                  rope_theta=10000.0),
+        norm_type="layernorm",
+        mlp_type="gelu",
+        frontend_embed_dim=1024,           # conformer frame embedding (stub)
+        frontend_tokens_per_sample=160,    # ~10 s of 16 Hz frames
+        fl_layout="client_parallel",
+        source="SeamlessM4T [arXiv:2308.11596]",
+    )

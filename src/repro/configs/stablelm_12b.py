@@ -1,0 +1,22 @@
+"""StableLM-2-12B [hf:stabilityai/stablelm-2-1_6b family card]: dense
+decoder with GQA. 40L, d_model 5120, 32 heads / 8 KV, d_ff 13824,
+vocab 100352."""
+from repro.config import AttentionConfig, ModelConfig, register_arch
+
+
+@register_arch("stablelm-12b")
+def stablelm_12b() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-12b",
+        family="dense",
+        num_layers=40,
+        d_model=5120,
+        d_ff=13824,
+        vocab_size=100352,
+        attention=AttentionConfig(num_heads=32, num_kv_heads=8,
+                                  rope_theta=10000.0),
+        norm_type="layernorm",
+        mlp_type="swiglu",
+        fl_layout="client_parallel",
+        source="StableLM 2 [hf:stabilityai/stablelm-2-1_6b model card]",
+    )

@@ -1,0 +1,32 @@
+"""Zamba2-2.7B [arXiv:2411.15242]: hybrid Mamba2 backbone with a *shared*
+attention block inserted periodically. 54L, d_model 2560, Mamba2 state 64;
+the shared attention block uses 32 heads (MHA), d_ff 10240.
+
+TPU/long-context adaptation (DESIGN.md §4): the shared attention block gets
+a 4096 sliding window so ``long_500k`` decode keeps O(window) memory —
+Zamba2 itself uses full attention at 4k train lengths; the window is a
+beyond-paper serving adaptation, recorded in EXPERIMENTS.md."""
+from repro.config import AttentionConfig, ModelConfig, SSMConfig, register_arch
+
+
+@register_arch("zamba2-2.7b")
+def zamba2_2p7b() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-2.7b",
+        family="hybrid",
+        num_layers=54,
+        d_model=2560,
+        d_ff=10240,
+        vocab_size=32000,
+        attention=AttentionConfig(num_heads=32, num_kv_heads=32,
+                                  sliding_window=4096,
+                                  rope_theta=10000.0),
+        ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, chunk_size=256,
+                      conv_width=4, ngroups=1),
+        hybrid_attn_every=6,
+        hybrid_shared_attn=True,
+        norm_type="rmsnorm",
+        mlp_type="swiglu",
+        fl_layout="client_parallel",
+        source="Zamba2 [arXiv:2411.15242]",
+    )

@@ -1,0 +1,27 @@
+"""FedAdamW core: Hessian-block partitioning, block-mean aggregation,
+the FedAdamW algorithm and its baselines, and the federated round engine."""
+from repro.core.partition import (
+    LeafBlockSpec,
+    build_block_specs,
+    block_means,
+    broadcast_means,
+    tree_block_means,
+    tree_broadcast_means,
+    total_blocks,
+)
+from repro.core.fedadamw import get_algorithm, FedAlgorithm, upload_bytes
+from repro.core.rounds import (
+    make_round_fn,
+    make_local_phase,
+    init_server_state,
+    build_fed_state,
+    cosine_lr_scale,
+)
+
+__all__ = [
+    "LeafBlockSpec", "build_block_specs", "block_means", "broadcast_means",
+    "tree_block_means", "tree_broadcast_means", "total_blocks",
+    "get_algorithm", "FedAlgorithm", "upload_bytes",
+    "make_round_fn", "make_local_phase", "init_server_state",
+    "build_fed_state", "cosine_lr_scale",
+]

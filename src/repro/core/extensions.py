@@ -1,0 +1,152 @@
+"""Beyond-paper extensions (the paper's conclusion explicitly points at
+LAMB/Lion: "We believe FedAdamW opens a new direction for adapting modern
+optimizers to FL such as LAMB or Lion").
+
+``fedlamb``  FedAdamW's machinery (block-mean v aggregation, global-update
+             correction, decoupled decay) with a LAMB layer-wise trust
+             ratio on the final step: x <- x - eta * r * u with
+             r = ||x|| / ||u|| per tensor.
+``fedlion``  Lion as the local optimizer: sign updates, one momentum, no
+             second moment — so there is nothing to block-mean-aggregate;
+             it keeps the Delta_G correction and decoupled decay. Its
+             upload is delta only (1x communication).
+
+Also here: ``int8`` fake-quantized uploads (symmetric per-tensor scale) —
+a communication-efficiency knob composable with every algorithm; the
+math uses the dequantized values (quantization error enters the average
+exactly as it would on the wire) while ``wire_bytes`` reports the true
+transfer size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig
+from repro.core import partition
+from repro.core.fedadamw import (FedAlgorithm, _adamw_moments,
+                                 _bias_corrections, _delta_g_from_mean_delta,
+                                 _fedadamw_init_client, _fedadamw_init_server,
+                                 _fedadamw_server_update, _fedadamw_upload,
+                                 _plain_delta_server)
+from repro.core.tree_util import tree_zeros_like
+
+
+# ---------------------------------------------------------------------------
+# FedLAMB
+# ---------------------------------------------------------------------------
+
+def _lamb_local_step(params, grads, cstate, sstate, fed: FedConfig,
+                     lr_scale):
+    k = cstate["k"] + 1
+    t = sstate["t"] + k
+    c1, c2 = _bias_corrections(k, t, fed)
+    m, v = _adamw_moments(grads, cstate["m"], cstate["v"], fed)
+    lr = fed.lr * lr_scale
+
+    def upd(x, mi, vi, dg):
+        u = (mi / c1) / (jnp.sqrt(vi / c2) + fed.eps) \
+            + fed.alpha * dg.astype(jnp.float32) \
+            + fed.weight_decay * x.astype(jnp.float32)
+        # LAMB trust ratio, per tensor: ||x|| / ||u|| clipped to [0, 10]
+        xn = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+        un = jnp.sqrt(jnp.sum(jnp.square(u)))
+        r = jnp.where((xn > 0) & (un > 0),
+                      jnp.clip(xn / jnp.maximum(un, 1e-12), 0.0, 10.0), 1.0)
+        return (x.astype(jnp.float32) - lr * r * u).astype(x.dtype)
+
+    params = jax.tree.map(upd, params, m, v, sstate["delta_g"])
+    return params, {"m": m, "v": v, "k": k}
+
+
+def fedlamb() -> FedAlgorithm:
+    return FedAlgorithm(
+        "fedlamb", _fedadamw_init_server, _fedadamw_init_client,
+        _lamb_local_step, _fedadamw_upload, _fedadamw_server_update)
+
+
+# ---------------------------------------------------------------------------
+# FedLion
+# ---------------------------------------------------------------------------
+
+def fedlion() -> FedAlgorithm:
+    def init_server(params, specs, fed):
+        return {"delta_g": tree_zeros_like(params, jnp.float32),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def init_client(params, sstate, fed, specs=None):
+        return {"m": tree_zeros_like(params, jnp.float32),
+                "k": jnp.zeros((), jnp.int32)}
+
+    def local_step(params, grads, cstate, sstate, fed, lr_scale):
+        b1, b2 = 0.9, 0.99  # Lion's standard betas
+        lr = fed.lr * lr_scale
+
+        def upd(x, mi, g, dg):
+            g32 = g.astype(jnp.float32)
+            step = jnp.sign(b1 * mi + (1 - b1) * g32) \
+                + fed.alpha * dg.astype(jnp.float32) \
+                + fed.weight_decay * x.astype(jnp.float32)
+            return (x.astype(jnp.float32) - lr * step).astype(x.dtype)
+
+        new_params = jax.tree.map(upd, params, cstate["m"], grads,
+                                  sstate["delta_g"])
+        m = jax.tree.map(
+            lambda mi, g: b2 * mi + (1 - b2) * g.astype(jnp.float32),
+            cstate["m"], grads)
+        return new_params, {"m": m, "k": cstate["k"] + 1}
+
+    def upload(delta, cstate, specs, fed):
+        return {"delta": delta}
+
+    def server_update(params, sstate, mean_up, specs, fed):
+        new_params = _plain_delta_server(params, mean_up["delta"], fed)
+        return new_params, {
+            "delta_g": _delta_g_from_mean_delta(mean_up["delta"], fed),
+            "t": sstate["t"] + fed.local_steps}
+
+    return FedAlgorithm("fedlion", init_server, init_client, local_step,
+                        upload, server_update)
+
+
+# ---------------------------------------------------------------------------
+# int8 upload quantization (composable wrapper)
+# ---------------------------------------------------------------------------
+
+def fake_quant_int8(x: jax.Array) -> jax.Array:
+    """Symmetric per-tensor int8 fake quantization (quantize->dequantize).
+    The averaging then sees exactly the values the wire would carry."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127)
+    return (q * scale).astype(x.dtype)
+
+
+def quantized(alg: FedAlgorithm) -> FedAlgorithm:
+    """Wrap any algorithm so its delta upload is int8-quantized."""
+    base_upload = alg.upload
+
+    def upload(delta, cstate, specs, fed):
+        up = base_upload(delta, cstate, specs, fed)
+        if "delta" in up:
+            up = dict(up)
+            up["delta"] = jax.tree.map(fake_quant_int8, up["delta"])
+        return up
+
+    return FedAlgorithm(alg.name + "+int8", alg.init_server,
+                        alg.init_client, alg.local_step, upload,
+                        alg.server_update, alg.needs_client_ids)
+
+
+def wire_bytes(upload_tree, *, delta_int8: bool = False) -> int:
+    """True transfer size: int8 deltas count 1 byte/elem + 4 for the
+    scale; everything else its dtype size."""
+    total = 0
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(upload_tree)[0]:
+        names = [getattr(k, "key", str(k)) for k in kp]
+        if delta_int8 and names and names[0] == "delta":
+            total += leaf.size + 4
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total

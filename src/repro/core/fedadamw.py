@@ -1,0 +1,524 @@
+"""FedAdamW (paper Algorithm 2) and the seven baselines it is compared to.
+
+Every algorithm is expressed through one uniform interface so the round
+engine (:mod:`repro.core.rounds`) can run any of them under either FL
+placement layout:
+
+    init_server(params, specs, fed)                  -> server_state
+    init_client(params, server_state, fed)           -> client_state
+    local_step(params, grads, cstate, sstate, fed,
+               lr_scale)                             -> (params, cstate)
+    upload(delta, cstate, specs, fed)                -> upload pytree
+    server_update(params, sstate, mean_upload,
+                  specs, fed)                        -> (params, sstate)
+
+Conventions
+-----------
+* ``delta`` is the *raw* parameter displacement ``x_i^{r,K} - x_i^{r,0}``
+  (paper Algorithms 1-3, the quantity communicated to the server).
+* The server applies ``x^{r+1} = x^r + gamma * mean_i(delta_i)`` — with the
+  paper's gamma = 1.0 this is exactly FedAvg-style delta averaging
+  (Algorithm 1 line 15 / Algorithm 2 server block).
+* The broadcast global-update estimate is
+  ``Delta_G^r = -1/(K*eta) * mean_i(delta_i)`` (Algorithm 2/3), i.e. an
+  *ascent* direction estimate; the local update *adds* ``alpha * Delta_G``
+  inside the step so the client descends along the global direction.
+* Weight decay: the paper writes ``- eta*(... - lambda*x)`` which would
+  *grow* the weights; every AdamW implementation (and the paper's released
+  code) decays them. We implement standard decoupled decay
+  ``x <- x - eta*(m_hat/(sqrt(v_hat)+eps) + alpha*Delta_G + lambda*x)``
+  and record the sign typo in DESIGN.md.
+* Bias correction follows Algorithm 2 exactly: ``m_hat = m/(1-beta1^k)``
+  with the *local* step index k (m is zeroed each round), and
+  ``v_hat = v/(1-beta2^t)`` with the *global* time step t carried across
+  rounds (v is warm-started from the aggregated block means).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig
+from repro.core import partition
+from repro.core.tree_util import tree_scale, tree_sub, tree_zeros_like
+
+Array = jax.Array
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAlgorithm:
+    name: str
+    init_server: Callable[..., Dict[str, Tree]]
+    init_client: Callable[..., Dict[str, Tree]]
+    local_step: Callable[..., tuple]
+    upload: Callable[..., Dict[str, Tree]]
+    server_update: Callable[..., tuple]
+    # scaffold keeps a per-client control variate table on the server and
+    # therefore needs the sampled client ids inside the round
+    needs_client_ids: bool = False
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _adamw_moments(grads, m, v, fed: FedConfig):
+    b1, b2 = fed.beta1, fed.beta2
+    m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(mi.dtype), m, grads)
+    v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2)
+                     * jnp.square(g.astype(vi.dtype)), v, grads)
+    return m, v
+
+
+def _bias_corrections(k: Array, t: Array, fed: FedConfig):
+    kf = k.astype(jnp.float32)
+    tf = t.astype(jnp.float32)
+    c1 = 1.0 - jnp.power(fed.beta1, kf)
+    c2 = 1.0 - jnp.power(fed.beta2, tf if fed.global_t_bias_correction else kf)
+    return c1, c2
+
+
+def _fused_or_jnp_adamw_apply(params, m, v, delta_g, fed: FedConfig, *,
+                              c1: Array, c2: Array, lr: Array, alpha: float,
+                              lam: float):
+    """x <- x - lr*( (m/c1)/(sqrt(v/c2)+eps) + alpha*Delta_G + lam*x )."""
+    if fed.use_pallas_update:
+        from repro.kernels.fused_adamw import ops as fused_ops
+        return fused_ops.tree_fused_adamw_apply(
+            params, m, v, delta_g, c1=c1, c2=c2, lr=lr, alpha=alpha,
+            lam=lam, eps=fed.eps)
+
+    def upd(x, mi, vi, dg):
+        mhat = mi / c1
+        vhat = vi / c2
+        step = mhat / (jnp.sqrt(vhat) + fed.eps)
+        step = step + alpha * dg.astype(step.dtype) + lam * x.astype(step.dtype)
+        return (x.astype(jnp.float32) - lr * step).astype(x.dtype)
+
+    return jax.tree.map(upd, params, m, v, delta_g)
+
+
+def _plain_delta_server(params, mean_delta, fed: FedConfig):
+    return jax.tree.map(
+        lambda x, d: (x.astype(jnp.float32)
+                      + fed.server_lr * d.astype(jnp.float32)).astype(x.dtype),
+        params, mean_delta)
+
+
+def _delta_g_from_mean_delta(mean_delta, fed: FedConfig):
+    scale = -1.0 / (fed.local_steps * fed.lr)
+    return tree_scale(mean_delta, scale)
+
+
+# ---------------------------------------------------------------------------
+# FedAdamW (Algorithm 2) — ours
+# ---------------------------------------------------------------------------
+
+def _fedadamw_init_server(params, specs, fed: FedConfig):
+    state = {
+        "delta_g": tree_zeros_like(params, jnp.float32),
+        "t": jnp.zeros((), jnp.int32),
+    }
+    if fed.v_aggregation == "mean_v":
+        state["v_bar"] = jax.tree.map(
+            lambda s: jnp.zeros((s.n_blocks,), jnp.float32), specs,
+            is_leaf=lambda x: isinstance(x, partition.LeafBlockSpec))
+    elif fed.v_aggregation in ("full_v", "full_vm"):
+        state["v_bar"] = tree_zeros_like(params, jnp.float32)
+        if fed.v_aggregation == "full_vm":
+            state["m_bar"] = tree_zeros_like(params, jnp.float32)
+    return state
+
+
+def _fedadamw_init_client(params, sstate, fed: FedConfig, specs=None):
+    if fed.v_aggregation == "mean_v":
+        v0 = partition.tree_broadcast_means(sstate["v_bar"], specs)
+    elif fed.v_aggregation in ("full_v", "full_vm"):
+        v0 = sstate["v_bar"]
+    else:
+        v0 = tree_zeros_like(params, jnp.float32)
+    m0 = (sstate["m_bar"] if fed.v_aggregation == "full_vm"
+          else tree_zeros_like(params, jnp.float32))
+    return {"m": m0, "v": v0, "k": jnp.zeros((), jnp.int32)}
+
+
+def _fedadamw_local_step(params, grads, cstate, sstate, fed: FedConfig,
+                         lr_scale):
+    k = cstate["k"] + 1
+    t = sstate["t"] + k
+    c1, c2 = _bias_corrections(k, t, fed)
+    lam = fed.weight_decay
+    if not fed.decoupled_wd:
+        # ablation A3: Adam-style coupled L2 enters the gradient (and the
+        # moment estimates) instead of the decoupled decay term
+        grads = jax.tree.map(lambda g, x: g + lam * x.astype(g.dtype),
+                             grads, params)
+        lam = 0.0
+    if fed.use_pallas_update:
+        # fully fused path: moments + step in one VMEM pass (DESIGN.md §5)
+        from repro.kernels.fused_adamw import ops as fused_ops
+        params, m, v = fused_ops.tree_fused_adamw_step(
+            params, grads, cstate["m"], cstate["v"], sstate["delta_g"],
+            beta1=fed.beta1, beta2=fed.beta2, c1=c1, c2=c2,
+            lr=fed.lr * lr_scale, alpha=fed.alpha, lam=lam,
+            eps=fed.eps)
+    else:
+        m, v = _adamw_moments(grads, cstate["m"], cstate["v"], fed)
+        params = _fused_or_jnp_adamw_apply(
+            params, m, v, sstate["delta_g"], fed, c1=c1, c2=c2,
+            lr=fed.lr * lr_scale, alpha=fed.alpha, lam=lam)
+    return params, {"m": m, "v": v, "k": k}
+
+
+def _fedadamw_upload(delta, cstate, specs, fed: FedConfig):
+    up = {"delta": delta}
+    if fed.v_aggregation == "mean_v":
+        up["v_mean"] = partition.tree_block_means(cstate["v"], specs)
+    elif fed.v_aggregation in ("full_v", "full_vm"):
+        up["v_full"] = cstate["v"]
+        if fed.v_aggregation == "full_vm":
+            up["m_full"] = cstate["m"]
+    return up
+
+
+def _fedadamw_server_update(params, sstate, mean_up, specs, fed: FedConfig):
+    new_params = _plain_delta_server(params, mean_up["delta"], fed)
+    new_state = dict(sstate)
+    new_state["delta_g"] = _delta_g_from_mean_delta(mean_up["delta"], fed)
+    new_state["t"] = sstate["t"] + fed.local_steps
+    if fed.v_aggregation == "mean_v":
+        new_state["v_bar"] = mean_up["v_mean"]
+    elif fed.v_aggregation in ("full_v", "full_vm"):
+        new_state["v_bar"] = mean_up["v_full"]
+        if fed.v_aggregation == "full_vm":
+            new_state["m_bar"] = mean_up["m_full"]
+    return new_params, new_state
+
+
+# ---------------------------------------------------------------------------
+# Local AdamW / Local Adam (per-round from-scratch moments, no correction)
+# ---------------------------------------------------------------------------
+
+def _local_adam_like(name: str, decoupled: bool) -> FedAlgorithm:
+    def init_server(params, specs, fed):
+        return {"t": jnp.zeros((), jnp.int32)}
+
+    def init_client(params, sstate, fed, specs=None):
+        return {"m": tree_zeros_like(params, jnp.float32),
+                "v": tree_zeros_like(params, jnp.float32),
+                "k": jnp.zeros((), jnp.int32)}
+
+    def local_step(params, grads, cstate, sstate, fed, lr_scale):
+        k = cstate["k"] + 1
+        lam = fed.weight_decay
+        if not decoupled:
+            # Adam with coupled L2: decay enters the gradient (and thus m, v)
+            grads = jax.tree.map(
+                lambda g, x: g + lam * x.astype(g.dtype), grads, params)
+        m, v = _adamw_moments(grads, cstate["m"], cstate["v"], fed)
+        kf = k.astype(jnp.float32)
+        c1 = 1.0 - jnp.power(fed.beta1, kf)
+        c2 = 1.0 - jnp.power(fed.beta2, kf)
+        zeros = tree_zeros_like(params, jnp.float32)
+        params = _fused_or_jnp_adamw_apply(
+            params, m, v, zeros, fed, c1=c1, c2=c2, lr=fed.lr * lr_scale,
+            alpha=0.0, lam=(lam if decoupled else 0.0))
+        return params, {"m": m, "v": v, "k": k}
+
+    def upload(delta, cstate, specs, fed):
+        return {"delta": delta}
+
+    def server_update(params, sstate, mean_up, specs, fed):
+        return _plain_delta_server(params, mean_up["delta"], fed), sstate
+
+    return FedAlgorithm(name, init_server, init_client, local_step, upload,
+                        server_update)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg (Local SGD)
+# ---------------------------------------------------------------------------
+
+def _fedavg() -> FedAlgorithm:
+    def init_server(params, specs, fed):
+        return {"t": jnp.zeros((), jnp.int32)}
+
+    def init_client(params, sstate, fed, specs=None):
+        return {"k": jnp.zeros((), jnp.int32)}
+
+    def local_step(params, grads, cstate, sstate, fed, lr_scale):
+        lr = fed.lr * lr_scale
+        params = jax.tree.map(
+            lambda x, g: (x.astype(jnp.float32)
+                          - lr * (g.astype(jnp.float32)
+                                  + fed.weight_decay * x.astype(jnp.float32))
+                          ).astype(x.dtype),
+            params, grads)
+        return params, {"k": cstate["k"] + 1}
+
+    def upload(delta, cstate, specs, fed):
+        return {"delta": delta}
+
+    def server_update(params, sstate, mean_up, specs, fed):
+        return _plain_delta_server(params, mean_up["delta"], fed), sstate
+
+    return FedAlgorithm("fedavg", init_server, init_client, local_step,
+                        upload, server_update)
+
+
+# ---------------------------------------------------------------------------
+# SCAFFOLD (control variates; Karimireddy et al. 2020, Option II)
+# ---------------------------------------------------------------------------
+
+def _scaffold() -> FedAlgorithm:
+    def init_server(params, specs, fed):
+        return {
+            "c": tree_zeros_like(params, jnp.float32),
+            # per-client control variates, indexed by client id
+            "c_all": jax.tree.map(
+                lambda x: jnp.zeros((fed.num_clients,) + x.shape, jnp.float32),
+                params),
+        }
+
+    def init_client(params, sstate, fed, specs=None, client_id=None):
+        ci = jax.tree.map(lambda c: c[client_id], sstate["c_all"])
+        return {"k": jnp.zeros((), jnp.int32), "c_i": ci}
+
+    def local_step(params, grads, cstate, sstate, fed, lr_scale):
+        lr = fed.lr * lr_scale
+        params = jax.tree.map(
+            lambda x, g, ci, c: (x.astype(jnp.float32)
+                                 - lr * (g.astype(jnp.float32) - ci + c
+                                         + fed.weight_decay
+                                         * x.astype(jnp.float32))
+                                 ).astype(x.dtype),
+            params, grads, cstate["c_i"], sstate["c"])
+        return params, {"k": cstate["k"] + 1, "c_i": cstate["c_i"]}
+
+    def upload(delta, cstate, specs, fed):
+        # Option II: c_i+ = c_i - c + (x^r - x^{r,K})/(K*eta)
+        #          = c_i - c - delta/(K*eta)   (computed at the server side
+        # needs c, so we upload the -delta/(K*eta) part plus old c_i)
+        inv = -1.0 / (fed.local_steps * fed.lr)
+        return {"delta": delta,
+                "c_new_minus_c": jax.tree.map(
+                    lambda ci, d: ci + inv * d.astype(jnp.float32),
+                    cstate["c_i"], delta)}
+
+    def server_update(params, sstate, mean_up, specs, fed,
+                      per_client=None, client_ids=None):
+        new_params = _plain_delta_server(params, mean_up["delta"], fed)
+        new_state = dict(sstate)
+        if per_client is not None and client_ids is not None:
+            # c_i+ = (c_i - delta/(K eta)) - c  for the sampled clients
+            c_new = jax.tree.map(
+                lambda u, c: u - c[None],
+                per_client["c_new_minus_c"], sstate["c"])
+            c_all = jax.tree.map(
+                lambda table, upd: table.at[client_ids].set(upd),
+                sstate["c_all"], c_new)
+            # c += S/N * mean_i(c_i+ - c_i)
+            frac = fed.clients_per_round / fed.num_clients
+            dc = jax.tree.map(
+                lambda upd, table: (upd - table[client_ids]).mean(0),
+                c_new, sstate["c_all"])
+            new_state["c"] = jax.tree.map(
+                lambda c, d: c + frac * d, sstate["c"], dc)
+            new_state["c_all"] = c_all
+        return new_params, new_state
+
+    return FedAlgorithm("scaffold", init_server, init_client, local_step,
+                        upload, server_update, needs_client_ids=True)
+
+
+# ---------------------------------------------------------------------------
+# FedCM (client-level momentum; Xu et al. 2021)
+# ---------------------------------------------------------------------------
+
+def _fedcm() -> FedAlgorithm:
+    def init_server(params, specs, fed):
+        return {"momentum": tree_zeros_like(params, jnp.float32)}
+
+    def init_client(params, sstate, fed, specs=None):
+        return {"k": jnp.zeros((), jnp.int32)}
+
+    def local_step(params, grads, cstate, sstate, fed, lr_scale):
+        lr = fed.lr * lr_scale
+        a = fed.fedcm_alpha
+        params = jax.tree.map(
+            lambda x, g, mo: (x.astype(jnp.float32)
+                              - lr * (a * g.astype(jnp.float32)
+                                      + (1 - a) * mo
+                                      + fed.weight_decay
+                                      * x.astype(jnp.float32))
+                              ).astype(x.dtype),
+            params, grads, sstate["momentum"])
+        return params, {"k": cstate["k"] + 1}
+
+    def upload(delta, cstate, specs, fed):
+        return {"delta": delta}
+
+    def server_update(params, sstate, mean_up, specs, fed):
+        new_params = _plain_delta_server(params, mean_up["delta"], fed)
+        # momentum = -mean_delta / (K * eta): descent direction estimate
+        mom = tree_scale(mean_up["delta"], -1.0 / (fed.local_steps * fed.lr))
+        return new_params, {"momentum": mom}
+
+    return FedAlgorithm("fedcm", init_server, init_client, local_step,
+                        upload, server_update)
+
+
+# ---------------------------------------------------------------------------
+# FedAdam (FedOpt: local SGD + server-side Adam; Reddi et al. 2020)
+# ---------------------------------------------------------------------------
+
+def _fedadam() -> FedAlgorithm:
+    def init_server(params, specs, fed):
+        return {"server_m": tree_zeros_like(params, jnp.float32),
+                "server_v": tree_zeros_like(params, jnp.float32),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def init_client(params, sstate, fed, specs=None):
+        return {"k": jnp.zeros((), jnp.int32)}
+
+    def local_step(params, grads, cstate, sstate, fed, lr_scale):
+        lr = fed.lr * lr_scale
+        params = jax.tree.map(
+            lambda x, g: (x.astype(jnp.float32)
+                          - lr * (g.astype(jnp.float32)
+                                  + fed.weight_decay * x.astype(jnp.float32))
+                          ).astype(x.dtype),
+            params, grads)
+        return params, {"k": cstate["k"] + 1}
+
+    def upload(delta, cstate, specs, fed):
+        return {"delta": delta}
+
+    def server_update(params, sstate, mean_up, specs, fed):
+        b1, b2 = fed.beta1, fed.beta2
+        # server pseudo-gradient = mean delta (ascent direction toward avg)
+        m = jax.tree.map(lambda mo, d: b1 * mo + (1 - b1) * d.astype(jnp.float32),
+                         sstate["server_m"], mean_up["delta"])
+        v = jax.tree.map(lambda vo, d: b2 * vo + (1 - b2)
+                         * jnp.square(d.astype(jnp.float32)),
+                         sstate["server_v"], mean_up["delta"])
+        t = sstate["t"] + 1
+        tf = t.astype(jnp.float32)
+        c1 = 1.0 - jnp.power(b1, tf)
+        c2 = 1.0 - jnp.power(b2, tf)
+        new_params = jax.tree.map(
+            lambda x, mi, vi: (x.astype(jnp.float32)
+                               + fed.fedadam_server_lr * (mi / c1)
+                               / (jnp.sqrt(vi / c2) + fed.fedadam_tau)
+                               ).astype(x.dtype),
+            params, m, v)
+        return new_params, {"server_m": m, "server_v": v, "t": t}
+
+    return FedAlgorithm("fedadam", init_server, init_client, local_step,
+                        upload, server_update)
+
+
+# ---------------------------------------------------------------------------
+# FedLADA (local adaptive amended optimizer; Sun et al. 2023)
+# Local Adam mixed with the global update estimate; aggregates the FULL
+# second moment (the 2x-communication baseline of paper Table 10).
+# ---------------------------------------------------------------------------
+
+def _fedlada() -> FedAlgorithm:
+    def init_server(params, specs, fed):
+        return {"delta_g": tree_zeros_like(params, jnp.float32),
+                "v_bar": tree_zeros_like(params, jnp.float32),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def init_client(params, sstate, fed, specs=None):
+        return {"m": tree_zeros_like(params, jnp.float32),
+                "v": sstate["v_bar"], "k": jnp.zeros((), jnp.int32)}
+
+    def local_step(params, grads, cstate, sstate, fed, lr_scale):
+        # coupled L2 (Adam-style), amended update:
+        #   x <- x - eta*( a * m_hat/(sqrt(v_hat)+eps) + (1-a) * Delta_G )
+        lam = fed.weight_decay
+        grads = jax.tree.map(lambda g, x: g + lam * x.astype(g.dtype),
+                             grads, params)
+        k = cstate["k"] + 1
+        t = sstate["t"] + k
+        m, v = _adamw_moments(grads, cstate["m"], cstate["v"], fed)
+        c1, c2 = _bias_corrections(k, t, fed)
+        a = fed.fedlada_alpha
+        lr = fed.lr * lr_scale
+
+        def upd(x, mi, vi, dg):
+            step = a * (mi / c1) / (jnp.sqrt(vi / c2) + fed.eps) + (1 - a) * dg
+            return (x.astype(jnp.float32) - lr * step).astype(x.dtype)
+
+        params = jax.tree.map(upd, params, m, v, sstate["delta_g"])
+        return params, {"m": m, "v": v, "k": k}
+
+    def upload(delta, cstate, specs, fed):
+        return {"delta": delta, "v_full": cstate["v"]}
+
+    def server_update(params, sstate, mean_up, specs, fed):
+        new_params = _plain_delta_server(params, mean_up["delta"], fed)
+        return new_params, {
+            "delta_g": _delta_g_from_mean_delta(mean_up["delta"], fed),
+            "v_bar": mean_up["v_full"],
+            "t": sstate["t"] + fed.local_steps,
+        }
+
+    return FedAlgorithm("fedlada", init_server, init_client, local_step,
+                        upload, server_update)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def get_algorithm(fed: FedConfig) -> FedAlgorithm:
+    fed.validate()
+    name = fed.algorithm
+    quant = name.endswith("+int8")
+    if quant:
+        name = name[:-len("+int8")]
+    alg = _get_base_algorithm(name)
+    if quant:
+        from repro.core.extensions import quantized
+        alg = quantized(alg)
+    return alg
+
+
+def _get_base_algorithm(name: str) -> FedAlgorithm:
+    if name == "fedadamw":
+        return FedAlgorithm(
+            "fedadamw", _fedadamw_init_server, _fedadamw_init_client,
+            _fedadamw_local_step, _fedadamw_upload, _fedadamw_server_update)
+    if name in ("fedavg", "local_sgd"):
+        return _fedavg()
+    if name == "scaffold":
+        return _scaffold()
+    if name == "fedcm":
+        return _fedcm()
+    if name == "fedadam":
+        return _fedadam()
+    if name == "fedlada":
+        return _fedlada()
+    if name == "local_adam":
+        return _local_adam_like("local_adam", decoupled=False)
+    if name == "local_adamw":
+        return _local_adam_like("local_adamw", decoupled=True)
+    if name == "fedlamb":
+        from repro.core.extensions import fedlamb
+        return fedlamb()
+    if name == "fedlion":
+        from repro.core.extensions import fedlion
+        return fedlion()
+    raise ValueError(name)
+
+
+def upload_bytes(upload_tree) -> int:
+    """Communication cost of one client upload (paper Table 7 accounting)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(upload_tree))

@@ -1,0 +1,268 @@
+"""Hessian-block partitioning of the parameter tree (paper Appendix D).
+
+FedAdamW communicates only the *block-wise mean* of the second-moment
+estimate ``v``. Blocks follow the near-block-diagonal Hessian structure of
+Transformers:
+
+  Class 1  query / key                  -> one block per attention head
+  Class 2  attn.proj / MLP / experts    -> one block per output neuron (group)
+  Class 3  value                        -> one block per output neuron
+  Class 4  embedding / output head      -> one block per token (vocab row)
+  default  everything else (norms, biases, SSM scalars, conv, router)
+           -> per-tensor block; per-head where a head dimension exists
+           (Appendix D Algorithm 4: non-Transformer tensors get one block)
+
+A block is described structurally (axes kept vs. averaged) rather than with
+element-wise segment ids, so the mean/broadcast are free reshapes even for
+70B+ parameter trees: ``block_means`` is ``x.mean(reduce_axes)`` followed by
+an optional grouping mean along kept axes; ``broadcast_means`` inverts it.
+
+Grouping implements the paper's ``min_block_size`` heuristic: if a block at
+full resolution would hold fewer than ``min_block_size`` elements, adjacent
+output neurons are merged (largest divisor of the axis that keeps blocks
+above the threshold), and axes are capped so a tensor never exceeds
+``max_blocks`` blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FedConfig, ModelConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafBlockSpec:
+    """Structural description of a leaf's block partition."""
+
+    shape: Tuple[int, ...]
+    kept: Tuple[int, ...]      # axes that index blocks (in increasing order)
+    groups: Tuple[int, ...]    # number of block groups per kept axis
+    cls: str = "default"       # partition class, for reporting
+
+    @property
+    def n_blocks(self) -> int:
+        return int(np.prod(self.groups)) if self.groups else 1
+
+    @property
+    def block_elems(self) -> int:
+        total = int(np.prod(self.shape)) if self.shape else 1
+        return total // max(self.n_blocks, 1)
+
+
+def _largest_divisor_at_most(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (>=1)."""
+    target = max(1, min(n, target))
+    for d in range(target, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _make_spec(shape: Tuple[int, ...], kept: Tuple[int, ...], cls: str,
+               min_block_size: int, max_blocks: int) -> LeafBlockSpec:
+    kept = tuple(sorted(kept))
+    total = int(np.prod(shape)) if shape else 1
+    if not kept:
+        return LeafBlockSpec(shape, (), (), cls)
+    # full-resolution blocks: one per index combo of kept axes
+    groups = [shape[a] for a in kept]
+    elems = total // int(np.prod(groups))
+    # merge along the *last* kept axis until block size >= min_block_size
+    # and total blocks <= max_blocks
+    def n_blocks(gs):
+        return int(np.prod(gs))
+    i = len(groups) - 1
+    while i >= 0:
+        cur_elems = total // n_blocks(groups)
+        too_small = cur_elems < min_block_size
+        too_many = n_blocks(groups) > max_blocks
+        if not (too_small or too_many):
+            break
+        # shrink the group count on axis i
+        want = groups[i]
+        if too_small:
+            factor = math.ceil(min_block_size / cur_elems)
+            want = max(1, groups[i] // factor)
+        if too_many:
+            want = min(want, max(1, groups[i] // math.ceil(
+                n_blocks(groups) / max_blocks)))
+        new = _largest_divisor_at_most(shape[kept[i]], want)
+        if new == groups[i]:
+            new = 1  # cannot subdivide further on this axis; collapse it
+        groups[i] = new
+        if groups[i] == 1:
+            i -= 1
+        # loop re-checks conditions
+    return LeafBlockSpec(shape, kept, tuple(groups), cls)
+
+
+# ---------------------------------------------------------------------------
+# Classification (pattern-matching on parameter-tree key names)
+# ---------------------------------------------------------------------------
+
+_QK = ("attn_wq", "attn_wk")
+_QK_BIAS = ("attn_bq", "attn_bk")
+_VALUE = ("attn_wv", "attn_bv")
+_PROJ_OUT_LAST = ("mlp_wi", "mlp_wg", "ssm_in_proj", "moe_router",
+                  "frontend_proj", "output_head")
+_PROJ_OUT_LAST2 = ("mlp_wo", "attn_wo", "ssm_out_proj")
+
+
+def _leaf_name(path: Tuple[str, ...]) -> str:
+    return path[-1]
+
+
+def classify_leaf(path: Tuple[str, ...], shape: Tuple[int, ...],
+                  stacked: bool, fed: FedConfig) -> LeafBlockSpec:
+    """Assign a block spec to one leaf. ``stacked`` marks a leading scan-layer
+    axis (always a block axis: blocks never cross layers)."""
+    name = _leaf_name(path)
+    off = 1 if stacked else 0
+    nd = len(shape)
+
+    def spec(kept_rel: Tuple[int, ...], cls: str) -> LeafBlockSpec:
+        kept = tuple(a + off for a in kept_rel)
+        if stacked:
+            kept = (0,) + kept
+        s = _make_spec(shape, kept, cls, fed.min_block_size, fed.max_blocks)
+        if stacked and 0 not in s.kept:
+            # never merge across layers
+            s = LeafBlockSpec(shape, (0,) + s.kept[1:], (shape[0],) + s.groups[1:], cls)
+        return s
+
+    base_nd = nd - off
+    if name.endswith(_QK) and base_nd == 3:        # (D, H, hd) -> per head
+        return spec((1,), "qk_per_head")
+    if name.endswith(_QK_BIAS) and base_nd == 2:   # (H, hd) -> per head
+        return spec((0,), "qk_per_head")
+    if name.endswith("attn_wv") and base_nd == 3:  # (D, KV, hd) -> per out-neuron
+        return spec((1, 2), "value_per_neuron")
+    if name.endswith("attn_bv") and base_nd == 2:
+        return spec((0, 1), "value_per_neuron")
+    if name.endswith(_PROJ_OUT_LAST2) and base_nd >= 2:
+        return spec((base_nd - 1,), "proj_per_neuron")  # output dim last
+    if name.endswith(_PROJ_OUT_LAST) and base_nd >= 2:
+        return spec((base_nd - 1,), "proj_per_neuron")  # (in, out)
+    if name.startswith("moe_exp_") and base_nd == 3:  # (E, in, out)
+        return spec((0, 2), "expert_per_neuron")
+    if name.startswith("moe_shared_") and base_nd == 2:
+        return spec((base_nd - 1,), "proj_per_neuron")
+    if name.endswith("embed_tokens") and base_nd == 2:  # (V, D) -> per token
+        return spec((0,), "embed_per_token")
+    if name in ("ssm_A_log", "ssm_D", "ssm_dt_bias") and base_nd == 1:
+        return spec((0,), "ssm_per_head")
+    if name.endswith("ssm_conv") and base_nd == 2:  # (w, ch) -> per channel
+        return spec((1,), "ssm_per_channel")
+    # default: one block for the whole tensor (per layer when stacked)
+    return spec((), "default")
+
+
+# ---------------------------------------------------------------------------
+# Tree-level API
+# ---------------------------------------------------------------------------
+
+def _is_stacked(path: Tuple[str, ...], cfg: ModelConfig) -> bool:
+    """Leaves under a scanned stack carry a leading layer axis."""
+    if cfg.family == "hybrid":
+        return False  # hybrid stacks are python-unrolled dicts
+    return len(path) >= 2 and path[0] in ("layers", "encoder")
+
+
+def _tree_paths(tree) -> Dict[Tuple[str, ...], Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        path = tuple(
+            k.key if hasattr(k, "key") else str(k.idx) for k in kp)
+        out[path] = leaf
+    return out
+
+
+def build_block_specs(params, cfg: ModelConfig, fed: FedConfig):
+    """Returns a pytree (same structure as params) of LeafBlockSpec."""
+    paths = _tree_paths(params)
+    specs = {p: classify_leaf(p, tuple(leaf.shape), _is_stacked(p, cfg), fed)
+             for p, leaf in paths.items()}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    spec_leaves = []
+    for kp, _ in flat:
+        path = tuple(k.key if hasattr(k, "key") else str(k.idx) for k in kp)
+        spec_leaves.append(specs[path])
+    return jax.tree_util.tree_unflatten(treedef, spec_leaves)
+
+
+def total_blocks(spec_tree) -> int:
+    return sum(s.n_blocks for s in jax.tree.leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, LeafBlockSpec)))
+
+
+# ---------------------------------------------------------------------------
+# Mean / broadcast for a single leaf
+# ---------------------------------------------------------------------------
+
+def block_means(x: Array, spec: LeafBlockSpec) -> Array:
+    """(…leaf shape…) -> (n_blocks,) block means (fp32)."""
+    x = x.astype(jnp.float32)
+    reduce_axes = tuple(a for a in range(x.ndim) if a not in spec.kept)
+    m = x.mean(axis=reduce_axes) if reduce_axes else x
+    if not spec.kept:
+        return m.reshape(1)
+    # group each kept axis: (d,) -> (g, d//g) and mean the inner part
+    new_shape = []
+    for g, d in zip(spec.groups, m.shape):
+        new_shape += [g, d // g]
+    m = m.reshape(new_shape)
+    inner = tuple(range(1, 2 * len(spec.groups), 2))
+    m = m.mean(axis=inner)
+    return m.reshape(-1)
+
+
+def broadcast_means(means: Array, spec: LeafBlockSpec) -> Array:
+    """(n_blocks,) -> full leaf shape (fp32), inverse of block_means."""
+    if not spec.kept:
+        return jnp.broadcast_to(means.reshape(()), spec.shape)
+    m = means.reshape(spec.groups)
+    # expand each grouped axis back to full dim
+    for i, a in enumerate(spec.kept):
+        d = spec.shape[a]
+        g = spec.groups[i]
+        m = jnp.repeat(m, d // g, axis=i) if g != d else m
+    # m now has shape (shape[kept0], shape[kept1], ...); insert singleton
+    # dims for the reduced axes and broadcast to the full leaf shape
+    out_shape = spec.shape
+    view_shape = [out_shape[a] if a in spec.kept else 1 for a in range(len(out_shape))]
+    m = m.reshape(view_shape)
+    return jnp.broadcast_to(m, out_shape)
+
+
+def tree_block_means(tree, spec_tree):
+    return jax.tree.map(
+        lambda x, s: block_means(x, s), tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, LeafBlockSpec))
+
+
+def tree_broadcast_means(means_tree, spec_tree):
+    return jax.tree.map(
+        lambda m, s: broadcast_means(m, s), means_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, LeafBlockSpec))
+
+
+def partition_report(spec_tree) -> str:
+    """Human-readable summary: class -> (#tensors, #blocks)."""
+    agg: Dict[str, list] = {}
+    for s in jax.tree.leaves(spec_tree,
+                             is_leaf=lambda x: isinstance(x, LeafBlockSpec)):
+        agg.setdefault(s.cls, [0, 0])
+        agg[s.cls][0] += 1
+        agg[s.cls][1] += s.n_blocks
+    lines = [f"{k:20s} tensors={v[0]:5d} blocks={v[1]:9d}"
+             for k, v in sorted(agg.items())]
+    return "\n".join(lines)

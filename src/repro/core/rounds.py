@@ -1,0 +1,196 @@
+"""Federated round engine: one jittable ``round_fn`` per (model, algorithm).
+
+A *round* (paper Algorithms 1-3) is: broadcast global params -> each of the
+S sampled clients runs K local optimizer steps on its own data -> clients
+upload (delta, aggregation payload) -> server averages and updates.
+
+Two placement layouts (DESIGN.md §2):
+
+``client_parallel``
+    The S clients are vmapped over a leading axis of the per-round batch
+    tensor; under pjit that axis is sharded over the (``pod``, ``data``)
+    mesh axes so each client trains on its own mesh slice, and the
+    ``mean`` over the client axis lowers to the cross-client all-reduce —
+    the "server" is the collective itself.
+
+``client_sequential``
+    One client at a time occupies the whole mesh (params + optimizer state
+    FSDPxTP sharded over *all* axes); ``lax.scan`` iterates the clients of
+    the round and accumulates upload sums online, so peak memory never
+    holds more than one client's optimizer state. Required for the >13B
+    architectures.
+
+The K local steps are a ``lax.scan`` over the per-step batch axis; the
+whole round is one XLA program (one ``jax.jit``), which is what the
+multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig, ModelConfig
+from repro.core import partition
+from repro.core.fedadamw import FedAlgorithm, get_algorithm
+from repro.core.tree_util import tree_sub
+
+Array = jax.Array
+
+
+def init_server_state(alg: FedAlgorithm, params, specs, fed: FedConfig):
+    return alg.init_server(params, specs, fed)
+
+
+def cosine_lr_scale(round_index: Array, total_rounds: int,
+                    min_scale: float = 0.0) -> Array:
+    """Paper Appendix C: cosine learning-rate decay over rounds."""
+    frac = jnp.clip(round_index.astype(jnp.float32) / max(total_rounds, 1),
+                    0.0, 1.0)
+    return min_scale + (1 - min_scale) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+
+
+def make_local_phase(loss_fn: Callable, alg: FedAlgorithm, fed: FedConfig,
+                     specs) -> Callable:
+    """Returns local_phase(global_params, sstate, batches, lr_scale[, cid])
+    -> (upload, metrics). ``batches``: pytree with leading K axis."""
+
+    def local_phase(gparams, sstate, batches, lr_scale, client_id=None):
+        if alg.needs_client_ids:
+            cstate = alg.init_client(gparams, sstate, fed, specs=specs,
+                                     client_id=client_id)
+        else:
+            cstate = alg.init_client(gparams, sstate, fed, specs=specs)
+
+        def grad_of(params, batch):
+            """Batch leaves are (b, ...) normally, or (mb, b_micro, ...)
+            when fed.grad_microbatches > 1 — the micro axis is explicit in
+            the input layout (NOT a reshape of the batch axis) so the
+            sharded batch sub-dimension stays intact under GSPMD and the
+            scan never iterates a sharded axis."""
+            if fed.grad_microbatches <= 1:
+                (loss, _aux), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+                return loss, grads
+
+            mb = fed.grad_microbatches
+
+            def micro_step(acc, mbatch):
+                (loss, _aux), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mbatch)
+                gsum = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc[0], g)
+                return (gsum, acc[1] + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro_step, (g0, jnp.zeros((), jnp.float32)), batch)
+            inv = 1.0 / mb
+            return lsum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+        def step(carry, batch):
+            params, cst = carry
+            loss, grads = grad_of(params, batch)
+            params, cst = alg.local_step(params, grads, cst, sstate, fed,
+                                         lr_scale)
+            return (params, cst), loss
+
+        (params_k, cstate_k), losses = jax.lax.scan(
+            step, (gparams, cstate), batches)
+        delta = tree_sub(params_k, gparams)
+        up = alg.upload(delta, cstate_k, specs, fed)
+        metrics = {"loss_first": losses[0], "loss_last": losses[-1],
+                   "loss_mean": losses.mean()}
+        return up, metrics
+
+    return local_phase
+
+
+def make_round_fn(model, fed: FedConfig, specs, *,
+                  alg: Optional[FedAlgorithm] = None,
+                  loss_fn: Optional[Callable] = None,
+                  cosine_total_rounds: int = 0) -> Callable:
+    """Build the jittable round function.
+
+    round_fn(gparams, sstate, batches, client_ids, round_index)
+        -> (new_params, new_sstate, metrics)
+
+    batches: pytree whose leaves have leading axes (S, K, ...) —
+    clients x local-steps x per-step batch.
+    """
+    alg = alg or get_algorithm(fed)
+    loss_fn = loss_fn or model.loss
+    local_phase = make_local_phase(loss_fn, alg, fed, specs)
+
+    def _lr_scale(round_index):
+        if cosine_total_rounds:
+            return cosine_lr_scale(round_index, cosine_total_rounds)
+        return jnp.ones((), jnp.float32)
+
+    if fed.layout == "client_parallel":
+
+        def round_fn(gparams, sstate, batches, client_ids, round_index):
+            lr_scale = _lr_scale(round_index)
+            uploads, metrics = jax.vmap(
+                local_phase, in_axes=(None, None, 0, None, 0),
+                out_axes=0)(gparams, sstate, batches, lr_scale, client_ids)
+            mean_up = jax.tree.map(lambda u: u.mean(axis=0), uploads)
+            if alg.needs_client_ids:
+                new_params, new_state = alg.server_update(
+                    gparams, sstate, mean_up, specs, fed,
+                    per_client=uploads, client_ids=client_ids)
+            else:
+                new_params, new_state = alg.server_update(
+                    gparams, sstate, mean_up, specs, fed)
+            out_metrics = jax.tree.map(lambda m: m.mean(axis=0), metrics)
+            return new_params, new_state, out_metrics
+
+    else:  # client_sequential
+
+        if alg.needs_client_ids:
+            raise NotImplementedError(
+                f"{alg.name} keeps per-client server state; use the "
+                "client_parallel layout")
+
+        def round_fn(gparams, sstate, batches, client_ids, round_index):
+            lr_scale = _lr_scale(round_index)
+
+            def scan_client(acc, per_client_batches):
+                up, m = local_phase(gparams, sstate, per_client_batches,
+                                    lr_scale)
+                acc_up, acc_m, n = acc
+                acc_up = jax.tree.map(jnp.add, acc_up, up)
+                acc_m = jax.tree.map(jnp.add, acc_m, m)
+                return (acc_up, acc_m, n + 1), None
+
+            # build zero accumulators with the right structure via one
+            # abstract evaluation (no FLOPs at runtime: jitted away)
+            up0_shape = jax.eval_shape(
+                lambda b: local_phase(gparams, sstate, b, lr_scale),
+                jax.tree.map(lambda x: x[0], batches))
+            acc0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                up0_shape)
+            (sum_up, sum_m, n), _ = jax.lax.scan(
+                scan_client, (acc0[0], acc0[1], jnp.zeros((), jnp.float32)),
+                batches)
+            inv = 1.0 / jnp.maximum(n, 1.0)
+            mean_up = jax.tree.map(lambda u: u * inv, sum_up)
+            out_metrics = jax.tree.map(lambda m: m * inv, sum_m)
+            new_params, new_state = alg.server_update(
+                gparams, sstate, mean_up, specs, fed)
+            return new_params, new_state, out_metrics
+
+    return round_fn
+
+
+def build_fed_state(model, fed: FedConfig, rng: jax.Array,
+                    cfg: Optional[ModelConfig] = None):
+    """Convenience: init params, block specs, algorithm, server state."""
+    cfg = cfg or model.cfg
+    params = model.init(rng)
+    specs = partition.build_block_specs(params, cfg, fed)
+    alg = get_algorithm(fed)
+    sstate = init_server_state(alg, params, specs, fed)
+    return params, specs, alg, sstate

@@ -1,0 +1,73 @@
+"""Serving layer: prefill + single-token decode steps for batched requests.
+
+The assigned ``decode_32k`` / ``long_500k`` input shapes lower ``serve_step``
+— ONE new token against a KV cache (or SSM state) of ``seq_len`` — rather
+than ``train_step``. Serving is non-federated: it runs plain sharded
+inference with the FL-trained weights (the paper never serves models; this
+exists because the assigned shapes require it — DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def make_prefill_fn(model):
+    """prefill(params, tokens) -> logits for the full prompt."""
+
+    def prefill(params, batch: Dict[str, Array]):
+        logits, _ = model.forward(params, batch)
+        return logits
+
+    return prefill
+
+
+def make_serve_step(model, *, greedy: bool = True, temperature: float = 1.0):
+    """serve_step(params, tokens, cache[, memory]) -> (next_tokens, logits, cache).
+
+    tokens: (B, 1) int32 — the most recent token per request.
+    cache: per-layer KV cache / SSM state as built by ``model.init_cache``.
+    """
+
+    def serve_step(params, tokens: Array, cache: Any, *,
+                   memory: Optional[Array] = None,
+                   rng: Optional[jax.Array] = None
+                   ) -> Tuple[Array, Array, Any]:
+        logits, cache = model.decode_step(params, tokens, cache,
+                                          memory=memory)
+        last = logits[:, -1, :]
+        if greedy or rng is None:
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                rng, last.astype(jnp.float32) / temperature).astype(jnp.int32)
+        return nxt[:, None], logits, cache
+
+    return serve_step
+
+
+def generate(model, params, prompt: Array, max_new_tokens: int, *,
+             max_len: Optional[int] = None,
+             memory: Optional[Array] = None,
+             rng: Optional[jax.Array] = None) -> Array:
+    """Simple autoregressive generation loop (prefill token-by-token, then
+    decode) used by the examples and integration tests; small-scale only."""
+    b, prompt_len = prompt.shape
+    max_len = max_len or (prompt_len + max_new_tokens)
+    cache = model.init_cache(b, max_len)
+    step = make_serve_step(model, greedy=rng is None)
+
+    # prefill by stepping through the prompt (keeps one code path; the
+    # production prefill shape uses model.forward instead)
+    tok = prompt[:, :1]
+    for i in range(prompt_len):
+        nxt, _, cache = step(params, prompt[:, i:i + 1], cache, memory=memory)
+    out = [nxt]
+    for _ in range(max_new_tokens - 1):
+        nxt, _, cache = step(params, out[-1], cache, memory=memory)
+        out.append(nxt)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,49 @@
+"""Small pytree arithmetic helpers used by the federated optimizers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), a)
+
+
+def tree_mean_leading(a):
+    """Mean over the leading (client) axis of every leaf."""
+    return jax.tree.map(lambda x: x.mean(axis=0), a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b))
+    return jnp.sum(jnp.stack(leaves))
+
+
+def tree_sq_norm(a):
+    return tree_dot(a, a)
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def global_norm(a):
+    return jnp.sqrt(tree_sq_norm(a))

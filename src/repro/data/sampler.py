@@ -1,0 +1,46 @@
+"""Per-round client sampling and batch assembly.
+
+``round_batches`` builds the (S, K, batch, seq) pytree the round engine
+scans/vmaps over: S sampled clients, K local steps, each step a fresh
+mini-batch drawn from that client's own (non-iid) shard.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.data.synthetic import SyntheticTask
+
+
+def sample_clients(num_clients: int, clients_per_round: int,
+                   rng: np.random.Generator) -> np.ndarray:
+    return rng.choice(num_clients, size=clients_per_round, replace=False)
+
+
+def round_batches(task: SyntheticTask, client_ids: np.ndarray,
+                  local_steps: int, batch_size: int,
+                  rng: np.random.Generator) -> Dict[str, np.ndarray]:
+    """Returns {tokens, labels}: (S, K, batch, seq) int32 arrays."""
+    s = len(client_ids)
+    tok = np.empty((s, local_steps, batch_size, task.seq_len), np.int32)
+    lab = np.empty_like(tok)
+    for si, cid in enumerate(client_ids):
+        for k in range(local_steps):
+            b = task.client_batch(int(cid), batch_size, rng)
+            tok[si, k] = b["tokens"]
+            lab[si, k] = b["labels"]
+    return {"tokens": tok, "labels": lab}
+
+
+def synthetic_round_batches(vocab_size: int, client_ids: np.ndarray,
+                            local_steps: int, batch_size: int, seq_len: int,
+                            rng: np.random.Generator
+                            ) -> Dict[str, np.ndarray]:
+    """Random-token batches (for perf/dry-run paths that never look at loss
+    values, only shapes)."""
+    s = len(client_ids)
+    shape = (s, local_steps, batch_size, seq_len)
+    tok = rng.integers(0, vocab_size, size=shape, dtype=np.int64).astype(np.int32)
+    lab = np.roll(tok, -1, axis=-1)
+    return {"tokens": tok, "labels": lab}

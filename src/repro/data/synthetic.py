@@ -1,0 +1,165 @@
+"""Synthetic non-iid federated tasks.
+
+The container has no CIFAR-100/GLUE data (DESIGN.md §6 assumption change #1),
+so the paper's experiments are reproduced *qualitatively* on synthetic tasks
+whose client heterogeneity is controlled by the same Dirichlet(α) scheme
+(Hsu et al. 2019) the paper uses: Dir-0.6 = low heterogeneity, Dir-0.1 =
+high heterogeneity.
+
+Two task kinds:
+
+``class_lm``
+    The CIFAR/ViT-Tiny analogue. Each sample is a token sequence drawn from
+    a class-conditional Markov chain over a small vocabulary; the model must
+    predict the class token at the final position (all other label positions
+    are masked with -1). Dirichlet label skew partitions samples to clients.
+    "Test accuracy" = final-position class accuracy on an iid held-out set.
+
+``lm``
+    A plain heterogeneous language-modeling task: each client owns a mixture
+    of topic-specific bigram generators; Dirichlet(α) sets each client's
+    topic mixture. Next-token loss everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+Array = np.ndarray
+
+
+def dirichlet_label_partition(labels: Array, num_clients: int, alpha: float,
+                              rng: np.random.Generator,
+                              min_per_client: int = 2) -> List[np.ndarray]:
+    """Hsu et al. (2019) Dirichlet partitioning: for each class, split its
+    sample indices across clients with proportions ~ Dir(alpha)."""
+    num_classes = int(labels.max()) + 1
+    client_indices: List[List[int]] = [[] for _ in range(num_clients)]
+    for c in range(num_classes):
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet(np.full(num_clients, alpha))
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for ci, part in enumerate(np.split(idx, cuts)):
+            client_indices[ci].extend(part.tolist())
+    out = []
+    for ci in range(num_clients):
+        idx = np.asarray(client_indices[ci], dtype=np.int64)
+        if len(idx) < min_per_client:  # give starved clients random samples
+            extra = rng.integers(0, len(labels), size=min_per_client - len(idx))
+            idx = np.concatenate([idx, extra])
+        rng.shuffle(idx)
+        out.append(idx)
+    return out
+
+
+@dataclasses.dataclass
+class SyntheticTask:
+    kind: str
+    vocab_size: int
+    seq_len: int
+    num_clients: int
+    tokens: Array                 # (n, seq) int32 — all training samples
+    labels: Array                 # (n, seq) int32 — next-token targets, -1 masked
+    client_indices: List[np.ndarray]
+    test_tokens: Array
+    test_labels: Array
+    num_classes: int = 0
+
+    def client_batch(self, client_id: int, batch_size: int,
+                     rng: np.random.Generator) -> Dict[str, Array]:
+        idx = self.client_indices[client_id]
+        sel = idx[rng.integers(0, len(idx), size=batch_size)]
+        return {"tokens": self.tokens[sel], "labels": self.labels[sel]}
+
+    def test_batch(self, batch_size: int,
+                   rng: Optional[np.random.Generator] = None) -> Dict[str, Array]:
+        if rng is None:
+            sel = np.arange(min(batch_size, len(self.test_tokens)))
+        else:
+            sel = rng.integers(0, len(self.test_tokens), size=batch_size)
+        return {"tokens": self.test_tokens[sel], "labels": self.test_labels[sel]}
+
+
+def _class_markov_chains(num_classes: int, feat_vocab: int,
+                         rng: np.random.Generator) -> Array:
+    """Per-class bigram transition matrices, peaked differently per class."""
+    trans = rng.dirichlet(np.full(feat_vocab, 0.3),
+                          size=(num_classes, feat_vocab))
+    return trans.astype(np.float64)
+
+
+def _sample_chain(trans: Array, length: int, rng: np.random.Generator) -> Array:
+    v = trans.shape[-1]
+    out = np.empty(length, np.int32)
+    s = rng.integers(0, v)
+    for t in range(length):
+        out[t] = s
+        s = rng.choice(v, p=trans[s])
+    return out
+
+
+def make_task(kind: str = "class_lm", *, vocab_size: int = 64,
+              seq_len: int = 32, num_samples: int = 4096,
+              num_clients: int = 16, dirichlet_alpha: float = 0.6,
+              num_classes: int = 10, num_topics: int = 8,
+              seed: int = 0, test_fraction: float = 0.15) -> SyntheticTask:
+    rng = np.random.default_rng(seed)
+
+    if kind == "class_lm":
+        # feature tokens occupy [0, vocab-num_classes); class tokens the rest
+        feat_vocab = vocab_size - num_classes
+        assert feat_vocab >= 8, "vocab too small for class_lm"
+        trans = _class_markov_chains(num_classes, feat_vocab, rng)
+        y = rng.integers(0, num_classes, size=num_samples)
+        tokens = np.empty((num_samples, seq_len), np.int32)
+        labels = np.full((num_samples, seq_len), -1, np.int32)
+        for i in range(num_samples):
+            tokens[i] = _sample_chain(trans[y[i]], seq_len, rng)
+            labels[i, -1] = feat_vocab + y[i]  # class token target at the end
+        n_test = int(num_samples * test_fraction)
+        task_labels = y[n_test:]
+        parts = dirichlet_label_partition(task_labels, num_clients,
+                                          dirichlet_alpha, rng)
+        return SyntheticTask(
+            kind=kind, vocab_size=vocab_size, seq_len=seq_len,
+            num_clients=num_clients,
+            tokens=tokens[n_test:], labels=labels[n_test:],
+            client_indices=parts,
+            test_tokens=tokens[:n_test], test_labels=labels[:n_test],
+            num_classes=num_classes)
+
+    if kind == "lm":
+        # topic-specific bigram LMs; client topic mixtures ~ Dir(alpha)
+        trans = _class_markov_chains(num_topics, vocab_size, rng)
+        mixtures = rng.dirichlet(np.full(num_topics, dirichlet_alpha),
+                                 size=num_clients)
+        per_client = num_samples // num_clients
+        tokens = np.empty((num_clients * per_client, seq_len + 1), np.int32)
+        owner = np.empty(num_clients * per_client, np.int64)
+        row = 0
+        for ci in range(num_clients):
+            for _ in range(per_client):
+                topic = rng.choice(num_topics, p=mixtures[ci])
+                tokens[row] = _sample_chain(trans[topic], seq_len + 1, rng)
+                owner[row] = ci
+                row += 1
+        inputs = tokens[:, :-1]
+        targets = tokens[:, 1:].astype(np.int32)
+        n_test = int(len(inputs) * test_fraction)
+        test_sel = rng.choice(len(inputs), size=n_test, replace=False)
+        test_mask = np.zeros(len(inputs), bool)
+        test_mask[test_sel] = True
+        parts = [np.flatnonzero((owner == ci) & ~test_mask)
+                 for ci in range(num_clients)]
+        parts = [p if len(p) > 1 else np.array([0, 1]) for p in parts]
+        return SyntheticTask(
+            kind=kind, vocab_size=vocab_size, seq_len=seq_len,
+            num_clients=num_clients,
+            tokens=inputs, labels=targets,
+            client_indices=parts,
+            test_tokens=inputs[test_mask], test_labels=targets[test_mask])
+
+    raise ValueError(f"unknown task kind {kind!r}")

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper's hot loop is the per-client fused AdamW update executed K*S times
+per round over every parameter (DESIGN.md §5):
+
+``fused_adamw``  one-pass moment update + parameter step (memory-bound:
+                 fusing 5 HBM round-trips into one read/write pass)
+``blockmean``    tiled column-mean reduction used for the O(B) block-mean
+                 second-moment upload (paper Eq. 4)
+
+Each kernel ships ``ops.py`` (jit'd wrapper) and ``ref.py`` (pure-jnp
+oracle); tests sweep shapes/dtypes with assert_allclose. Kernels target
+TPU (VMEM BlockSpec tiling) and validate under ``interpret=True`` on CPU.
+"""

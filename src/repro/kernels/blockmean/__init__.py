@@ -1,0 +1,4 @@
+from repro.kernels.blockmean import ops, ref
+from repro.kernels.blockmean.blockmean import column_mean_2d
+
+__all__ = ["ops", "ref", "column_mean_2d"]

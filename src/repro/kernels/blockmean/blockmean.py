@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: tiled column-mean reduction for the block-mean
+second-moment upload (paper Eq. 4, ``v_bar_b = mean(v_b)``).
+
+The dominant partition classes (Class 2/3: per-output-neuron blocks of
+``attn.proj``/MLP/value matrices) reduce a (d_in, d_out) leaf over d_in —
+a *column* mean, strided in memory. A naive XLA reduce on the transposed
+layout materializes a transpose; this kernel streams row-tiles through
+VMEM and accumulates per-column partial sums into a single resident
+(1, C)-tile output across sequential grid steps — one HBM read of the
+operand, no transpose, 4 bytes/elem moved (the floor).
+
+Grid: (C // BLOCK_COLS, R // BLOCK_ROWS) — column tiles outer, row tiles
+inner, so each output tile is initialized once (row step 0) and stays in
+VMEM for the whole inner walk (TPU grids iterate minor-most fastest).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+BLOCK_COLS = 512
+
+
+def _kernel(x_ref, o_ref, *, r_total: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...].sum(axis=0, keepdims=True) / r_total
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def column_mean_2d(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """x: (R, C) f32, R % BLOCK_ROWS == 0, C % BLOCK_COLS == 0 -> (C,)."""
+    r, c = x.shape
+    assert r % BLOCK_ROWS == 0 and c % BLOCK_COLS == 0, (r, c)
+    grid = (c // BLOCK_COLS, r // BLOCK_ROWS)
+    out = pl.pallas_call(
+        functools.partial(_kernel, r_total=r),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS),
+                               lambda j, i: (i, j))],
+        out_specs=pl.BlockSpec((1, BLOCK_COLS), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, c), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+    return out[0]

@@ -1,0 +1,24 @@
+"""jit'd wrapper: block means for (rows, blocks)-shaped views.
+
+``block_means_2d`` pads both dims to kernel tile multiples with a
+mask-correct scheme: row padding contributes zeros to the sums and the
+divisor uses the true row count; column padding is sliced off.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.blockmean.blockmean import (
+    BLOCK_COLS, BLOCK_ROWS, column_mean_2d)
+
+
+def block_means_2d(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """x: (R, C) -> (C,) column means via the Pallas kernel, any R/C."""
+    r, c = x.shape
+    rp = (-r) % BLOCK_ROWS
+    cp = (-c) % BLOCK_COLS
+    xp = jnp.pad(x.astype(jnp.float32), ((0, rp), (0, cp)))
+    # kernel divides by the padded row count; rescale to the true mean
+    means = column_mean_2d(xp, interpret=interpret) * ((r + rp) / r)
+    return means[:c]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the column-mean block reduction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def column_mean_ref(x: jax.Array) -> jax.Array:
+    """x: (R, C) any float dtype -> (C,) f32 column means."""
+    return x.astype(jnp.float32).mean(axis=0)

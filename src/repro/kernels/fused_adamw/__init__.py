@@ -1,0 +1,4 @@
+from repro.kernels.fused_adamw import ops, ref
+from repro.kernels.fused_adamw.fused_adamw import fused_adamw_2d
+
+__all__ = ["ops", "ref", "fused_adamw_2d"]

@@ -1,0 +1,75 @@
+"""jit'd wrapper: route arbitrary parameter pytrees through the fused
+FedAdamW Pallas kernel (flatten -> pad to (R, LANES) -> kernel -> unflatten).
+
+Small leaves (< one tile) are batched together into a single packed buffer
+so the kernel never launches on degenerate shapes; the pack/unpack is pure
+reshape/concat (no HBM blowup — XLA fuses it with the surrounding scan).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_adamw.fused_adamw import (
+    BLOCK_ROWS, LANES, fused_adamw_2d)
+
+TILE = BLOCK_ROWS * LANES
+
+
+def _pack(tree) -> Tuple[jax.Array, Any]:
+    leaves = jax.tree.leaves(tree)
+    flat = [l.reshape(-1).astype(jnp.float32) for l in leaves]
+    total = sum(l.size for l in flat)
+    pad = (-total) % TILE
+    if pad:
+        flat.append(jnp.zeros((pad,), jnp.float32))
+    packed = jnp.concatenate(flat).reshape(-1, LANES)
+    return packed, None
+
+
+def _unpack(packed: jax.Array, template) -> Any:
+    leaves, treedef = jax.tree.flatten(template)
+    flat = packed.reshape(-1)
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape)) if l.shape else 1
+        out.append(flat[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_fused_adamw_step(params, grads, m, v, delta_g, *, beta1, beta2,
+                          c1, c2, lr, alpha, lam, eps,
+                          interpret: bool = True):
+    """One fused FedAdamW local step over a whole parameter pytree.
+
+    Returns (params', m', v'). Scalars may be python floats or traced."""
+    scalars = jnp.stack([
+        jnp.asarray(beta1, jnp.float32), jnp.asarray(beta2, jnp.float32),
+        jnp.asarray(c1, jnp.float32), jnp.asarray(c2, jnp.float32),
+        jnp.asarray(lr, jnp.float32), jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(lam, jnp.float32), jnp.asarray(eps, jnp.float32)])
+    xp, _ = _pack(params)
+    gp, _ = _pack(grads)
+    mp, _ = _pack(m)
+    vp, _ = _pack(v)
+    dgp, _ = _pack(delta_g)
+    x2, m2, v2 = fused_adamw_2d(xp, gp, mp, vp, dgp, scalars,
+                                interpret=interpret)
+    return (_unpack(x2, params), _unpack(m2, m), _unpack(v2, v))
+
+
+def tree_fused_adamw_apply(params, m, v, delta_g, *, c1, c2, lr, alpha, lam,
+                           eps, interpret: bool = True):
+    """Apply-only variant (moments already updated): used when the caller
+    computed (m, v) separately. Implemented by running the fused kernel with
+    beta1 = beta2 = 1 so the moment updates are identity."""
+    zeros = jax.tree.map(jnp.zeros_like, m)
+    x2, _, _ = tree_fused_adamw_step(
+        params, zeros, m, v, delta_g, beta1=1.0, beta2=1.0,
+        c1=c1, c2=c2, lr=lr, alpha=alpha, lam=lam, eps=eps,
+        interpret=interpret)
+    return x2

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused FedAdamW update kernel."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_adamw_ref(x: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
+                    dg: jax.Array, scalars: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Same contract as fused_adamw_2d, any shape/dtype (computed in f32)."""
+    b1, b2, c1, c2, lr, alpha, lam, eps = [scalars[i] for i in range(8)]
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    m2 = b1 * m.astype(jnp.float32) + (1.0 - b1) * gf
+    v2 = b2 * v.astype(jnp.float32) + (1.0 - b2) * gf * gf
+    step = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps) \
+        + alpha * dg.astype(jnp.float32) + lam * xf
+    x2 = xf - lr * step
+    return x2, m2, v2

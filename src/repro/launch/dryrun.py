@@ -1,0 +1,380 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST stay the very first statements — jax locks
+# the device count on first init — which is also why this module has no
+# `from __future__ import annotations`.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production mesh, with ZERO real allocation (ShapeDtypeStruct inputs).
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init); 512 placeholder host devices back both the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh.
+
+Per combination this prints/records:
+  * ``compiled.memory_analysis()``  -> bytes per device (proves it fits)
+  * ``compiled.cost_analysis()``    -> HLO FLOPs / bytes for §Roofline
+  * collective bytes parsed from the compiled HLO (per collective kind)
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (FedConfig, INPUT_SHAPES, InputShape, ModelConfig,
+                          get_arch, list_archs)
+from repro.core.rounds import make_round_fn
+from repro.core.serve import make_serve_step
+from repro.launch import input_specs as ispecs
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.roofline import model_flops, roofline_terms
+from repro.roofline.analysis import count_params
+from repro.roofline.hlo_counter import analyze_hlo
+from repro.sharding import specs as shspecs
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+ASSIGNED_ARCHS = [
+    "olmo-1b", "stablelm-12b", "qwen2-72b", "qwen3-32b", "qwen2-vl-2b",
+    "mixtral-8x7b", "zamba2-2.7b", "llama4-maverick-400b-a17b",
+    "seamless-m4t-large-v2", "mamba2-780m",
+]
+EXTRA_ARCHS = ["olmo-1b-swa"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+# Architectures that can serve a 524288-token context (sub-quadratic or
+# windowed decode memory); the rest skip long_500k — DESIGN.md §4.
+def skip_reason(cfg: ModelConfig, shape: str) -> Optional[str]:
+    if shape == "long_500k" and not cfg.supports_long_context_decode:
+        return ("full-attention KV cache at 524288 tokens is quadratic-cost "
+                "/ O(seq) memory per request; arch has no sliding-window or "
+                "state-space decode path (see olmo-1b-swa for the dense SWA "
+                "variant)")
+    return None
+
+
+def _dryrun_fed(cfg: ModelConfig, local_steps: int,
+                microbatches: int = 1) -> FedConfig:
+    return FedConfig(
+        algorithm="fedadamw",
+        layout=cfg.fl_layout,
+        local_steps=local_steps,
+        sequential_clients=2,
+        grad_microbatches=microbatches,
+        num_clients=1024, clients_per_round=32,  # bookkeeping only
+    )
+
+
+def auto_microbatches(b: int, seq: int, batch_shard: int,
+                      target_tokens_per_chip: int = 8192) -> int:
+    """Largest micro split that (a) divides the batch, (b) keeps the
+    sharded batch sub-dim divisible by its mesh extent, (c) brings the
+    per-chip per-micro-step token count near the target."""
+    b_chip = max(1, b // batch_shard)
+    mb = max(1, (b_chip * seq) // target_tokens_per_chip)
+    mb = min(mb, b)
+    while mb > 1 and (b % mb or (b // mb) % batch_shard):
+        mb -= 1
+    return mb
+
+
+def lower_train(cfg: ModelConfig, mesh, ishape: InputShape, *,
+                local_steps: int, remat: str, param_dtype,
+                microbatches: int = 0) -> Any:
+    # FSDP layout: anchor activations at block boundaries with batch over
+    # the client axes AND sequence over `model` (sequence parallelism) —
+    # batch-only constraints leave an 80-layer boundary-checkpoint stack
+    # unsharded over `model` (16 GB/chip for qwen2-72b); seq-parallel
+    # shards it 16x at the cost of per-layer all-gathers (the trade-off is
+    # quantified in EXPERIMENTS.md §Dry-run).
+    if cfg.fl_layout == "client_sequential":
+        # d-model-sharded boundaries: feed row/column-parallel projections
+        # directly. Measured on qwen2-72b train_4k multi (vs seq-parallel
+        # boundaries at equal micro-batching): collective 2.0e4 -> 3.8e3 s,
+        # HBM 8.0e3 -> 3.5e3 s, temp 12.8 -> 7.8 GB (EXPERIMENTS.md §Perf
+        # pair 1). The same spec REGRESSES the client_parallel layout 4-8x
+        # (measured on olmo-1b) and archs whose head count does not divide
+        # the model axis (llama4 40H: HBM 5.5e3 -> 2.4e4 s) — those keep
+        # sequence-parallel boundaries.
+        cax = shspecs.client_axes(mesh)
+        cax = cax if len(cax) > 1 else cax[0]
+        if cfg.attention.num_heads % mesh.shape["model"] == 0:
+            act_pspec = P(cax, None, "model")
+        else:
+            act_pspec = P(cax, "model", None)
+    else:
+        # client_parallel: per-client activations (under the client vmap)
+        # are otherwise REPLICATED over `model` — sequence-parallel
+        # boundaries shard the remat checkpoint stack 16x (hypothesis
+        # validated in EXPERIMENTS.md §Perf memory iteration; holds for
+        # every parallel-layout arch including non-divisible-head VLM:
+        # 31.9 -> 17.9 GB/chip temp on qwen2-vl train_4k).
+        act_pspec = P(None, "model", None)
+    model = build_model(cfg, scan_layers=True, remat=remat,
+                        compute_dtype=jnp.bfloat16, act_pspec=act_pspec)
+    if microbatches <= 0:  # auto
+        probe = _dryrun_fed(cfg, local_steps)
+        _, b = ispecs.fed_geometry(cfg, mesh, probe, ishape)
+        import numpy as np
+        shard = (int(np.prod([mesh.shape[a]
+                              for a in shspecs.client_axes(mesh)]))
+                 if probe.layout == "client_sequential" else 1)
+        microbatches = auto_microbatches(b, ishape.seq_len, shard)
+    fed = _dryrun_fed(cfg, local_steps, microbatches)
+    params, specs, alg, sstate = ispecs.abstract_fed_state(
+        model, cfg, fed, param_dtype=param_dtype)
+    round_fn = make_round_fn(model, fed, specs, alg=alg)
+
+    param_ps = shspecs.param_pspecs(params, cfg, mesh, fed)
+    state_ps = shspecs.state_pspecs(sstate, param_ps, params, cfg, mesh, fed)
+    batch = ispecs.train_batch_specs(cfg, mesh, fed, ishape)
+    nbatch = jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, shspecs.batch_pspec(mesh, fed, rank=s.ndim)),
+        batch)
+    s_clients = jax.tree.leaves(batch)[0].shape[0]
+    in_sh = (shspecs.named(mesh, param_ps), shspecs.named(mesh, state_ps),
+             nbatch, NamedSharding(mesh, P(None)), NamedSharding(mesh, P()))
+    out_sh = (shspecs.named(mesh, param_ps), shspecs.named(mesh, state_ps),
+              None)
+    # donate params + server state: the round updates them in place
+    jitted = jax.jit(round_fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1))
+    with mesh:
+        lowered = jitted.lower(
+            params, sstate, batch,
+            jax.ShapeDtypeStruct((s_clients,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    # tokens processed per round program (for MODEL_FLOPS accounting)
+    tok_shape = jax.tree.leaves(batch)[0].shape
+    per_step_batch = (tok_shape[2] * tok_shape[3]
+                      if fed.grad_microbatches > 1 else tok_shape[2])
+    tokens = s_clients * fed.local_steps * per_step_batch * ishape.seq_len
+    return lowered, tokens, {"K": fed.local_steps, "S": s_clients,
+                             "layout": fed.layout,
+                             "microbatches": fed.grad_microbatches}
+
+
+def lower_prefill(cfg: ModelConfig, mesh, ishape: InputShape, *,
+                  remat: str, param_dtype) -> Any:
+    cax = shspecs.client_axes(mesh)
+    bax = cax if len(cax) > 1 else cax[0]
+    model = build_model(cfg, scan_layers=True, remat="none",
+                        compute_dtype=jnp.bfloat16,
+                        act_pspec=P(bax, None, None))
+    params = ispecs.abstract_params(model, param_dtype)
+    fed = _dryrun_fed(cfg, 1)
+    param_ps = shspecs.param_pspecs(params, cfg, mesh, fed)
+    batch = ispecs.prefill_batch_specs(cfg, ishape)
+    nbatch = jax.tree.map(
+        lambda s: NamedSharding(mesh, P(bax, *([None] * (s.ndim - 1)))),
+        batch)
+
+    def prefill(p, b):
+        logits, _ = model.forward(p, b)
+        return logits
+
+    jitted = jax.jit(prefill,
+                     in_shardings=(shspecs.named(mesh, param_ps), nbatch),
+                     out_shardings=NamedSharding(mesh, P(bax, None, "model")))
+    with mesh:
+        lowered = jitted.lower(params, batch)
+    tokens = ishape.global_batch * ishape.seq_len
+    return lowered, tokens, {"layout": "inference"}
+
+
+def lower_decode(cfg: ModelConfig, mesh, ishape: InputShape, *,
+                 param_dtype) -> Any:
+    import numpy as np
+    cax = shspecs.client_axes(mesh)
+    bax = cax if len(cax) > 1 else cax[0]
+    bsz = int(np.prod([mesh.shape[a] for a in cax]))
+    batch_shardable = ishape.global_batch % bsz == 0
+    model = build_model(
+        cfg, scan_layers=True, compute_dtype=jnp.bfloat16,
+        act_pspec=P(bax, None, None) if batch_shardable else None)
+    params = ispecs.abstract_params(model, param_dtype)
+    fed = _dryrun_fed(cfg, 1)
+    param_ps = shspecs.param_pspecs(params, cfg, mesh, fed)
+    dspec = ispecs.decode_input_specs(model, cfg, ishape)
+    cache_ps = shspecs.cache_pspecs(dspec["cache"], cfg, mesh)
+    tok_ps = P(bax, None) if batch_shardable else P(None, None)
+
+    serve = make_serve_step(model)
+    has_memory = cfg.family == "audio"
+
+    if has_memory:
+        def step(p, tok, cache, memory):
+            return serve(p, tok, cache, memory=memory)
+        in_sh = (shspecs.named(mesh, param_ps),
+                 NamedSharding(mesh, tok_ps),
+                 shspecs.named(mesh, cache_ps),
+                 NamedSharding(mesh, P(tok_ps[0], None, None)))
+        args = (params, dspec["tokens"], dspec["cache"], dspec["memory"])
+    else:
+        def step(p, tok, cache):
+            return serve(p, tok, cache)
+        in_sh = (shspecs.named(mesh, param_ps),
+                 NamedSharding(mesh, tok_ps),
+                 shspecs.named(mesh, cache_ps))
+        args = (params, dspec["tokens"], dspec["cache"])
+
+    # donate the cache: serving updates it in place (alias in = alias out)
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=None,
+                     donate_argnums=(2,))
+    with mesh:
+        lowered = jitted.lower(*args)
+    tokens = ishape.global_batch  # one new token per request
+    return lowered, tokens, {"layout": "decode"}
+
+
+def run_one(arch: str, shape: str, mesh_kind: str, *, local_steps: int = 8,
+            remat: str = "full", param_dtype=jnp.bfloat16,
+            microbatches: int = 0, out_dir: Optional[str] = None,
+            save_hlo: bool = False) -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    ishape = INPUT_SHAPES[shape]
+    reason = skip_reason(cfg, shape)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape, "mesh": mesh_kind}
+    if reason:
+        rec["status"] = "skip"
+        rec["reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    if ishape.kind == "train":
+        lowered, tokens, extra = lower_train(
+            cfg, mesh, ishape, local_steps=local_steps, remat=remat,
+            param_dtype=param_dtype, microbatches=microbatches)
+        fwd_bwd = True
+    elif ishape.kind == "prefill":
+        lowered, tokens, extra = lower_prefill(
+            cfg, mesh, ishape, remat=remat, param_dtype=param_dtype)
+        fwd_bwd = False
+    else:
+        lowered, tokens, extra = lower_decode(
+            cfg, mesh, ishape, param_dtype=param_dtype)
+        fwd_bwd = False
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # trip-count-aware HLO analysis (cost_analysis counts scan bodies once;
+    # see repro.roofline.hlo_counter) — this is the roofline source of truth
+    hc = analyze_hlo(hlo)
+
+    mflops = model_flops(cfg, tokens)
+    if not fwd_bwd:
+        mflops /= 3.0
+    # The compiled SPMD module is the PER-PARTITION program (every chip runs
+    # it), so hc[...] are per-chip quantities: pass chips=1 to get per-chip
+    # roofline seconds directly; the global total is per-chip * chips.
+    terms = roofline_terms(
+        {"flops": hc["flops"], "bytes accessed": hc["bytes"]},
+        hc["collective_bytes"], 1)
+
+    rec.update({
+        "status": "ok",
+        "chips": chips,
+        "tokens_per_program": tokens,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "cost_analysis_raw": {k: cost.get(k) for k in
+                              ("flops", "bytes accessed", "transcendentals")},
+        "collective_bytes": {k.replace("collective_", ""): v
+                             for k, v in hc.items()
+                             if k.startswith("collective_")},
+        "roofline": terms.as_dict(),
+        "model_flops_6ND": mflops,
+        "useful_flops_ratio": (mflops / (terms.flops * chips))
+        if terms.flops else None,
+        "params": count_params(cfg),
+        **extra,
+    })
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(
+                out_dir, f"{arch}__{shape}__{mesh_kind}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        if save_hlo:
+            with open(os.path.join(
+                    out_dir, f"{arch}__{shape}__{mesh_kind}.hlo.txt"),
+                    "w") as f:
+                f.write(hlo)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=SHAPES + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--local-steps", type=int, default=8)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="gradient micro-batches per local step (0 = auto)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    combos = []
+    archs = (ASSIGNED_ARCHS + EXTRA_ARCHS) if args.all or not args.arch \
+        else [args.arch]
+    shapes = SHAPES if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                combos.append((a, s, m))
+
+    failures = 0
+    for a, s, m in combos:
+        try:
+            rec = run_one(a, s, m, local_steps=args.local_steps,
+                          remat=args.remat, microbatches=args.microbatch,
+                          out_dir=args.out, save_hlo=args.save_hlo)
+        except Exception:
+            failures += 1
+            print(f"[FAIL] {a} x {s} x {m}")
+            traceback.print_exc()
+            continue
+        if rec["status"] == "skip":
+            print(f"[SKIP] {a} x {s} x {m}: {rec['reason'][:80]}...")
+        else:
+            r = rec["roofline"]
+            print(f"[OK]   {a} x {s} x {m}: compile {rec['compile_s']}s "
+                  f"flops={r['flops']:.3g} hbmB={r['hbm_bytes']:.3g} "
+                  f"collB={r['collective_bytes']:.3g} "
+                  f"bottleneck={r['bottleneck']}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

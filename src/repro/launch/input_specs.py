@@ -1,0 +1,114 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run contract).
+
+Weak-type-correct, shardable, zero device allocation: everything here is
+``jax.ShapeDtypeStruct`` (or ``jax.eval_shape`` results for params / server
+state / KV caches). The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.config import FedConfig, InputShape, ModelConfig
+from repro.core.fedadamw import get_algorithm
+from repro.core.partition import build_block_specs
+from repro.sharding import specs as shspecs
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _client_axis_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in shspecs.client_axes(mesh)]))
+
+
+def fed_geometry(cfg: ModelConfig, mesh: Mesh, fed: FedConfig,
+                 ishape: InputShape) -> Tuple[int, int]:
+    """(clients_in_round_program S, per-client batch b)."""
+    cax = _client_axis_size(mesh)
+    if fed.layout == "client_parallel":
+        s = cax
+        b = max(1, ishape.global_batch // s)
+    else:
+        s = fed.sequential_clients
+        b = ishape.global_batch
+    return s, b
+
+
+def train_batch_specs(cfg: ModelConfig, mesh: Mesh, fed: FedConfig,
+                      ishape: InputShape) -> Dict[str, SDS]:
+    """Leaves are (S, K, b, ...) — or (S, K, mb, b_micro, ...) when
+    gradient micro-batching is on (the micro axis is explicit so the batch
+    sub-dimension keeps its sharding; see rounds.grad_of)."""
+    s, b = fed_geometry(cfg, mesh, fed, ishape)
+    k = fed.local_steps
+    seq = ishape.seq_len
+    mb = fed.grad_microbatches
+    if mb > 1:
+        assert b % mb == 0, (b, mb)
+        lead: Tuple[int, ...] = (s, k, mb, b // mb)
+    else:
+        lead = (s, k, b)
+    batch = {
+        "tokens": SDS(lead + (seq,), jnp.int32),
+        "labels": SDS(lead + (seq,), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        tf, ef = cfg.frontend_tokens_per_sample, cfg.frontend_embed_dim
+        batch["frontend_feats"] = SDS(lead + (tf, ef), jnp.bfloat16)
+        batch["mrope_positions"] = SDS(lead + (seq, 3), jnp.int32)
+    elif cfg.family == "audio":
+        tf, ef = cfg.frontend_tokens_per_sample, cfg.frontend_embed_dim
+        batch["frontend_feats"] = SDS(lead + (tf, ef), jnp.bfloat16)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, ishape: InputShape
+                        ) -> Dict[str, SDS]:
+    b, seq = ishape.global_batch, ishape.seq_len
+    batch = {"tokens": SDS((b, seq), jnp.int32),
+             "labels": SDS((b, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        tf, ef = cfg.frontend_tokens_per_sample, cfg.frontend_embed_dim
+        batch["frontend_feats"] = SDS((b, tf, ef), jnp.bfloat16)
+        batch["mrope_positions"] = SDS((b, seq, 3), jnp.int32)
+    elif cfg.family == "audio":
+        tf, ef = cfg.frontend_tokens_per_sample, cfg.frontend_embed_dim
+        batch["frontend_feats"] = SDS((b, tf, ef), jnp.bfloat16)
+    return batch
+
+
+def decode_input_specs(model, cfg: ModelConfig, ishape: InputShape
+                       ) -> Dict[str, Any]:
+    """tokens (B,1) + KV-cache/SSM-state structs (+ encoder memory)."""
+    b, seq = ishape.global_batch, ishape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(b, seq))
+    out = {"tokens": SDS((b, 1), jnp.int32), "cache": cache}
+    if cfg.family == "audio":
+        out["memory"] = SDS((b, cfg.frontend_tokens_per_sample, cfg.d_model),
+                            jnp.bfloat16)
+    return out
+
+
+def abstract_params(model, param_dtype=jnp.bfloat16):
+    """Abstract parameter tree (master copy dtype applied)."""
+    tree = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    if param_dtype is not None:
+        tree = jax.tree.map(
+            lambda s: SDS(s.shape, param_dtype)
+            if jnp.issubdtype(s.dtype, jnp.floating) else s, tree)
+    return tree
+
+
+def abstract_fed_state(model, cfg: ModelConfig, fed: FedConfig,
+                       param_dtype=jnp.bfloat16):
+    """(params_sds, block_specs, alg, server_state_sds)."""
+    params = abstract_params(model, param_dtype)
+    specs = build_block_specs(params, cfg, fed)
+    alg = get_algorithm(fed)
+    sstate = jax.eval_shape(lambda: alg.init_server(params, specs, fed))
+    return params, specs, alg, sstate

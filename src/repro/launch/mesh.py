@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* the first
+jax initialization, and smoke tests / benches must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """v5e pod slice: 16x16 = 256 chips per pod; 2 pods = 512 chips.
+
+    Axes: (``pod``,) ``data``, ``model`` — ``data`` hosts clients /
+    data-parallel replicas, ``model`` is the tensor-parallel axis, ``pod``
+    scales clients across pods (DCN-connected).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape: Tuple[int, ...] = (1, 1),
+                   axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    """Single-host mesh for tests/benches (uses whatever devices exist)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,8 @@
+from repro.lora.lora import (
+    init_lora,
+    merge_lora,
+    LoraModel,
+    build_lora_model,
+)
+
+__all__ = ["init_lora", "merge_lora", "LoraModel", "build_lora_model"]

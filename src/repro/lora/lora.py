@@ -1,0 +1,110 @@
+"""LoRA adapters for federated fine-tuning (paper's RoBERTa+LoRA setting).
+
+Low-rank additive deltas on selected weight matrices: for a target leaf
+``W (…, in, out-ish)`` we keep ``A (…, in, r)`` and ``B (…, r, out)`` and use
+``W + scale * A @ B`` at forward time. Head-factored attention weights
+``(D, H, hd)`` are treated as ``(D, H*hd)`` for the low-rank factorization
+and reshaped back — equivalent to LoRA on the unfactored projection.
+
+Federated fine-tuning freezes the base tree: the round engine sees only the
+LoRA tree (a regular pytree), so every FL algorithm — including FedAdamW's
+block-mean aggregation — applies unchanged; the Hessian-block partitioner
+falls back to per-tensor blocks for A/B (Appendix D Algorithm 4), matching
+the paper's RoBERTa-LoRA experiments where each LoRA matrix is one block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_TARGETS = ("attn_wq", "attn_wv")
+
+
+def _path_names(kp) -> Tuple[str, ...]:
+    return tuple(k.key if hasattr(k, "key") else str(getattr(k, "idx", k))
+                 for k in kp)
+
+
+def init_lora(params, rng: jax.Array, *, rank: int = 16, alpha: float = 32.0,
+              targets: Tuple[str, ...] = DEFAULT_TARGETS) -> Dict[str, Any]:
+    """Build the LoRA tree: {joined_path: {"A": ..., "B": ...}}.
+
+    Handles stacked scan-layer leaves transparently (leading L axis kept)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    lora: Dict[str, Any] = {}
+    keys = jax.random.split(rng, max(len(flat), 1))
+    for i, (kp, leaf) in enumerate(flat):
+        names = _path_names(kp)
+        if not names[-1].endswith(targets):
+            continue
+        shape = tuple(leaf.shape)
+        if len(shape) < 2:
+            continue
+        # figure out (lead, d_in, d_out): head-factored 3-D -> (in, H*hd)
+        if len(shape) == 2:
+            lead, d_in, d_out = (), shape[0], shape[1]
+        elif len(shape) == 3:
+            lead, d_in, d_out = (shape[0],), shape[1], shape[2]
+            if names[-1].endswith(("attn_wq", "attn_wk", "attn_wv")):
+                lead, d_in, d_out = (), shape[0], shape[1] * shape[2]
+        elif len(shape) == 4:  # stacked (L, D, H, hd)
+            lead, d_in, d_out = (shape[0],), shape[1], shape[2] * shape[3]
+        else:
+            continue
+        a = jax.random.normal(keys[i], lead + (d_in, rank)) * (d_in ** -0.5)
+        b = jnp.zeros(lead + (rank, d_out))
+        lora["\x1f".join(names)] = {"A": a.astype(jnp.float32), "B": b}
+    if not lora:
+        raise ValueError(f"no LoRA targets matched {targets}")
+    return {"lora": lora, "scale": jnp.asarray(alpha / rank, jnp.float32)}
+
+
+def merge_lora(params, lora_tree) -> Any:
+    """Return params with LoRA deltas added (differentiable w.r.t. lora)."""
+    scale = lora_tree["scale"]
+    adapters = lora_tree["lora"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = []
+    for kp, leaf in flat:
+        key = "\x1f".join(_path_names(kp))
+        if key in adapters:
+            a = adapters[key]["A"].astype(leaf.dtype)
+            b = adapters[key]["B"].astype(leaf.dtype)
+            delta = jnp.einsum("...ir,...ro->...io", a, b) * scale.astype(leaf.dtype)
+            leaves.append(leaf + delta.reshape(leaf.shape))
+        else:
+            leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoraModel:
+    """Adapter exposing the Model API over the LoRA tree only: the round
+    engine optimizes ``lora_tree`` while the base params stay frozen."""
+
+    model: Any
+    base_params: Any
+
+    def init(self, rng: jax.Array, *, rank: int = 16, alpha: float = 32.0,
+             targets: Tuple[str, ...] = DEFAULT_TARGETS):
+        return init_lora(self.base_params, rng, rank=rank, alpha=alpha,
+                         targets=targets)
+
+    def loss(self, lora_tree, batch):
+        merged = merge_lora(jax.lax.stop_gradient(self.base_params), lora_tree)
+        return self.model.loss(merged, batch)
+
+    def forward(self, lora_tree, batch):
+        merged = merge_lora(jax.lax.stop_gradient(self.base_params), lora_tree)
+        return self.model.forward(merged, batch)
+
+    @property
+    def cfg(self):
+        return self.model.cfg
+
+
+def build_lora_model(model, base_params) -> LoraModel:
+    return LoraModel(model=model, base_params=base_params)

@@ -1,0 +1,3 @@
+from repro.metrics.loggers import CSVLogger, JSONLLogger, Meter
+
+__all__ = ["CSVLogger", "JSONLLogger", "Meter"]

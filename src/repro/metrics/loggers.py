@@ -1,0 +1,66 @@
+"""Lightweight metric logging: CSV / JSONL files + an EMA meter."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+
+class CSVLogger:
+    def __init__(self, path: str, fieldnames=None):
+        self.path = path
+        self.fieldnames = list(fieldnames) if fieldnames else None
+        self._fh = None
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "w")
+
+    def log(self, row: Dict[str, Any]) -> None:
+        if self.fieldnames is None:
+            self.fieldnames = list(row.keys())
+            if self._fh:
+                self._fh.write(",".join(self.fieldnames) + "\n")
+        if self._fh:
+            self._fh.write(",".join(str(row.get(k, "")) for k in
+                                    self.fieldnames) + "\n")
+            self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh:
+            self._fh.close()
+
+
+class JSONLLogger:
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._fh = open(path, "w")
+
+    def log(self, record: Dict[str, Any]) -> None:
+        self._fh.write(json.dumps(record) + "\n")
+        self._fh.flush()
+
+    def close(self) -> None:
+        self._fh.close()
+
+
+class Meter:
+    """Wall-time + EMA loss meter."""
+
+    def __init__(self, ema: float = 0.9):
+        self.ema = ema
+        self.value: Optional[float] = None
+        self.count = 0
+        self.t0 = time.perf_counter()
+
+    def update(self, x: float) -> float:
+        x = float(x)
+        self.value = x if self.value is None else (
+            self.ema * self.value + (1 - self.ema) * x)
+        self.count += 1
+        return self.value
+
+    @property
+    def elapsed(self) -> float:
+        return time.perf_counter() - self.t0

@@ -1,0 +1,287 @@
+"""Attention: GQA with qk-norm / QKV-bias / sliding-window / M-RoPE variants,
+causal training path, KV-cache decode path, and cross-attention (enc-dec).
+
+Weights are kept in head-factored layout so the FedAdamW Hessian-block
+partitioner can split query/key by head (paper Appendix D Class 1) and
+value/attn.proj by output neuron (Class 2/3):
+
+    attn_wq : (d_model, H,  head_dim)
+    attn_wk : (d_model, KV, head_dim)
+    attn_wv : (d_model, KV, head_dim)
+    attn_wo : (H, head_dim, d_model)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import _dense_init, apply_mrope, apply_rope, rms_norm_simple
+
+Array = jax.Array
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    a = cfg.attention
+    d, h, kv, hd = cfg.d_model, a.num_heads, a.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    prefix = "cross_" if cross else ""
+    p = {
+        prefix + "attn_wq": _dense_init(ks[0], (d, h, hd), scale=d ** -0.5),
+        prefix + "attn_wk": _dense_init(ks[1], (d, kv, hd), scale=d ** -0.5),
+        prefix + "attn_wv": _dense_init(ks[2], (d, kv, hd), scale=d ** -0.5),
+        prefix + "attn_wo": _dense_init(ks[3], (h, hd, d), scale=(h * hd) ** -0.5),
+    }
+    if a.qkv_bias:
+        p[prefix + "attn_bq"] = jnp.zeros((h, hd))
+        p[prefix + "attn_bk"] = jnp.zeros((kv, hd))
+        p[prefix + "attn_bv"] = jnp.zeros((kv, hd))
+    if a.qk_norm:
+        p[prefix + "attn_qnorm"] = jnp.ones((hd,))
+        p[prefix + "attn_knorm"] = jnp.ones((hd,))
+    return p
+
+
+def _project_qkv(params, x: Array, cfg: ModelConfig, prefix: str = ""):
+    a = cfg.attention
+    dt = x.dtype
+    q = jnp.einsum("...d,dhk->...hk", x, params[prefix + "attn_wq"].astype(dt))
+    k = jnp.einsum("...d,dmk->...mk", x, params[prefix + "attn_wk"].astype(dt))
+    v = jnp.einsum("...d,dmk->...mk", x, params[prefix + "attn_wv"].astype(dt))
+    if a.qkv_bias:
+        q = q + params[prefix + "attn_bq"].astype(dt)
+        k = k + params[prefix + "attn_bk"].astype(dt)
+        v = v + params[prefix + "attn_bv"].astype(dt)
+    if a.qk_norm:
+        q = rms_norm_simple(q, params[prefix + "attn_qnorm"])
+        k = rms_norm_simple(k, params[prefix + "attn_knorm"])
+    return q, k, v
+
+
+def _rotate(q, k, positions, cfg: ModelConfig, mrope_positions=None):
+    a = cfg.attention
+    if a.use_mrope and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, a.rope_theta, a.mrope_sections)
+        k = apply_mrope(k, mrope_positions, a.rope_theta, a.mrope_sections)
+    else:
+        q = apply_rope(q, positions, a.rope_theta)
+        k = apply_rope(k, positions, a.rope_theta)
+    return q, k
+
+
+def _repeat_kv(k: Array, v: Array, num_heads: int) -> Tuple[Array, Array]:
+    kvh = k.shape[-2]
+    if kvh == num_heads:
+        return k, v
+    rep = num_heads // kvh
+    k = jnp.repeat(k, rep, axis=-2)
+    v = jnp.repeat(v, rep, axis=-2)
+    return k, v
+
+
+def _attention_core_naive(q: Array, k: Array, v: Array, cfg: ModelConfig
+                          ) -> Array:
+    """Materialized-score attention. q/k/v: (b, s, h, hd) (kv repeated)."""
+    a = cfg.attention
+    s = q.shape[1]
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bqhd,bmhd->bhqm", q * scale, k)  # (b, h, q, kv)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = ki <= qi
+    if a.sliding_window is not None:
+        mask = mask & (ki > qi - a.sliding_window)
+    logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqm,bmhd->bqhd", probs, v)
+
+
+def _attention_core_chunked(q: Array, k: Array, v: Array, cfg: ModelConfig
+                            ) -> Array:
+    """Exact flash-style attention: online softmax over KV chunks, query
+    blocks in parallel (vmap), KV walked sequentially (scan). Never
+    materializes the (s, s) score matrix — the working set is
+    O(b*h*s*kv_chunk), which is what lets the 32k prefill and 4k train
+    shapes fit HBM (EXPERIMENTS.md §Perf). Same math as the naive path
+    (tested allclose)."""
+    a = cfg.attention
+    b, s_orig, h, hd = q.shape
+    qc = min(cfg.attn_q_chunk, s_orig)
+    kc = min(cfg.attn_kv_chunk, s_orig)
+    # pad the sequence up to a chunk multiple: padded KEYS sit at positions
+    # >= s_orig, so the causal mask (col <= row) already excludes them for
+    # every real query row; padded QUERY rows are sliced off at the end.
+    pad = (-s_orig) % qc
+    if kc != qc:
+        lcm = qc * kc // __import__("math").gcd(qc, kc)
+        pad = (-s_orig) % lcm
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+    s = s_orig + pad
+    nq, nk = s // qc, s // kc
+    scale = cfg.head_dim ** -0.5
+
+    qb = jnp.moveaxis(q.reshape(b, nq, qc, h, hd), 1, 0)   # (nq,b,qc,h,hd)
+    kb = jnp.moveaxis(k.reshape(b, nk, kc, h, hd), 1, 0)   # (nk,b,kc,h,hd)
+    vb = jnp.moveaxis(v.reshape(b, nk, kc, h, hd), 1, 0)
+
+    neg = jnp.float32(-1e30)
+
+    def one_qblock(qi: Array, qblk: Array) -> Array:
+        row = qi * qc + jnp.arange(qc)                     # global q ids
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            j, kblk, vblk = inp
+            col = j * kc + jnp.arange(kc)
+            logits = jnp.einsum("bqhd,bkhd->bhqk",
+                                (qblk * scale).astype(jnp.float32),
+                                kblk.astype(jnp.float32))
+            mask = col[None, :] <= row[:, None]
+            if a.sliding_window is not None:
+                mask = mask & (col[None, :] > row[:, None] - a.sliding_window)
+            logits = jnp.where(mask[None, None], logits, neg)
+            blk_max = jnp.max(logits, axis=-1)             # (b,h,qc)
+            new_m = jnp.maximum(m, blk_max)
+            corr = jnp.exp(m - new_m)
+            p = jnp.exp(logits - new_m[..., None])
+            p = jnp.where(mask[None, None], p, 0.0)
+            l2 = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p,
+                            vblk.astype(jnp.float32))
+            acc2 = acc * corr[..., None] + pv
+            return (new_m, l2, acc2), None
+
+        m0 = jnp.full((b, h, qc), neg, jnp.float32)
+        l0 = jnp.zeros((b, h, qc), jnp.float32)
+        a0 = jnp.zeros((b, h, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (b,h,qc,hd)
+        return jnp.moveaxis(out, 1, 2)                     # (b,qc,h,hd)
+
+    outs = jax.vmap(one_qblock)(jnp.arange(nq), qb)        # (nq,b,qc,h,hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+    if pad:
+        out = out[:, :s_orig]
+    return out.astype(q.dtype)
+
+
+def _attention_core(q: Array, k: Array, v: Array, cfg: ModelConfig) -> Array:
+    s = q.shape[1]
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "chunked" if s > cfg.attn_chunk_threshold else "naive"
+    if impl == "chunked":
+        return _attention_core_chunked(q, k, v, cfg)
+    return _attention_core_naive(q, k, v, cfg)
+
+
+def causal_attention(params, x: Array, cfg: ModelConfig, *,
+                     positions: Optional[Array] = None,
+                     mrope_positions: Optional[Array] = None,
+                     segment_ids: Optional[Array] = None) -> Array:
+    """Training / prefill attention. x: (batch, seq, d_model)."""
+    a = cfg.attention
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, x, cfg)
+    q, k = _rotate(q, k, positions, cfg, mrope_positions)
+    k, v = _repeat_kv(k, v, a.num_heads)
+    if segment_ids is not None:
+        # segment masking only exists on the (rarely used) naive path
+        scale = cfg.head_dim ** -0.5
+        logits = jnp.einsum("bqhd,bmhd->bhqm", q * scale, k)
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        mask = ki <= qi
+        if a.sliding_window is not None:
+            mask = mask & (ki > qi - a.sliding_window)
+        mask = mask & (segment_ids[:, :, None]
+                       == segment_ids[:, None, :])[:, None]
+        logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqm,bmhd->bqhd", probs, v)
+    else:
+        out = _attention_core(q, k, v, cfg)
+    return jnp.einsum("...hd,hdD->...D", out, params["attn_wo"].astype(x.dtype))
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    a = cfg.attention
+    length = min(max_len, a.sliding_window) if a.sliding_window else max_len
+    shape = (batch, length, a.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_attention(params, x: Array, cache: dict, cfg: ModelConfig, *,
+                     mrope_positions: Optional[Array] = None) -> Tuple[Array, dict]:
+    """Single-token decode step. x: (batch, 1, d_model); cache holds the
+    (optionally ring-buffered, for sliding-window) key/value history."""
+    a = cfg.attention
+    b = x.shape[0]
+    idx = cache["index"]
+    positions = jnp.full((b, 1), idx, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg)
+    q, k = _rotate(q, k, positions, cfg, mrope_positions)
+
+    cache_len = cache["k"].shape[1]
+    if a.sliding_window is not None and cache_len == a.sliding_window:
+        slot = jnp.mod(idx, cache_len)  # ring buffer
+    else:
+        slot = jnp.minimum(idx, cache_len - 1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot.astype(jnp.int32), 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot.astype(jnp.int32), 0, 0))
+
+    kk, vv = _repeat_kv(ck, cv, a.num_heads)
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bqhd,bmhd->bhqm", q * scale, kk.astype(q.dtype))
+    valid = jnp.arange(cache_len) <= jnp.minimum(idx, cache_len - 1)
+    logits = jnp.where(valid[None, None, None, :], logits.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqm,bmhd->bqhd", probs, vv.astype(x.dtype))
+    y = jnp.einsum("...hd,hdD->...D", out, params["attn_wo"].astype(x.dtype))
+    new_cache = {"k": ck, "v": cv, "index": idx + 1}
+    return y, new_cache
+
+
+def cross_attention(params, x: Array, memory: Array, cfg: ModelConfig) -> Array:
+    """Encoder-decoder cross attention. memory: (batch, src, d_model)."""
+    a = cfg.attention
+    dt = x.dtype
+    q = jnp.einsum("...d,dhk->...hk", x, params["cross_attn_wq"].astype(dt))
+    k = jnp.einsum("...d,dmk->...mk", memory, params["cross_attn_wk"].astype(dt))
+    v = jnp.einsum("...d,dmk->...mk", memory, params["cross_attn_wv"].astype(dt))
+    k, v = _repeat_kv(k, v, a.num_heads)
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bqhd,bmhd->bhqm", q * scale, k)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(dt)
+    out = jnp.einsum("bhqm,bmhd->bqhd", probs, v)
+    return jnp.einsum("...hd,hdD->...D", out, params["cross_attn_wo"].astype(dt))
+
+
+def encoder_attention(params, x: Array, cfg: ModelConfig) -> Array:
+    """Bidirectional (non-causal) self attention for encoder stacks."""
+    a = cfg.attention
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, x, cfg)
+    q, k = _rotate(q, k, positions, cfg)
+    k, v = _repeat_kv(k, v, a.num_heads)
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bqhd,bmhd->bhqm", q * scale, k)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqm,bmhd->bqhd", probs, v)
+    return jnp.einsum("...hd,hdD->...D", out, params["attn_wo"].astype(x.dtype))

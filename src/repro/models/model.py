@@ -1,0 +1,162 @@
+"""Top-level Model: init / train loss / prefill / decode_step for every family.
+
+Batch dictionary contract (all leaves optional except ``tokens``/``labels``):
+
+    tokens          (B, S) int32     input token ids
+    labels          (B, S) int32     next-token targets (-1 = ignore)
+    frontend_feats  (B, T_f, E_f)    precomputed patch/frame embeddings
+                                     (vlm/audio stub frontends)
+    mrope_positions (B, S, 3)        Qwen2-VL t/h/w position ids
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import transformer as stacks
+from repro.models.layers import (
+    apply_frontend_projector,
+    embed_tokens,
+    init_embeddings,
+    init_frontend_projector,
+    lm_logits,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    scan_layers: bool = True
+    remat: str = "none"
+    compute_dtype: Any = jnp.bfloat16
+    # optional PartitionSpec for (batch, seq, d) activations — re-anchors
+    # batch sharding at block boundaries under the FSDP layout
+    act_pspec: Any = None
+
+    # ----- parameters -------------------------------------------------------
+    def init(self, rng: jax.Array) -> Dict[str, Any]:
+        k_emb, k_stack, k_fe = jax.random.split(rng, 3)
+        params = {}
+        params.update(init_embeddings(k_emb, self.cfg))
+        params.update(init_stack(k_stack, self.cfg))
+        if self.cfg.family in ("vlm", "audio"):
+            params.update(init_frontend_projector(k_fe, self.cfg))
+        return params
+
+    # ----- training forward -------------------------------------------------
+    def forward(self, params, batch: Dict[str, Array]) -> Tuple[Array, Array]:
+        """Full-sequence forward. Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        dt = self.compute_dtype
+        tokens = batch["tokens"]
+        x = embed_tokens(params, tokens, cfg, dt)
+
+        memory = None
+        mrope_positions = batch.get("mrope_positions")
+        if cfg.family == "audio":
+            memory = apply_frontend_projector(params, batch["frontend_feats"], dt)
+        elif cfg.family == "vlm":
+            # prepend projected patch embeddings to the text sequence
+            patches = apply_frontend_projector(params, batch["frontend_feats"], dt)
+            x = jnp.concatenate([patches, x], axis=1)
+            if mrope_positions is not None:
+                n_patch = patches.shape[1]
+                patch_pos = _vlm_patch_positions(batch, n_patch)
+                mrope_positions = jnp.concatenate(
+                    [patch_pos, mrope_positions + n_patch], axis=1)
+
+        x, aux = stacks.apply_stack(
+            params, x, cfg, memory=memory,
+            mrope_positions=mrope_positions,
+            scan_layers=self.scan_layers, remat=self.remat,
+            act_pspec=self.act_pspec)
+
+        if cfg.family == "vlm":
+            x = x[:, batch["frontend_feats"].shape[1]:, :]  # text positions only
+        logits = lm_logits(params, x, cfg)
+        return logits, aux
+
+    def loss(self, params, batch: Dict[str, Array]) -> Tuple[Array, Dict[str, Array]]:
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        valid = labels >= 0
+        safe = jnp.where(valid, labels, 0)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(valid.sum(), 1)
+        ce = jnp.where(valid, nll, 0.0).sum() / denom
+        total = ce + aux
+        return total, {"ce": ce, "aux": aux,
+                       "accuracy": (jnp.where(
+                           valid, (jnp.argmax(logits, -1) == labels), False
+                       ).sum() / denom)}
+
+    # ----- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        return stacks.init_stack_cache(self.cfg, batch, max_len, self.compute_dtype)
+
+    def decode_step(self, params, tokens: Array, cache: Any, *,
+                    memory: Optional[Array] = None,
+                    mrope_positions=None) -> Tuple[Array, Any]:
+        """tokens: (B, 1). Returns (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        dt = self.compute_dtype
+        x = embed_tokens(params, tokens, cfg, dt)
+        if cfg.family == "audio" and memory is None:
+            raise ValueError("audio decode requires encoder memory")
+        if cfg.family == "audio":
+            memory = memory.astype(dt)
+        x, cache = stacks.decode_stack(
+            params, x, cache, cfg, memory=memory,
+            scan_layers=self.scan_layers, mrope_positions=mrope_positions)
+        return lm_logits(params, x, cfg), cache
+
+    def encode(self, params, frontend_feats: Array) -> Array:
+        """Audio: run the encoder over projected frame embeddings."""
+        cfg = self.cfg
+        dt = self.compute_dtype
+        mem = apply_frontend_projector(params, frontend_feats, dt)
+
+        def enc_body(h, layer_params):
+            h2, _ = stacks.apply_attn_block(layer_params, h, cfg, causal=False)
+            return h2, None
+
+        if self.scan_layers:
+            mem, _ = jax.lax.scan(enc_body, mem, params["encoder"])
+        else:
+            for i in range(cfg.encoder_layers):
+                layer = jax.tree.map(lambda a: a[i], params["encoder"])
+                mem, _ = enc_body(mem, layer)
+        return mem
+
+    def param_count(self, params) -> int:
+        return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+def _vlm_patch_positions(batch: Dict[str, Array], n_patch: int) -> Array:
+    """M-RoPE ids for a single image's patch grid (t=0, h/w raster order)."""
+    b = batch["tokens"].shape[0]
+    side = max(1, int(n_patch ** 0.5))
+    hh = (jnp.arange(n_patch) // side).astype(jnp.int32)
+    ww = (jnp.arange(n_patch) % side).astype(jnp.int32)
+    tt = jnp.zeros((n_patch,), jnp.int32)
+    pos = jnp.stack([tt, hh, ww], axis=-1)          # (n_patch, 3)
+    return jnp.broadcast_to(pos[None], (b, n_patch, 3))
+
+
+def init_stack(key, cfg: ModelConfig):
+    return stacks.init_stack(key, cfg)
+
+
+def build_model(cfg: ModelConfig, *, scan_layers: bool = True,
+                remat: str = "none", compute_dtype=jnp.bfloat16,
+                act_pspec=None) -> Model:
+    cfg.validate()
+    return Model(cfg=cfg, scan_layers=scan_layers, remat=remat,
+                 compute_dtype=compute_dtype, act_pspec=act_pspec)

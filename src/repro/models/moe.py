@@ -1,0 +1,127 @@
+"""Mixture-of-experts FFN with top-k routing and capacity-based dispatch.
+
+Dispatch uses the Switch-Transformer grouped one-hot formulation: tokens are
+grouped by batch row (the dimension sharded over the ``data`` mesh axis), so
+the (group, token, expert, capacity) dispatch/combine tensors stay local to a
+shard and their memory is bounded by ``tokens_per_group * E * capacity``.
+Under expert parallelism the expert einsums lower to all-to-alls on the
+``model`` axis; under tensor parallelism they stay local with sharded F.
+
+Expert weights are stored stacked:
+
+    moe_router  : (d_model, E)
+    moe_exp_wi  : (E, d_model, F)
+    moe_exp_wg  : (E, d_model, F)   (swiglu gate)
+    moe_exp_wo  : (E, F, d_model)
+
+so the FedAdamW partitioner can block them per (expert, output-neuron-group).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import _dense_init, init_mlp, apply_mlp
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "moe_router": _dense_init(ks[0], (d, m.num_experts), scale=0.02),
+        "moe_exp_wi": _dense_init(ks[1], (m.num_experts, d, f), scale=d ** -0.5),
+        "moe_exp_wg": _dense_init(ks[2], (m.num_experts, d, f), scale=d ** -0.5),
+        "moe_exp_wo": _dense_init(ks[3], (m.num_experts, f, d), scale=f ** -0.5),
+    }
+    if m.num_shared_experts > 0:
+        shared = init_mlp(ks[4], cfg, d_ff=f * m.num_shared_experts)
+        p.update({"moe_shared_" + k.split("mlp_")[1]: v for k, v in shared.items()})
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    m = cfg.moe
+    cap = int(m.capacity_factor * tokens_per_group * m.top_k / m.num_experts)
+    cap = max(cap, m.top_k)
+    return min(cap, tokens_per_group)
+
+
+def apply_moe(params, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """x: (batch, seq, d) — batch is the sharded dimension.
+
+    Tokens are regrouped into routing groups of ≤ ``tokens_per_group`` so the
+    dispatch/combine tensors stay O(group · E · capacity) regardless of the
+    global token count. Returns (output, aux_load_balance_loss).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    total = b * s
+    t = min(m.tokens_per_group, total)
+    # pad token count up to a multiple of the group size
+    g = -(-total // t)
+    pad = g * t - total
+    xt = x.reshape(total, d)
+    if pad:
+        xt = jnp.concatenate([xt, jnp.zeros((pad, d), xt.dtype)], axis=0)
+    xg = xt.reshape(g, t, d)
+    out, aux = _apply_moe_grouped(params, xg, cfg)
+    out = out.reshape(g * t, d)
+    if pad:
+        out = out[:total]
+    return out.reshape(b, s, d), aux
+
+
+def _apply_moe_grouped(params, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    m = cfg.moe
+    g, t, d = x.shape  # routing groups, tokens per group, model dim
+    capacity = moe_capacity(cfg, t)
+
+    probs = jax.nn.softmax(
+        jnp.einsum("gtd,de->gte", x.astype(jnp.float32),
+                   params["moe_router"].astype(jnp.float32)), axis=-1)  # (g,t,E)
+
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)                        # (g,t,k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # (g, t, k, E) one-hot assignment
+    assign = jax.nn.one_hot(top_e, m.num_experts, dtype=jnp.float32)
+    # queue position of each (token, slot) within its expert, per group
+    flat = assign.reshape(g, t * m.top_k, m.num_experts)
+    pos = jnp.cumsum(flat, axis=1) - 1.0
+    pos = pos.reshape(g, t, m.top_k, m.num_experts)
+    keep = (pos < capacity).astype(jnp.float32) * assign                # (g,t,k,E)
+
+    # dispatch (g,t,E,C) and combine (g,t,E,C)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity,
+                            dtype=jnp.float32) * keep[..., None]        # (g,t,k,E,C)
+    dispatch = pos_oh.sum(axis=2)
+    combine = (pos_oh * top_p[..., None, None]).sum(axis=2)
+
+    dt = x.dtype
+    exp_in = jnp.einsum("gtd,gtec->gecd", x.astype(jnp.float32),
+                        dispatch).astype(dt)                            # (g,E,C,d)
+    h = jnp.einsum("gecd,edf->gecf", exp_in, params["moe_exp_wi"].astype(dt))
+    gate = jnp.einsum("gecd,edf->gecf", exp_in, params["moe_exp_wg"].astype(dt))
+    h = jax.nn.silu(gate) * h
+    exp_out = jnp.einsum("gecf,efd->gecd", h, params["moe_exp_wo"].astype(dt))
+    out = jnp.einsum("gecd,gtec->gtd", exp_out.astype(jnp.float32),
+                     combine).astype(dt)
+
+    if m.num_shared_experts > 0:
+        f = m.d_ff_expert or cfg.d_ff
+        shared_params = {("mlp_" + k.split("moe_shared_")[1]): v
+                         for k, v in params.items() if k.startswith("moe_shared_")}
+        out = out + apply_mlp(shared_params, x, cfg).astype(dt)
+
+    # Switch-style load-balance loss: E * sum_e fraction_e * mean_prob_e
+    frac = assign.sum(axis=2).mean(axis=(0, 1))   # (E,) fraction routed per expert
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = m.num_experts * jnp.sum(frac * mean_prob) * m.aux_loss_weight
+    return out, aux

@@ -1,0 +1,244 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+TPU adaptation notes (DESIGN.md §2): the original CUDA kernel interleaves a
+chunked intra-block "attention-like" matmul with a cross-chunk recurrence.
+We keep exactly that block decomposition — intra-chunk terms are dense
+(Q=chunk_size) MXU matmuls, the cross-chunk state carry is a ``lax.scan``
+over chunks (O(S/Q) sequential steps) — rather than a token-level scan,
+which would serialize the MXU.
+
+Parameter layout (names feed the FedAdamW block partitioner):
+
+    ssm_in_proj : (d_model, d_in_proj)   packed [z, x, B, C, dt]
+    ssm_conv    : (conv_width, conv_channels)
+    ssm_A_log   : (H,)
+    ssm_D       : (H,)
+    ssm_dt_bias : (H,)
+    ssm_norm    : (d_inner,)
+    ssm_out_proj: (d_inner, d_model)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import _dense_init, rms_norm_simple
+
+Array = jax.Array
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    # packed input projection: z (d_inner), x (d_inner), B (G*N), C (G*N), dt (H)
+    d_in_proj = 2 * d_inner + 2 * s.ngroups * s.state_dim + nheads
+    conv_channels = d_inner + 2 * s.ngroups * s.state_dim
+    return d_inner, nheads, d_in_proj, conv_channels
+
+
+def init_ssm(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, nheads, d_in_proj, conv_ch = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "ssm_in_proj": _dense_init(ks[0], (cfg.d_model, d_in_proj)),
+        "ssm_conv": _dense_init(ks[1], (s.conv_width, conv_ch), scale=s.conv_width ** -0.5),
+        "ssm_A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)),
+        "ssm_D": jnp.ones((nheads,)),
+        "ssm_dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, nheads))),
+        "ssm_norm": jnp.ones((d_inner,)),
+        "ssm_out_proj": _dense_init(ks[3], (d_inner, cfg.d_model)),
+    }
+
+
+def _split_proj(proj: Array, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, nheads, _, _ = ssm_dims(cfg)
+    gn = s.ngroups * s.state_dim
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt  # xbc: conv input channels, dt: (.., H)
+
+
+def _causal_conv(xbc: Array, weight: Array) -> Array:
+    """Depthwise causal conv along seq. xbc: (b, s, ch); weight: (w, ch)."""
+    w = weight.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(w):
+        out = out + pad[:, i:i + xbc.shape[1], :] * weight[i]
+    return jax.nn.silu(out)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int, initial_state: Array | None = None,
+                cross_chunk: str = "closed") -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x:  (b, s, h, p)   per-head inputs
+    dt: (b, s, h)      positive step sizes
+    A:  (h,)           negative decay rates
+    B:  (b, s, g, n)   input maps (g groups broadcast over h)
+    C:  (b, s, g, n)   output maps
+    Returns (y: (b, s, h, p), final_state: (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[-2], B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)  # (b,nc,q,h,n)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    dA = dtc * A  # (b, nc, q, h) negative
+    dA_cs = jnp.cumsum(dA, axis=2)                     # within-chunk cumsum
+    # intra-chunk: L[i,j] = exp(dA_cs[i] - dA_cs[j]) for i >= j else 0.
+    # Mask BEFORE the exp: for j > i the argument is positive and can
+    # overflow, and even a masked overflow poisons gradients through the
+    # where (inf * 0 -> NaN in the cotangent).
+    li = dA_cs[:, :, :, None, :]                       # (b,nc,q,1,h)
+    lj = dA_cs[:, :, None, :, :]                       # (b,nc,1,q,h)
+    mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    diff = jnp.where(mask[None, None, :, :, None], li - lj, -jnp.inf)
+    L = jnp.exp(diff)
+
+    dx = xc * dtc[..., None]                           # (b,nc,q,h,p)
+    # scores: C_i · B_j  -> (b,nc,q,q,h)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", Cc, Bc)
+    y_intra = jnp.einsum("bcqkh,bcqkh,bckhp->bcqhp", scores, L, dx)
+
+    # per-chunk end states: S_c = sum_j exp(dA_cs[end]-dA_cs[j]) B_j dx_j
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)        # (b,nc,q,h)
+    chunk_states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                              decay_to_end, Bc, dx)            # (b,nc,h,p,n)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                  # (b,nc,h)
+
+    init = (jnp.zeros((b, h, p, n), x.dtype)
+            if initial_state is None else initial_state)
+
+    if cross_chunk == "scan":
+        # sequential recurrence over chunks (the paper's formulation)
+        def carry_fn(state, inp):
+            st_c, dec_c = inp                                  # (b,h,p,n), (b,h)
+            new = state * dec_c[:, :, None, None] + st_c
+            return new, state                                  # state *before* chunk
+        final_state, prev_states = jax.lax.scan(
+            carry_fn, init,
+            (chunk_states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+        prev_states = prev_states.swapaxes(0, 1)               # (b,nc,h,p,n)
+    else:
+        # closed form: prev_state[c] = sum_{j<c} exp(cum[c-1]-cum[j]) S_j
+        #                            + exp(cum[c-1]) init
+        # with cum = cumsum(log chunk decay) and cum[-1] := 0. All decay
+        # ratios are <= 1 (arguments masked to -inf BEFORE exp), so this
+        # is exactly the scan recurrence with no serial dependency and
+        # one (nc x nc) masked einsum instead of nc sequential steps.
+        ld = dA_cs[:, :, -1, :]                                # (b,nc,h) <= 0
+        cum = jnp.cumsum(ld, axis=1)
+        cum_prev = jnp.pad(cum, ((0, 0), (1, 0), (0, 0)))[:, :-1]  # cum[c-1]
+        ratio = cum_prev[:, :, None, :] - cum[:, None, :, :]   # (b,c,j,h)
+        cj_mask = (jnp.arange(nc)[:, None] > jnp.arange(nc)[None, :])
+        ratio = jnp.where(cj_mask[None, :, :, None], ratio, -jnp.inf)
+        W = jnp.exp(ratio)                                     # (b,nc,nc,h)
+        prev_states = jnp.einsum("bcjh,bjhpn->bchpn", W, chunk_states)
+        prev_states = prev_states + (jnp.exp(cum_prev)[..., None, None]
+                                     * init[:, None])
+        final_state = (jnp.einsum(
+            "bjh,bjhpn->bhpn", jnp.exp(cum[:, -1:, :] - cum), chunk_states)
+            + jnp.exp(cum[:, -1])[..., None, None] * init)
+
+    # inter-chunk: y_j += C_j exp(dA_cs[j]) S_prev
+    decay_from_start = jnp.exp(dA_cs)                          # (b,nc,q,h)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                         Cc, decay_from_start, prev_states)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final_state
+
+
+def apply_ssm(params, x: Array, cfg: ModelConfig) -> Array:
+    """Training / prefill forward. x: (b, s, d_model)."""
+    s_cfg = cfg.ssm
+    d_inner, nheads, _, _ = ssm_dims(cfg)
+    dt_ = x.dtype
+    b, s, _ = x.shape
+
+    proj = jnp.einsum("bsd,de->bse", x, params["ssm_in_proj"].astype(dt_))
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc, params["ssm_conv"].astype(dt_))
+    gn = s_cfg.ngroups * s_cfg.state_dim
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["ssm_dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["ssm_A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(b, s, nheads, s_cfg.head_dim).astype(jnp.float32)
+    Bh = B.reshape(b, s, s_cfg.ngroups, s_cfg.state_dim).astype(jnp.float32)
+    Ch = C.reshape(b, s, s_cfg.ngroups, s_cfg.state_dim).astype(jnp.float32)
+
+    chunk = min(s_cfg.chunk_size, s)
+    y, _ = ssd_chunked(xh, dt, A, Bh, Ch, chunk,
+                       cross_chunk=s_cfg.cross_chunk)
+    y = y + params["ssm_D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner).astype(dt_)
+    y = rms_norm_simple(y * jax.nn.silu(z), params["ssm_norm"])
+    return jnp.einsum("bse,ed->bsd", y, params["ssm_out_proj"].astype(dt_))
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_inner, nheads, _, conv_ch = ssm_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, nheads, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_ssm(params, x: Array, cache: dict, cfg: ModelConfig) -> Tuple[Array, dict]:
+    """Single-token decode: O(1) in context length. x: (b, 1, d_model)."""
+    s_cfg = cfg.ssm
+    d_inner, nheads, _, _ = ssm_dims(cfg)
+    dt_ = x.dtype
+    b = x.shape[0]
+
+    proj = jnp.einsum("bsd,de->bse", x, params["ssm_in_proj"].astype(dt_))
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    # causal conv against cached window
+    w = params["ssm_conv"].astype(dt_)
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)     # (b, w, ch)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w))[:, None, :]
+    new_conv = window[:, 1:, :]
+
+    gn = s_cfg.ngroups * s_cfg.state_dim
+    xs, B, C = jnp.split(conv_out, [d_inner, d_inner + gn], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["ssm_dt_bias"].astype(jnp.float32))[:, 0]  # (b,h)
+    A = -jnp.exp(params["ssm_A_log"].astype(jnp.float32))
+
+    xh = xs[:, 0].reshape(b, nheads, s_cfg.head_dim).astype(jnp.float32)
+    Bh = B[:, 0].reshape(b, s_cfg.ngroups, s_cfg.state_dim).astype(jnp.float32)
+    Ch = C[:, 0].reshape(b, s_cfg.ngroups, s_cfg.state_dim).astype(jnp.float32)
+    rep = nheads // s_cfg.ngroups
+    Bh = jnp.repeat(Bh, rep, axis=1)                           # (b,h,n)
+    Ch = jnp.repeat(Ch, rep, axis=1)
+
+    dA = jnp.exp(dt * A)                                       # (b,h)
+    new_state = (cache["state"] * dA[:, :, None, None]
+                 + jnp.einsum("bhp,bhn->bhpn", xh * dt[..., None], Bh))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    y = y + params["ssm_D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(dt_)
+    y = rms_norm_simple(y * jax.nn.silu(z), params["ssm_norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["ssm_out_proj"].astype(dt_))
+    new_cache = {"state": new_state, "conv": new_conv, "index": cache["index"] + 1}
+    return out, new_cache

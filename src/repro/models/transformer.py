@@ -1,0 +1,301 @@
+"""Block assembly and stacks: decoder-only (dense/moe/ssm/vlm), hybrid
+(Zamba2: Mamba2 backbone + shared attention block), encoder-decoder (audio).
+
+Homogeneous stacks store per-layer params stacked along a leading ``L`` axis
+and run under ``lax.scan`` (or a python unroll when ``scan_layers=False`` —
+the dry-run uses the unroll for accurate ``cost_analysis`` trip counts).
+The hybrid stack is heterogenous and always unrolls; its shared attention
+block has a single (unstacked) param set reused every ``hybrid_attn_every``
+layers, matching Zamba2's weight sharing.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_norm, init_mlp, apply_mlp, init_norm
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Single blocks
+# ---------------------------------------------------------------------------
+
+def init_attn_block(key, cfg: ModelConfig, cross: bool = False) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p = {}
+    p.update(attn_mod.init_attention(ks[0], cfg))
+    p["norm_attn"] = init_norm(cfg, cfg.d_model)
+    if cross:
+        p.update(attn_mod.init_attention(ks[2], cfg, cross=True))
+        p["norm_cross"] = init_norm(cfg, cfg.d_model)
+    if cfg.family == "moe":
+        p.update(moe_mod.init_moe(ks[1], cfg))
+    else:
+        p.update(init_mlp(ks[1], cfg))
+    p["norm_mlp"] = init_norm(cfg, cfg.d_model)
+    return p
+
+
+def init_ssm_block(key, cfg: ModelConfig) -> Dict[str, Any]:
+    p = ssm_mod.init_ssm(key, cfg)
+    p["norm_ssm"] = init_norm(cfg, cfg.d_model)
+    return p
+
+
+def apply_attn_block(params, x: Array, cfg: ModelConfig, *,
+                     causal: bool = True,
+                     memory: Optional[Array] = None,
+                     positions: Optional[Array] = None,
+                     mrope_positions: Optional[Array] = None
+                     ) -> Tuple[Array, Array]:
+    """Full-sequence attention block. Returns (x, moe_aux_loss)."""
+    h = apply_norm(params["norm_attn"], x, cfg)
+    if causal:
+        h = attn_mod.causal_attention(params, h, cfg, positions=positions,
+                                      mrope_positions=mrope_positions)
+    else:
+        h = attn_mod.encoder_attention(params, h, cfg)
+    x = x + h
+    if memory is not None:
+        h = apply_norm(params["norm_cross"], x, cfg)
+        x = x + attn_mod.cross_attention(params, h, memory, cfg)
+    h = apply_norm(params["norm_mlp"], x, cfg)
+    if cfg.family == "moe":
+        h, aux = moe_mod.apply_moe(params, h, cfg)
+    else:
+        h, aux = apply_mlp(params, h, cfg), jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def apply_ssm_block(params, x: Array, cfg: ModelConfig) -> Array:
+    h = apply_norm(params["norm_ssm"], x, cfg)
+    return x + ssm_mod.apply_ssm(params, h, cfg)
+
+
+def decode_attn_block(params, x: Array, cache, cfg: ModelConfig, *,
+                      memory: Optional[Array] = None,
+                      mrope_positions=None):
+    h = apply_norm(params["norm_attn"], x, cfg)
+    h, cache = attn_mod.decode_attention(params, h, cache, cfg,
+                                         mrope_positions=mrope_positions)
+    x = x + h
+    if memory is not None:
+        h = apply_norm(params["norm_cross"], x, cfg)
+        x = x + attn_mod.cross_attention(params, h, memory, cfg)
+    h = apply_norm(params["norm_mlp"], x, cfg)
+    if cfg.family == "moe":
+        h, _ = moe_mod.apply_moe(params, h, cfg)
+    else:
+        h = apply_mlp(params, h, cfg)
+    return x + h, cache
+
+
+def decode_ssm_block(params, x: Array, cache, cfg: ModelConfig):
+    h = apply_norm(params["norm_ssm"], x, cfg)
+    h, cache = ssm_mod.decode_ssm(params, h, cache, cfg)
+    return x + h, cache
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def _stacked_init(key, n: int, init_fn) -> Dict[str, Any]:
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_stack(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """Parameters for the decoder stack (+ encoder for audio)."""
+    ks = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    if cfg.family == "hybrid":
+        kinds = cfg.layer_kinds()
+        lkeys = jax.random.split(ks[0], len(kinds))
+        layers = {}
+        for i, kind in enumerate(kinds):
+            if kind == "ssm":
+                layers[f"layer_{i:03d}"] = init_ssm_block(lkeys[i], cfg)
+            elif not cfg.hybrid_shared_attn:
+                layers[f"layer_{i:03d}"] = init_attn_block(lkeys[i], cfg)
+        params["layers"] = layers
+        if cfg.hybrid_shared_attn:
+            params["shared_attn"] = init_attn_block(ks[1], cfg)
+    elif cfg.family == "ssm":
+        params["layers"] = _stacked_init(
+            ks[0], cfg.num_layers, lambda k: init_ssm_block(k, cfg))
+    elif cfg.family == "audio":
+        params["encoder"] = _stacked_init(
+            ks[1], cfg.encoder_layers, lambda k: init_attn_block(k, cfg))
+        params["layers"] = _stacked_init(
+            ks[0], cfg.num_layers, lambda k: init_attn_block(k, cfg, cross=True))
+    else:  # dense / moe / vlm
+        params["layers"] = _stacked_init(
+            ks[0], cfg.num_layers, lambda k: init_attn_block(k, cfg))
+    params["norm_final"] = init_norm(cfg, cfg.d_model)
+    return params
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _constrain(x: Array, act_pspec) -> Array:
+    """Re-anchor activation sharding (batch, seq, d). GSPMD propagation can
+    drop the batch sharding deep inside scanned layers under the FSDP
+    (client_sequential) layout — MaxText-style explicit constraints at the
+    block boundaries keep it (EXPERIMENTS.md §Dry-run memory iteration)."""
+    if act_pspec is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, act_pspec)
+
+
+def apply_stack(params, x: Array, cfg: ModelConfig, *,
+                memory: Optional[Array] = None,
+                positions: Optional[Array] = None,
+                mrope_positions=None,
+                scan_layers: bool = True,
+                remat: str = "none",
+                act_pspec=None) -> Tuple[Array, Array]:
+    """Run the decoder stack over a full sequence. Returns (x, aux_loss)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    x = _constrain(x, act_pspec)
+
+    if cfg.family == "hybrid":
+        kinds = cfg.layer_kinds()
+        for i, kind in enumerate(kinds):
+            if kind == "ssm":
+                blk = _maybe_remat(
+                    lambda p, h: apply_ssm_block(p, h, cfg), remat)
+                x = blk(params["layers"][f"layer_{i:03d}"], x)
+            else:
+                p_attn = (params["shared_attn"] if cfg.hybrid_shared_attn
+                          else params["layers"][f"layer_{i:03d}"])
+                blk = _maybe_remat(
+                    lambda p, h: apply_attn_block(p, h, cfg,
+                                                  positions=positions)[0], remat)
+                x = blk(p_attn, x)
+            x = _constrain(x, act_pspec)
+        x = apply_norm(params["norm_final"], x, cfg)
+        return x, aux_total
+
+    if cfg.family == "audio":
+        # encoder (bidirectional)
+        def enc_body(h, layer_params):
+            h2, _ = apply_attn_block(layer_params, h, cfg, causal=False)
+            return h2, None
+        enc_in = memory  # projected frame embeddings
+        if scan_layers:
+            enc_out, _ = jax.lax.scan(
+                _maybe_remat(enc_body, remat), enc_in, params["encoder"])
+        else:
+            enc_out = enc_in
+            for i in range(cfg.encoder_layers):
+                layer = jax.tree.map(lambda a: a[i], params["encoder"])
+                enc_out, _ = enc_body(enc_out, layer)
+        memory = enc_out
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h2, a = apply_attn_block(layer_params, h, cfg, memory=memory,
+                                 positions=positions,
+                                 mrope_positions=mrope_positions)
+        return (_constrain(h2, act_pspec), aux + a), None
+
+    if cfg.family == "ssm":
+        def body(carry, layer_params):  # noqa: F811
+            h, aux = carry
+            h2 = _constrain(apply_ssm_block(layer_params, h, cfg), act_pspec)
+            return (h2, aux), None
+
+    if scan_layers:
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(body, remat), (x, aux_total), params["layers"])
+    else:
+        for i in range(cfg.num_layers):
+            layer = jax.tree.map(lambda a: a[i], params["layers"])
+            (x, aux_total), _ = _maybe_remat(body, remat)((x, aux_total), layer)
+
+    x = apply_norm(params["norm_final"], x, cfg)
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Decode stacks (single-token step against per-layer caches)
+# ---------------------------------------------------------------------------
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    def attn_cache(_):
+        return attn_mod.init_kv_cache(cfg, batch, max_len, dtype)
+
+    def ssm_cache(_):
+        return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+
+    if cfg.family == "hybrid":
+        caches = {}
+        for i, kind in enumerate(cfg.layer_kinds()):
+            caches[f"layer_{i:03d}"] = (ssm_cache(None) if kind == "ssm"
+                                        else attn_cache(None))
+        return caches
+    if cfg.family == "ssm":
+        return jax.vmap(lambda i: ssm_cache(None))(jnp.arange(cfg.num_layers))
+    return jax.vmap(lambda i: attn_cache(None))(jnp.arange(cfg.num_layers))
+
+
+def decode_stack(params, x: Array, caches, cfg: ModelConfig, *,
+                 memory: Optional[Array] = None,
+                 scan_layers: bool = True,
+                 mrope_positions=None) -> Tuple[Array, Any]:
+    if cfg.family == "hybrid":
+        new_caches = {}
+        for i, kind in enumerate(cfg.layer_kinds()):
+            name = f"layer_{i:03d}"
+            if kind == "ssm":
+                x, new_caches[name] = decode_ssm_block(
+                    params["layers"][name], x, caches[name], cfg)
+            else:
+                p_attn = (params["shared_attn"] if cfg.hybrid_shared_attn
+                          else params["layers"][name])
+                x, new_caches[name] = decode_attn_block(
+                    p_attn, x, caches[name], cfg)
+        x = apply_norm(params["norm_final"], x, cfg)
+        return x, new_caches
+
+    if cfg.family == "ssm":
+        def body(h, inp):
+            layer_params, cache = inp
+            h2, c2 = decode_ssm_block(layer_params, h, cache, cfg)
+            return h2, c2
+    else:
+        def body(h, inp):
+            layer_params, cache = inp
+            h2, c2 = decode_attn_block(layer_params, h, cache, cfg,
+                                       memory=memory,
+                                       mrope_positions=mrope_positions)
+            return h2, c2
+
+    if scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            layer = jax.tree.map(lambda a: a[i], params["layers"])
+            cache = jax.tree.map(lambda a: a[i], caches)
+            x, c2 = body(x, (layer, cache))
+            outs.append(c2)
+        new_caches = jax.tree.map(lambda *cs: jnp.stack(cs), *outs)
+    x = apply_norm(params["norm_final"], x, cfg)
+    return x, new_caches

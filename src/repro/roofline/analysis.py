@@ -1,0 +1,199 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` supplies HLO_FLOPs / bytes-accessed; collective bytes
+are parsed from the (post-SPMD-partitioning) compiled HLO text by summing
+the output shapes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op. Scan bodies (while loops) appear once
+in the HLO; ``trip_multipliers`` lets the caller scale body-counted ops by
+the known static trip counts (K local steps, L scanned layers) — recorded
+per experiment in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (per chip), per the assignment spec.
+HW = {
+    "peak_flops": 197e12,     # bf16 FLOP/s
+    "hbm_bw": 819e9,          # bytes/s
+    "ici_bw": 50e9,           # bytes/s per link (~4 links usable per chip)
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO op line: `%name = f32[1,2,3]{...} all-reduce(...)` (possibly a
+# tuple type `(f32[2], f32[4])`)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z0-9-]+)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str,
+                              trip_multipliers: Optional[Dict[str, float]]
+                              = None) -> Dict[str, float]:
+    """Sum output bytes per collective kind over the HLO module text.
+
+    ``trip_multipliers``: {computation_name_substring: multiplier} — ops
+    inside a while-body computation whose name matches get scaled (scan
+    bodies execute trip_count times but appear once in text).
+    """
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    current_mult = 1.0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # computation headers look like: `%body.123 (arg: ...) -> ... {`
+        if (stripped.startswith("%") or stripped.startswith("ENTRY")) \
+                and stripped.endswith("{"):
+            current_mult = 1.0
+            if trip_multipliers:
+                for frag, mult in trip_multipliers.items():
+                    if frag in stripped.split("(")[0]:
+                        current_mult = mult
+                        break
+            continue
+        m = _OP_RE.search(stripped)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        for c in _COLLECTIVES:
+            if op.startswith(c):
+                out[c] += _shape_bytes(type_str) * current_mult
+                break
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * HW["peak_flops"])
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * HW["hbm_bw"])
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chips * HW["ici_bw"])
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes, "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def roofline_terms(cost: Dict[str, float], collective_bytes: float,
+                   chips: int, *, flops_multiplier: float = 1.0,
+                   bytes_multiplier: float = 1.0) -> RooflineTerms:
+    """cost: ``compiled.cost_analysis()`` dict. Multipliers fold in scan
+    trip counts the HLO-level analysis undercounts (documented per run)."""
+    return RooflineTerms(
+        flops=float(cost.get("flops", 0.0)) * flops_multiplier,
+        hbm_bytes=float(cost.get("bytes accessed", 0.0)) * bytes_multiplier,
+        collective_bytes=float(collective_bytes),
+        chips=chips,
+    )
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE) + param counting
+# ---------------------------------------------------------------------------
+
+def count_params(cfg) -> Dict[str, float]:
+    """Analytic parameter counts (total and active-per-token) per config."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    a = cfg.attention
+    hd = cfg.head_dim
+    attn = d * a.num_heads * hd + 2 * d * a.num_kv_heads * hd \
+        + a.num_heads * hd * d
+    mlp_dense = 3 * d * f if cfg.mlp_type == "swiglu" else 2 * d * f
+    total = 0.0
+    active = 0.0
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        per_layer = attn + mlp_dense
+        total = cfg.num_layers * per_layer
+        if cfg.family == "audio":
+            total += cfg.encoder_layers * (attn + mlp_dense) \
+                + cfg.num_layers * attn  # cross-attention
+        active = total
+    elif cfg.family == "moe":
+        m = cfg.moe
+        fe = m.d_ff_expert or f
+        expert = 3 * d * fe
+        shared = 3 * d * fe * m.num_shared_experts
+        router = d * m.num_experts
+        per_layer_total = attn + m.num_experts * expert + shared + router
+        per_layer_active = attn + m.top_k * expert + shared + router
+        total = cfg.num_layers * per_layer_total
+        active = cfg.num_layers * per_layer_active
+    elif cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        d_inner = s.expand * d
+        nheads = d_inner // s.head_dim
+        d_in_proj = 2 * d_inner + 2 * s.ngroups * s.state_dim + nheads
+        ssm_block = d * d_in_proj + d_inner * d \
+            + s.conv_width * (d_inner + 2 * s.ngroups * s.state_dim) \
+            + 3 * nheads + d_inner
+        if cfg.family == "ssm":
+            total = cfg.num_layers * ssm_block
+        else:
+            kinds = cfg.layer_kinds()
+            n_ssm = sum(1 for k in kinds if k == "ssm")
+            shared_attn = attn + mlp_dense
+            total = n_ssm * ssm_block + (
+                shared_attn if cfg.hybrid_shared_attn
+                else (len(kinds) - n_ssm) * shared_attn)
+        active = total
+    total += emb
+    active += emb
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg, tokens: float) -> float:
+    """6 * N_active * D (forward+backward) — the standard training-FLOPs
+    yardstick; for forward-only divide by 3."""
+    return 6.0 * count_params(cfg)["active"] * tokens

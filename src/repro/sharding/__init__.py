@@ -1,0 +1,14 @@
+"""Sharding rules: parameter-tree -> PartitionSpec for the production mesh."""
+from repro.sharding.specs import (
+    param_pspecs,
+    state_pspecs,
+    batch_pspec,
+    cache_pspecs,
+    client_axes,
+    fsdp_axes,
+)
+
+__all__ = [
+    "param_pspecs", "state_pspecs", "batch_pspec", "cache_pspecs",
+    "client_axes", "fsdp_axes",
+]

@@ -1,0 +1,276 @@
+"""Parameter / state / batch PartitionSpec rules.
+
+The production mesh (launch/mesh.py) is ``("data", "model")`` single-pod or
+``("pod", "data", "model")`` multi-pod. Rules:
+
+``client_parallel`` layout
+    Params replicated over the client axes (``pod``+``data``) and
+    tensor-parallel over ``model``; the per-round batch carries a leading
+    client axis sharded over the client axes. The cross-client mean of the
+    uploads is the all-reduce.
+
+``client_sequential`` layout
+    One client at a time owns the whole mesh: params are tensor-parallel
+    over ``model`` AND fully-sharded (FSDP/ZeRO-3 style) over the client
+    axes; the local batch's batch dim is sharded over the client axes.
+
+Model-axis rules per leaf name (head-factored layouts from
+repro.models.attention):
+
+    attn_wq  (D, H, hd)   -> shard H        (column / head parallel)
+    attn_wk/v(D, KV, hd)  -> shard KV if divisible, else hd
+    attn_wo  (H, hd, D)   -> shard H        (row parallel)
+    mlp_wi/wg(D, F)       -> shard F
+    mlp_wo   (F, D)       -> shard F
+    moe_exp_*(E, ., .)    -> shard E (expert parallel) if divisible,
+                             else the F dim (tensor parallel inside experts)
+    embed    (V, D)       -> shard V
+    output   (D, V)       -> shard V
+    ssm_in/out_proj       -> shard the d_inner dim
+    ssm_conv (w, CH)      -> shard CH
+    small 1-D params      -> replicated
+
+Every rule checks divisibility against the actual mesh axis size and falls
+back to replication — no architecture can fail to lower because of an
+indivisible axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import FedConfig, ModelConfig
+
+MODEL_AXIS = "model"
+
+
+def client_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that host clients / data parallelism."""
+    return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return client_axes(mesh)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return last.key if hasattr(last, "key") else str(last)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(k.key if hasattr(k, "key") else str(getattr(k, "idx", k))
+                 for k in path)
+
+
+def _model_dim_rule(name: str, shape: Tuple[int, ...], off: int,
+                    cfg: ModelConfig, msize: int) -> Optional[int]:
+    """Return the (absolute) axis index to shard over ``model``, or None."""
+    nd = len(shape) - off
+
+    def ok(rel_axis: int) -> bool:
+        return shape[rel_axis + off] % msize == 0
+
+    def pick(*rel_axes: int) -> Optional[int]:
+        for a in rel_axes:
+            if 0 <= a < nd and ok(a):
+                return a + off
+        return None
+
+    if name.endswith(("attn_wq",)) and nd == 3:
+        return pick(1, 0)                       # heads, else d_model rows
+    if name.endswith(("attn_wk", "attn_wv")) and nd == 3:
+        return pick(1, 2, 0)                    # kv heads, else head_dim
+    if name.endswith("attn_wo") and nd == 3:
+        return pick(0, 2)                       # heads (row parallel)
+    if name.endswith(("attn_bq", "attn_bk", "attn_bv")) and nd == 2:
+        return pick(0, 1)
+    if name.endswith(("mlp_wi", "mlp_wg")) and nd == 2:
+        return pick(1)
+    if name.endswith("mlp_wo") and nd == 2:
+        return pick(0)
+    if name.startswith("moe_exp_") and nd == 3:
+        if cfg.moe_shard == "ep":
+            a = pick(0)
+            if a is not None:
+                return a
+        # tensor-parallel inside experts: F is axis 2 for wi/wg, 1 for wo
+        return pick(2 if name.endswith(("wi", "wg")) else 1)
+    if name.startswith("moe_shared_") and nd == 2:
+        return pick(1 if name.endswith("wi") or name.endswith("wg") else 0)
+    if name.endswith("moe_router") and nd == 2:
+        return None                             # (D, E): tiny, replicate
+    if name.endswith("embed_tokens") and nd == 2:
+        return pick(0)                          # vocab rows
+    if name.endswith("output_head") and nd == 2:
+        return pick(1)                          # vocab cols
+    if name.endswith("ssm_in_proj") and nd == 2:
+        return pick(1)
+    if name.endswith("ssm_out_proj") and nd == 2:
+        return pick(0)
+    if name.endswith("ssm_conv") and nd == 2:
+        return pick(1)
+    if name.endswith("frontend_proj") and nd == 2:
+        return pick(1)
+    return None
+
+
+def _fsdp_dim_rule(shape: Tuple[int, ...], taken: Optional[int],
+                   fsize: int) -> Optional[int]:
+    """Pick the largest remaining axis divisible by the FSDP size."""
+    best, best_dim = None, 0
+    for a, d in enumerate(shape):
+        if a == taken:
+            continue
+        if d % fsize == 0 and d > best_dim:
+            best, best_dim = a, d
+    return best
+
+
+def leaf_pspec(path, shape: Tuple[int, ...], cfg: ModelConfig, mesh: Mesh,
+               fed: Optional[FedConfig] = None) -> P:
+    names = _path_names(path)
+    name = _leaf_name(path)
+    # stacked scan-layer leading axis (layers/encoder stacks, non-hybrid)
+    stacked = (cfg.family != "hybrid" and len(names) >= 2
+               and names[0] in ("layers", "encoder"))
+    off = 1 if stacked else 0
+    msize = mesh.shape[MODEL_AXIS] if MODEL_AXIS in mesh.axis_names else 1
+
+    spec: list = [None] * len(shape)
+    taken = _model_dim_rule(name, shape, off, cfg, msize)
+    if taken is not None:
+        spec[taken] = MODEL_AXIS
+
+    sequential = fed is not None and fed.layout == "client_sequential"
+    if sequential:
+        fax = fsdp_axes(mesh)
+        if fax:
+            fsize = _axis_size(mesh, tuple(fax))
+            a = _fsdp_dim_rule(shape, taken, fsize)
+            if a is not None:
+                spec[a] = fax if len(fax) > 1 else fax[0]
+    return P(*spec)
+
+
+def param_pspecs(params, cfg: ModelConfig, mesh: Mesh,
+                 fed: Optional[FedConfig] = None):
+    """Pytree of PartitionSpec matching ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = [leaf_pspec(kp, tuple(x.shape), cfg, mesh, fed)
+              for kp, x in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def state_pspecs(sstate, params_specs, params, cfg: ModelConfig, mesh: Mesh,
+                 fed: Optional[FedConfig] = None):
+    """Server-state PartitionSpecs: param-shaped leaves inherit the param
+    spec; everything else (scalars, block-mean vectors, per-client tables)
+    is replicated."""
+    flat_params = {}
+    for kp, spec in jax.tree_util.tree_flatten_with_path(params_specs)[0]:
+        flat_params[_path_names(kp)] = spec
+    param_shapes = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        param_shapes[_path_names(kp)] = tuple(leaf.shape)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(sstate)
+    out = []
+    for kp, leaf in flat:
+        # fields like delta_g/v_bar/momentum/server_m mirror the param tree:
+        # strip the leading field name and look the rest up; reuse the param
+        # spec only when the shapes actually match (block-mean vectors don't)
+        sub = _path_names(kp)[1:]
+        if sub in flat_params and param_shapes[sub] == tuple(leaf.shape):
+            out.append(flat_params[sub])
+        else:
+            out.append(P(*([None] * leaf.ndim)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_pspec(mesh: Mesh, fed: Optional[FedConfig] = None,
+                *, rank: int = 4) -> P:
+    """Per-round batch leaves of the given rank.
+
+    Leaves are (S, K, b, ...) — or (S, K, mb, b_micro, ...) with gradient
+    micro-batching. client_parallel shards the client axis S; sequential
+    shards the batch axis b / b_micro over the client axes.
+    """
+    cax = client_axes(mesh)
+    ax = cax if len(cax) > 1 else (cax[0] if cax else None)
+    spec = [None] * rank
+    if fed is not None and fed.layout == "client_sequential":
+        b_axis = 3 if (fed.grad_microbatches > 1) else 2
+        spec[b_axis] = ax
+    else:
+        spec[0] = ax
+    return P(*spec)
+
+
+def eval_batch_pspec(mesh: Mesh) -> P:
+    cax = client_axes(mesh)
+    ax = cax if len(cax) > 1 else (cax[0] if cax else None)
+    return P(ax, None)
+
+
+def cache_pspecs(cache, cfg: ModelConfig, mesh: Mesh):
+    """KV-cache / SSM-state PartitionSpecs for serving.
+
+    KV leaves are (L?, B, len, KV, hd) (leading stacked-layer axis when the
+    stack is scanned). Batch shards over the client axes; KV heads shard
+    over ``model`` when divisible, else head_dim. SSM state (L?, B, H, P, N)
+    shards B over client axes and H over model when divisible.
+    """
+    msize = mesh.shape[MODEL_AXIS] if MODEL_AXIS in mesh.axis_names else 1
+    cax = client_axes(mesh)
+    bax = cax if len(cax) > 1 else (cax[0] if cax else None)
+    bsize = _axis_size(mesh, tuple(cax)) if cax else 1
+
+    # base ranks: k/v (B,len,KV,hd)=4, state (B,H,P,N)=4, conv (B,w,CH)=3;
+    # scanned stacks prepend a layer axis (+1)
+    base_rank = {"k": 4, "v": 4, "state": 4, "conv": 3}
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if name == "index" or nd <= 1 or name not in base_rank:
+            return P(*([None] * nd))
+        spec = [None] * nd
+        off = nd - base_rank[name]          # 1 when layer-stacked, else 0
+        b_ax = off
+        if bax is not None and shape[b_ax] % bsize == 0 and bsize > 1:
+            spec[b_ax] = bax
+        if name in ("k", "v"):
+            kv_ax, hd_ax = nd - 2, nd - 1
+            if shape[kv_ax] % msize == 0 and msize > 1:
+                spec[kv_ax] = MODEL_AXIS
+            elif shape[hd_ax] % msize == 0 and msize > 1:
+                spec[hd_ax] = MODEL_AXIS
+        elif name == "state":                     # (.., H, P, N)
+            h_ax = nd - 3
+            if shape[h_ax] % msize == 0 and msize > 1:
+                spec[h_ax] = MODEL_AXIS
+        elif name == "conv":                      # (.., w, CH)
+            ch_ax = nd - 1
+            if shape[ch_ax] % msize == 0 and msize > 1:
+                spec[ch_ax] = MODEL_AXIS
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(kp, leaf) for kp, leaf in flat])
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,69 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets 512 in its own
+# process); make sure no stray XLA_FLAGS leak in.
+os.environ.pop("XLA_FLAGS", None)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (AttentionConfig, FedConfig, ModelConfig, MoEConfig,
+                          SSMConfig)
+from repro.models import build_model
+
+jax.config.update("jax_enable_x64", False)
+
+
+def tiny_config(family: str = "dense", **kw) -> ModelConfig:
+    base = dict(
+        name=f"tiny-{family}", family=family, num_layers=2, d_model=64,
+        d_ff=128, vocab_size=64,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=2))
+    if family == "moe":
+        base["moe"] = MoEConfig(num_experts=4, top_k=2, d_ff_expert=96)
+    if family in ("ssm", "hybrid"):
+        base["ssm"] = SSMConfig(state_dim=16, head_dim=32, chunk_size=16)
+    if family == "hybrid":
+        base["hybrid_attn_every"] = 2
+    if family == "audio":
+        base["encoder_layers"] = 2
+        base["frontend_embed_dim"] = 48
+        base["frontend_tokens_per_sample"] = 8
+    if family == "vlm":
+        base["frontend_embed_dim"] = 48
+        base["frontend_tokens_per_sample"] = 8
+    base.update(kw)
+    cfg = ModelConfig(**base)
+    cfg.validate()
+    return cfg
+
+
+def tiny_batch(cfg: ModelConfig, batch: int = 2, seq: int = 32, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    out = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+    }
+    if cfg.family in ("vlm", "audio"):
+        out["frontend_feats"] = jnp.asarray(rng.normal(size=(
+            batch, cfg.frontend_tokens_per_sample,
+            cfg.frontend_embed_dim)), jnp.float32)
+    return out
+
+
+@pytest.fixture(scope="session")
+def families():
+    return ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+def build_tiny(family: str, **kw):
+    cfg = tiny_config(family, **kw)
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params

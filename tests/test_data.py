@@ -1,0 +1,75 @@
+"""Data pipeline: Dirichlet partitioning properties + batch assembly."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import make_task, round_batches, sample_clients
+from repro.data.synthetic import dirichlet_label_partition
+
+
+def _label_skew(labels, parts, num_classes):
+    """Mean total-variation distance between client label dists and global."""
+    global_p = np.bincount(labels, minlength=num_classes) / len(labels)
+    tv = []
+    for idx in parts:
+        if len(idx) == 0:
+            continue
+        p = np.bincount(labels[idx], minlength=num_classes) / len(idx)
+        tv.append(0.5 * np.abs(p - global_p).sum())
+    return float(np.mean(tv))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_partition_covers_everything(seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 500)
+    parts = dirichlet_label_partition(labels, 8, 0.5, rng)
+    allidx = np.concatenate(parts)
+    assert set(allidx.tolist()) <= set(range(500))
+    # every sample assigned at least once (padding may duplicate a few)
+    assert len(set(allidx.tolist())) >= 490
+
+
+def test_lower_alpha_is_more_heterogeneous():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 4000)
+    skews = {}
+    for alpha in (0.1, 10.0):
+        r = np.random.default_rng(1)
+        parts = dirichlet_label_partition(labels, 16, alpha, r)
+        skews[alpha] = _label_skew(labels, parts, 10)
+    assert skews[0.1] > 2 * skews[10.0], skews
+
+
+@pytest.mark.parametrize("kind", ["class_lm", "lm"])
+def test_task_shapes(kind):
+    task = make_task(kind, vocab_size=64, seq_len=16, num_samples=512,
+                     num_clients=8, seed=0)
+    rng = np.random.default_rng(0)
+    b = task.client_batch(3, 5, rng)
+    assert b["tokens"].shape == (5, 16)
+    assert b["labels"].shape == (5, 16)
+    assert b["tokens"].max() < 64
+    tb = task.test_batch(7)
+    assert tb["tokens"].shape[1] == 16
+
+
+def test_class_lm_labels_masked_except_last():
+    task = make_task("class_lm", vocab_size=64, seq_len=16, num_samples=128,
+                     num_clients=4, seed=1)
+    rng = np.random.default_rng(0)
+    b = task.client_batch(0, 8, rng)
+    assert (b["labels"][:, :-1] == -1).all()
+    assert (b["labels"][:, -1] >= 64 - task.num_classes).all()
+
+
+def test_round_batches_layout():
+    task = make_task("class_lm", vocab_size=64, seq_len=16, num_samples=256,
+                     num_clients=8, seed=0)
+    rng = np.random.default_rng(0)
+    cids = sample_clients(8, 4, rng)
+    assert len(set(cids.tolist())) == 4
+    rb = round_batches(task, cids, 3, 5, rng)
+    assert rb["tokens"].shape == (4, 3, 5, 16)
+    assert rb["labels"].shape == (4, 3, 5, 16)

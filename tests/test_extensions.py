@@ -1,0 +1,74 @@
+"""Beyond-paper extensions: FedLAMB, FedLion, int8 uploads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import build_tiny
+from repro.config import FedConfig
+from repro.core import build_fed_state, make_round_fn
+from repro.core.extensions import fake_quant_int8, wire_bytes
+
+
+def _run_rounds(algorithm, rounds=4, lr=1e-3):
+    cfg, model, _ = build_tiny("dense")
+    fed = FedConfig(algorithm=algorithm, num_clients=4, clients_per_round=4,
+                    local_steps=6, lr=lr)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    round_fn = jax.jit(make_round_fn(model, fed, specs, alg=alg))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (4, 6, 4, 16))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32),
+             "labels": jnp.asarray(np.roll(toks, -1, -1), jnp.int32)}
+    losses = []
+    for r in range(rounds):
+        params, sstate, m = round_fn(params, sstate, batch,
+                                     jnp.arange(4, dtype=jnp.int32),
+                                     jnp.asarray(r))
+        losses.append(float(m["loss_mean"]))
+    assert all(np.isfinite(losses))
+    return losses, params
+
+
+@pytest.mark.parametrize("algorithm,lr",
+                         [("fedlamb", 1e-3), ("fedlion", 3e-4),
+                          ("fedadamw+int8", 1e-3), ("fedlion+int8", 3e-4)])
+def test_extension_algorithms_train(algorithm, lr):
+    losses, params = _run_rounds(algorithm, lr=lr)
+    assert losses[-1] < losses[0], (algorithm, losses)
+    for p in jax.tree.leaves(params):
+        assert bool(jnp.all(jnp.isfinite(p)))
+
+
+def test_fake_quant_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)), jnp.float32)
+    q = fake_quant_int8(x)
+    max_err = float(jnp.max(jnp.abs(q - x)))
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert max_err <= scale * 0.5 + 1e-7
+
+
+def test_fake_quant_levels():
+    x = jnp.asarray([0.0, 1.0, -1.0, 0.5], jnp.float32)
+    q = fake_quant_int8(x)
+    # at most 255 levels, symmetric, preserves extremes exactly
+    np.testing.assert_allclose(float(q[1]), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(float(q[2]), -1.0, rtol=1e-6)
+
+
+def test_wire_bytes_accounting():
+    up = {"delta": {"w": jnp.zeros((100,), jnp.float32)},
+          "v_mean": jnp.zeros((10,), jnp.float32)}
+    full = wire_bytes(up, delta_int8=False)
+    q = wire_bytes(up, delta_int8=True)
+    assert full == 100 * 4 + 10 * 4
+    assert q == 100 + 4 + 10 * 4
+
+
+def test_int8_quality_close_to_fp32():
+    """int8 uploads must not materially change the training trajectory."""
+    l_fp, _ = _run_rounds("fedadamw")
+    l_q, _ = _run_rounds("fedadamw+int8")
+    assert abs(l_fp[-1] - l_q[-1]) < 0.15 * abs(l_fp[-1]), (l_fp, l_q)

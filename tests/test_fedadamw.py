@@ -1,0 +1,186 @@
+"""Algorithm-level unit tests for FedAdamW and the seven baselines."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import build_tiny, tiny_batch
+from repro.config import FedConfig
+from repro.core import (build_fed_state, get_algorithm, init_server_state,
+                        make_round_fn, upload_bytes)
+from repro.core.partition import build_block_specs
+
+
+def _one_round(model, cfg, fed, *, seed=0, rounds=1, batches_seed=0,
+               fixed_batch=False):
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(seed), cfg=cfg)
+    round_fn = jax.jit(make_round_fn(model, fed, specs, alg=alg))
+    rng = np.random.default_rng(batches_seed)
+    s, k, b, seq = fed.clients_per_round, fed.local_steps, 4, 16
+    toks = rng.integers(0, cfg.vocab_size, (s, k, b, seq))
+    losses = []
+    for r in range(rounds):
+        if not fixed_batch and r > 0:
+            toks = rng.integers(0, cfg.vocab_size, (s, k, b, seq))
+        batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                 "labels": jnp.asarray(np.roll(toks, -1, -1), jnp.int32)}
+        cids = jnp.arange(s, dtype=jnp.int32)
+        params, sstate, m = round_fn(params, sstate, batch, cids,
+                                     jnp.asarray(r))
+        losses.append(float(m["loss_mean"]))
+    m = dict(m)
+    m["losses"] = losses
+    return params, sstate, m
+
+
+ALGOS = ["fedadamw", "fedavg", "scaffold", "fedcm", "fedadam", "fedlada",
+         "local_adam", "local_adamw"]
+
+
+@pytest.mark.parametrize("algorithm", ALGOS)
+def test_every_algorithm_round_is_finite(algorithm):
+    cfg, model, _ = build_tiny("dense")
+    fed = FedConfig(algorithm=algorithm, num_clients=4, clients_per_round=2,
+                    local_steps=3, lr=1e-3)
+    params, sstate, m = _one_round(model, cfg, fed)
+    assert np.isfinite(float(m["loss_mean"]))
+    for p in jax.tree.leaves(params):
+        assert bool(jnp.all(jnp.isfinite(p)))
+
+
+def test_loss_decreases_over_rounds():
+    """On a fixed (memorizable) batch, FedAdamW's round losses must fall."""
+    cfg, model, _ = build_tiny("dense")
+    fed = FedConfig(algorithm="fedadamw", num_clients=4, clients_per_round=4,
+                    local_steps=8, lr=3e-3)
+    _, _, m = _one_round(model, cfg, fed, rounds=5, fixed_batch=True)
+    assert m["losses"][-1] < m["losses"][0]
+
+
+def test_fedadamw_v_warm_start_progresses_t():
+    cfg, model, _ = build_tiny("dense")
+    fed = FedConfig(algorithm="fedadamw", num_clients=2, clients_per_round=2,
+                    local_steps=3, lr=1e-3)
+    _, sstate, _ = _one_round(model, cfg, fed, rounds=2)
+    assert int(sstate["t"]) == 2 * fed.local_steps
+    # v_bar must be non-zero after training (second moments accumulated)
+    vb = jnp.concatenate([v.reshape(-1) for v in
+                          jax.tree.leaves(sstate["v_bar"])])
+    assert float(jnp.max(vb)) > 0.0
+
+
+def test_upload_bytes_ordering_matches_table7():
+    """mean_v (ours) uploads O(d + B); full_v O(2d); full_vm O(3d)."""
+    cfg, model, _ = build_tiny("dense")
+    sizes = {}
+    for agg in ("none", "mean_v", "full_v", "full_vm"):
+        fed = FedConfig(algorithm="fedadamw", v_aggregation=agg,
+                        num_clients=2, clients_per_round=2, local_steps=1)
+        params, specs, alg, sstate = build_fed_state(
+            model, fed, jax.random.key(0), cfg=cfg)
+        up = jax.eval_shape(
+            lambda: alg.upload(params,
+                               alg.init_client(params, sstate, fed,
+                                               specs=specs), specs, fed))
+        sizes[agg] = upload_bytes(up)
+    d_bytes = sizes["none"]
+    assert sizes["none"] < sizes["mean_v"] < 1.1 * d_bytes
+    assert sizes["full_v"] > 1.8 * d_bytes
+    assert sizes["full_vm"] > 2.7 * d_bytes
+
+
+def test_alpha_zero_disables_global_correction():
+    """alpha=0 + no v aggregation + local bias correction == Local AdamW:
+    one round from the same init must produce identical parameters."""
+    cfg, model, _ = build_tiny("dense")
+    fed_a = FedConfig(algorithm="fedadamw", alpha=0.0, v_aggregation="none",
+                      global_t_bias_correction=False, num_clients=2,
+                      clients_per_round=2, local_steps=3, lr=1e-3)
+    fed_b = dataclasses.replace(fed_a, algorithm="local_adamw")
+    pa, _, _ = _one_round(model, cfg, fed_a)
+    pb, _, _ = _one_round(model, cfg, fed_b)
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_fedavg_single_client_equals_sgd():
+    """With S=1 client and gamma=1, FedAvg is exactly K SGD steps."""
+    cfg, model, params0 = build_tiny("dense")
+    fed = FedConfig(algorithm="fedavg", num_clients=1, clients_per_round=1,
+                    local_steps=4, lr=1e-2, weight_decay=0.0)
+    specs = build_block_specs(params0, cfg, fed)
+    alg = get_algorithm(fed)
+    sstate = init_server_state(alg, params0, specs, fed)
+    round_fn = jax.jit(make_round_fn(model, fed, specs, alg=alg))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (1, 4, 4, 16))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32),
+             "labels": jnp.asarray(np.roll(toks, -1, -1), jnp.int32)}
+    p_fed, _, _ = round_fn(params0, sstate, batch,
+                           jnp.zeros((1,), jnp.int32), jnp.asarray(0))
+
+    p_sgd = params0
+    for k in range(4):
+        step_batch = {kk: v[0, k] for kk, v in batch.items()}
+        (_, _), g = jax.value_and_grad(model.loss, has_aux=True)(
+            p_sgd, step_batch)
+        p_sgd = jax.tree.map(lambda p, gi: p - 1e-2 * gi, p_sgd, g)
+    for a, b in zip(jax.tree.leaves(p_fed), jax.tree.leaves(p_sgd)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_scaffold_control_variates_update():
+    cfg, model, _ = build_tiny("dense")
+    fed = FedConfig(algorithm="scaffold", num_clients=4, clients_per_round=2,
+                    local_steps=3, lr=1e-2)
+    _, sstate, _ = _one_round(model, cfg, fed)
+    c_norm = sum(float(jnp.sum(jnp.abs(c)))
+                 for c in jax.tree.leaves(sstate["c"]))
+    assert c_norm > 0.0  # server control variate moved
+
+
+def test_weight_decay_shrinks_weights():
+    """Decoupled decay with zero-ish gradients must shrink parameters."""
+    cfg, model, params = build_tiny("dense")
+    fed = FedConfig(algorithm="fedadamw", weight_decay=0.1, alpha=0.0,
+                    v_aggregation="none", num_clients=1,
+                    clients_per_round=1, local_steps=5, lr=1e-2)
+    alg = get_algorithm(fed)
+    specs = build_block_specs(params, cfg, fed)
+    sstate = init_server_state(alg, params, specs, fed)
+    cstate = alg.init_client(params, sstate, fed, specs=specs)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    p = params
+    for _ in range(3):
+        p, cstate = alg.local_step(p, zeros, cstate, sstate, fed, 1.0)
+    n0 = sum(float(jnp.sum(x * x)) for x in jax.tree.leaves(params))
+    n1 = sum(float(jnp.sum(x * x)) for x in jax.tree.leaves(p))
+    assert n1 < n0
+
+
+def test_delta_g_is_negative_mean_delta_over_k_eta():
+    cfg, model, _ = build_tiny("dense")
+    fed = FedConfig(algorithm="fedadamw", num_clients=2, clients_per_round=2,
+                    local_steps=2, lr=1e-3)
+    params, specs, alg, sstate0 = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    round_fn = jax.jit(make_round_fn(model, fed, specs, alg=alg))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (2, 2, 4, 16))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32),
+             "labels": jnp.asarray(np.roll(toks, -1, -1), jnp.int32)}
+    p1, sstate1, _ = round_fn(params, sstate0, batch,
+                              jnp.arange(2, dtype=jnp.int32), jnp.asarray(0))
+    # server: x1 = x0 + gamma * mean_delta  =>  mean_delta = x1 - x0
+    # delta_g = -mean_delta / (K * eta)
+    scale = -1.0 / (fed.local_steps * fed.lr)
+    for dg, a, b in zip(jax.tree.leaves(sstate1["delta_g"]),
+                        jax.tree.leaves(p1), jax.tree.leaves(params)):
+        np.testing.assert_allclose(
+            np.asarray(dg), scale * (np.asarray(a) - np.asarray(b)),
+            rtol=2e-3, atol=2e-4)

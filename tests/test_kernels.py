@@ -1,0 +1,98 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.blockmean.ops import block_means_2d
+from repro.kernels.blockmean.ref import column_mean_ref
+from repro.kernels.fused_adamw import ops as fops
+from repro.kernels.fused_adamw.fused_adamw import (BLOCK_ROWS, LANES,
+                                                   fused_adamw_2d)
+from repro.kernels.fused_adamw.ref import fused_adamw_ref
+
+SCALARS = jnp.asarray([0.9, 0.999, 0.1, 0.00799, 3e-4, 0.5, 0.01, 1e-8],
+                      jnp.float32)
+
+
+@pytest.mark.parametrize("rows", [BLOCK_ROWS, 2 * BLOCK_ROWS, 5 * BLOCK_ROWS])
+def test_fused_adamw_tile_shapes(rows):
+    rng = np.random.default_rng(rows)
+    ops = [jnp.asarray(rng.normal(size=(rows, LANES)), jnp.float32)
+           for _ in range(4)]
+    v = jnp.asarray(rng.uniform(0.0, 1.0, size=(rows, LANES)), jnp.float32)
+    got = fused_adamw_2d(ops[0], ops[1], ops[2], v, ops[3], SCALARS)
+    want = fused_adamw_ref(ops[0], ops[1], ops[2], v, ops[3], SCALARS)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=st.sampled_from([(7,), (130,), (13, 77), (3, 5, 9), (1,), (256,)]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 1000),
+)
+def test_fused_adamw_tree_sweep(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    tree = {"w": jnp.asarray(rng.normal(size=shape), dtype)}
+    g = {"w": jnp.asarray(rng.normal(size=shape), dtype)}
+    m = {"w": jnp.zeros(shape, jnp.float32)}
+    v = {"w": jnp.asarray(rng.uniform(0, 1, size=shape), jnp.float32)}
+    dg = {"w": jnp.asarray(rng.normal(size=shape), jnp.float32)}
+    p2, m2, v2 = fops.tree_fused_adamw_step(
+        tree, g, m, v, dg, beta1=0.9, beta2=0.999, c1=0.1, c2=0.00799,
+        lr=3e-4, alpha=0.5, lam=0.01, eps=1e-8)
+    xr, mr, vr = fused_adamw_ref(tree["w"], g["w"], m["w"], v["w"], dg["w"],
+                                 SCALARS)
+    np.testing.assert_allclose(np.asarray(p2["w"], np.float32),
+                               np.asarray(xr.astype(p2["w"].dtype),
+                                          np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-6)
+    np.testing.assert_allclose(np.asarray(m2["w"]), np.asarray(mr),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v2["w"]), np.asarray(vr),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fused_adamw_apply_only_variant():
+    rng = np.random.default_rng(0)
+    shape = (33, 9)
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    m = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    v = jnp.asarray(rng.uniform(0, 1, size=shape), jnp.float32)
+    dg = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    got = fops.tree_fused_adamw_apply(
+        {"w": x}, {"w": m}, {"w": v}, {"w": dg},
+        c1=0.1, c2=0.00799, lr=3e-4, alpha=0.5, lam=0.01, eps=1e-8)
+    want = x - 3e-4 * ((m / 0.1) / (jnp.sqrt(v / 0.00799) + 1e-8)
+                       + 0.5 * dg + 0.01 * x)
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 700),
+    cols=st.integers(1, 700),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_blockmean_sweep(rows, cols, dtype):
+    rng = np.random.default_rng(rows * 1000 + cols)
+    x = jnp.asarray(rng.normal(size=(rows, cols)), dtype)
+    got = block_means_2d(x)
+    want = column_mean_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_blockmean_exact_fp32():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(1000, 513)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(block_means_2d(x)),
+                               np.asarray(column_mean_ref(x)),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,122 @@
+"""Hessian-block partitioning: unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import build_tiny
+from repro.config import FedConfig
+from repro.core import partition
+
+
+def _specs_for(family, fed=None):
+    cfg, model, params = build_tiny(family)
+    fed = fed or FedConfig()
+    return params, partition.build_block_specs(params, cfg, fed)
+
+
+@pytest.mark.parametrize("family",
+                         ["dense", "moe", "ssm", "hybrid", "vlm", "audio"])
+def test_roundtrip_shapes(family):
+    params, specs = _specs_for(family)
+    means = partition.tree_block_means(params, specs)
+    back = partition.tree_broadcast_means(means, specs)
+    for p, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        assert p.shape == b.shape
+
+
+def test_constant_tensor_roundtrips_exactly():
+    """broadcast(mean(x)) == x when x is block-constant."""
+    params, specs = _specs_for("dense")
+    const = jax.tree.map(lambda p: jnp.full(p.shape, 2.5, jnp.float32),
+                         params)
+    means = partition.tree_block_means(const, specs)
+    back = partition.tree_broadcast_means(means, specs)
+    for b in jax.tree.leaves(back):
+        np.testing.assert_allclose(np.asarray(b), 2.5, rtol=1e-6)
+
+
+def test_broadcast_preserves_block_means():
+    """mean(broadcast(mean(x))) == mean(x): idempotence of the projection."""
+    params, specs = _specs_for("moe")
+    means = partition.tree_block_means(params, specs)
+    back = partition.tree_broadcast_means(means, specs)
+    means2 = partition.tree_block_means(back, specs)
+    for a, b in zip(jax.tree.leaves(means), jax.tree.leaves(means2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_global_mean_preserved():
+    """The projection preserves each tensor's global mean exactly."""
+    params, specs = _specs_for("dense")
+    back = partition.tree_broadcast_means(
+        partition.tree_block_means(params, specs), specs)
+    for p, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_allclose(float(jnp.mean(p)), float(jnp.mean(b)),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_communication_is_o_b_not_o_d():
+    """paper Table 7: the block-mean upload must be orders smaller than d."""
+    params, specs = _specs_for("dense")
+    d = sum(p.size for p in jax.tree.leaves(params))
+    b = partition.total_blocks(specs)
+    assert b < d / 20, (b, d)
+
+
+def test_qk_blocked_per_head():
+    cfg, _, params = (lambda t: (t[0], t[1], t[2]))(build_tiny("dense"))
+    fed = FedConfig(min_block_size=1)  # disable merging to see raw classes
+    specs = partition.build_block_specs(params, cfg, fed)
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+    seen = {}
+    for kp, spec in flat:
+        name = kp[-1].key if hasattr(kp[-1], "key") else str(kp[-1])
+        seen[name] = spec
+    # stacked (L, D, H, hd): qk per head -> L*H blocks
+    assert seen["attn_wq"].cls == "qk_per_head"
+    assert seen["attn_wq"].n_blocks == 2 * 4  # layers * heads
+    assert seen["attn_wv"].cls == "value_per_neuron"
+    assert seen["embed_tokens"].cls == "embed_per_token"
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 48),
+    cols=st.integers(1, 48),
+    min_block=st.sampled_from([1, 8, 64, 512]),
+    max_blocks=st.sampled_from([4, 64, 65536]),
+    kept=st.sampled_from([(), (0,), (1,), (0, 1)]),
+)
+def test_make_spec_invariants(rows, cols, min_block, max_blocks, kept):
+    """Structural invariants of the block-spec builder, any shape:
+    groups divide their axes; n_blocks <= max_blocks (or collapses to 1 per
+    axis); mean->broadcast roundtrip preserves shape and block means."""
+    shape = (rows, cols)
+    spec = partition._make_spec(shape, kept, "t", min_block, max_blocks)
+    for g, a in zip(spec.groups, spec.kept):
+        assert shape[a] % g == 0
+    assert spec.n_blocks <= max(max_blocks, 1) or all(
+        g == 1 for g in spec.groups)
+    x = jnp.arange(rows * cols, dtype=jnp.float32).reshape(shape)
+    m = partition.block_means(x, spec)
+    assert m.shape == (spec.n_blocks,)
+    y = partition.broadcast_means(m, spec)
+    assert y.shape == shape
+    m2 = partition.block_means(y, spec)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m2),
+                               rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_projection_reduces_variance(seed):
+    """block-mean projection is an averaging operator: it can never
+    increase the L2 norm (Jensen)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(16, 24)), jnp.float32)
+    spec = partition._make_spec((16, 24), (1,), "t", 1, 65536)
+    y = partition.broadcast_means(partition.block_means(x, spec), spec)
+    assert float(jnp.sum(y * y)) <= float(jnp.sum(x * x)) + 1e-4

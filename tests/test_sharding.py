@@ -1,0 +1,139 @@
+"""Sharding-rule tests: every sharded dim must divide its mesh axis size,
+for every assigned architecture, on a stub of the production mesh."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import FedConfig, get_arch, list_archs
+from repro.launch import input_specs as ispecs
+from repro.models import build_model
+from repro.sharding import specs as shspecs
+
+
+class MeshStub:
+    """Duck-typed stand-in for jax.sharding.Mesh: the spec rules only read
+    ``axis_names`` and ``shape`` (tests must not allocate 512 devices)."""
+
+    def __init__(self, shape_map):
+        self.axis_names = tuple(shape_map)
+        self.shape = dict(shape_map)
+
+
+SINGLE = MeshStub({"data": 16, "model": 16})
+MULTI = MeshStub({"pod": 2, "data": 16, "model": 16})
+
+ASSIGNED = [
+    "olmo-1b", "olmo-1b-swa", "stablelm-12b", "qwen2-72b", "qwen3-32b",
+    "qwen2-vl-2b", "mixtral-8x7b", "zamba2-2.7b",
+    "llama4-maverick-400b-a17b", "seamless-m4t-large-v2", "mamba2-780m",
+]
+
+
+def _axis_size(mesh, name):
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_param_specs_divisible(arch, mesh):
+    cfg = get_arch(arch)
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    for layout in ("client_parallel", "client_sequential"):
+        fed = FedConfig(layout=layout)
+        pspecs = shspecs.param_pspecs(params, cfg, mesh, fed)
+        flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+        flat_s = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_p) == len(flat_s)
+        for (kp, leaf), spec in zip(flat_p, flat_s):
+            for axis, name in enumerate(spec):
+                if name is None:
+                    continue
+                size = _axis_size(mesh, name)
+                assert leaf.shape[axis] % size == 0, (
+                    arch, layout, [getattr(k, "key", k) for k in kp],
+                    leaf.shape, tuple(spec))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "mixtral-8x7b",
+                                  "mamba2-780m", "zamba2-2.7b"])
+def test_cache_specs_divisible(arch):
+    cfg = get_arch(arch)
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(128, 1024))
+    cspecs = shspecs.cache_pspecs(cache, cfg, SINGLE)
+    flat_c = jax.tree_util.tree_flatten_with_path(cache)[0]
+    flat_s = jax.tree.leaves(cspecs, is_leaf=lambda x: isinstance(x, P))
+    for (kp, leaf), spec in zip(flat_c, flat_s):
+        for axis, name in enumerate(spec):
+            if name is None:
+                continue
+            assert leaf.shape[axis] % _axis_size(SINGLE, name) == 0, (
+                arch, [getattr(k, "key", k) for k in kp], leaf.shape,
+                tuple(spec))
+
+
+def test_moe_expert_parallel_when_divisible():
+    cfg = get_arch("llama4-maverick-400b-a17b")   # 128 experts % 16 == 0
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pspecs = shspecs.param_pspecs(params, cfg, SINGLE, FedConfig())
+    flat = jax.tree_util.tree_flatten_with_path(pspecs)[0]
+    for kp, spec in flat:
+        name = getattr(kp[-1], "key", "")
+        if str(name).startswith("moe_exp_"):
+            assert spec[1] == "model", (name, spec)  # (L, E, ...) E sharded
+
+
+def test_mixtral_falls_back_to_tensor_parallel():
+    cfg = get_arch("mixtral-8x7b")                # 8 experts < 16 chips
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pspecs = shspecs.param_pspecs(params, cfg, SINGLE, FedConfig())
+    flat = jax.tree_util.tree_flatten_with_path(pspecs)[0]
+    for kp, spec in flat:
+        name = str(getattr(kp[-1], "key", ""))
+        if name.startswith("moe_exp_"):
+            assert spec[1] != "model"             # E axis NOT sharded
+            assert "model" in tuple(spec)         # F dim is
+
+
+def test_batch_pspec_layouts():
+    fed_p = FedConfig(layout="client_parallel")
+    fed_s = FedConfig(layout="client_sequential")
+    fed_s_mb = FedConfig(layout="client_sequential", grad_microbatches=4)
+    assert shspecs.batch_pspec(SINGLE, fed_p, rank=4)[0] == "data"
+    assert shspecs.batch_pspec(SINGLE, fed_s, rank=4)[2] == "data"
+    assert shspecs.batch_pspec(SINGLE, fed_s_mb, rank=5)[3] == "data"
+    assert shspecs.batch_pspec(MULTI, fed_p, rank=4)[0] == ("pod", "data")
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_input_specs_exist_for_all_shapes(arch):
+    """input_specs must produce weak-type-correct stand-ins for every
+    (arch x shape) — no allocation, only ShapeDtypeStructs."""
+    from repro.config import INPUT_SHAPES
+    cfg = get_arch(arch)
+    model = build_model(cfg)
+    fed = FedConfig(layout=cfg.fl_layout)
+    for sname, ishape in INPUT_SHAPES.items():
+        if ishape.kind == "train":
+            batch = ispecs.train_batch_specs(cfg, SINGLE, fed, ishape)
+            assert batch["tokens"].shape[-1] == ishape.seq_len
+        elif ishape.kind == "prefill":
+            batch = ispecs.prefill_batch_specs(cfg, ishape)
+            assert batch["tokens"].shape == (ishape.global_batch,
+                                             ishape.seq_len)
+        else:
+            if (sname == "long_500k"
+                    and not cfg.supports_long_context_decode):
+                continue
+            d = ispecs.decode_input_specs(model, cfg, ishape)
+            assert d["tokens"].shape == (ishape.global_batch, 1)
+            assert all(hasattr(leaf, "shape")
+                       for leaf in jax.tree.leaves(d["cache"]))

@@ -1,0 +1,89 @@
+"""Per-architecture smoke tests (deliverable f): REDUCED variant of each
+assigned architecture family (<=2 layers, d_model <= 512, <=4 experts) runs
+one forward/train step + one decode step on CPU, asserting output shapes
+and no NaNs. FULL configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig, get_arch, list_archs
+from repro.config.model_config import reduced_variant
+from repro.core import build_fed_state, make_round_fn
+from repro.models import build_model
+
+ASSIGNED = [
+    "olmo-1b", "olmo-1b-swa", "stablelm-12b", "qwen2-72b", "qwen3-32b",
+    "qwen2-vl-2b", "mixtral-8x7b", "zamba2-2.7b",
+    "llama4-maverick-400b-a17b", "seamless-m4t-large-v2", "mamba2-780m",
+    "vit-tiny-fl", "roberta-base-fl",
+]
+
+
+def _smoke_batch(cfg, rng, b=2, s=32, k=None, clients=None):
+    shape = tuple(x for x in (clients, k, b, s) if x is not None)
+    toks = rng.integers(0, cfg.vocab_size, shape)
+    batch = {"tokens": jnp.asarray(toks, jnp.int32),
+             "labels": jnp.asarray(np.roll(toks, -1, -1), jnp.int32)}
+    if cfg.family in ("vlm", "audio"):
+        fshape = shape[:-1] + (cfg.frontend_tokens_per_sample,
+                               cfg.frontend_embed_dim)
+        batch["frontend_feats"] = jnp.asarray(
+            rng.normal(size=fshape), jnp.float32)
+    return batch
+
+
+def test_reduced_variants_respect_limits():
+    for arch in ASSIGNED:
+        red = reduced_variant(get_arch(arch))
+        assert red.num_layers <= 2, arch
+        assert red.d_model <= 512, arch
+        if red.moe is not None:
+            assert red.moe.num_experts <= 4, arch
+        red.validate()
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_train_step(arch):
+    cfg = reduced_variant(get_arch(arch))
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+
+    fed = FedConfig(algorithm="fedadamw", num_clients=2,
+                    clients_per_round=2, local_steps=1, lr=1e-3,
+                    layout="client_parallel")
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    round_fn = jax.jit(make_round_fn(model, fed, specs, alg=alg))
+    batch = _smoke_batch(cfg, rng, b=2, s=32, k=1, clients=2)
+    new_params, sstate, m = round_fn(
+        params, sstate, batch, jnp.arange(2, dtype=jnp.int32),
+        jnp.asarray(0))
+    assert np.isfinite(float(m["loss_mean"])), arch
+    changed = 0
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)):
+        assert a.shape == b.shape
+        assert bool(jnp.all(jnp.isfinite(b))), arch
+        changed += int(not bool(jnp.array_equal(a, b)))
+    assert changed > 0, f"{arch}: no parameter moved"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_decode_step(arch):
+    cfg = reduced_variant(get_arch(arch))
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(1)
+    b = 2
+    kw = {}
+    if cfg.family == "audio":
+        feats = jnp.asarray(rng.normal(size=(
+            b, cfg.frontend_tokens_per_sample, cfg.frontend_embed_dim)),
+            jnp.float32)
+        kw["memory"] = model.encode(params, feats)
+    cache = model.init_cache(b, 16)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    logits, cache = model.decode_step(params, tok, cache, **kw)
+    from repro.models.layers import padded_vocab
+    assert logits.shape == (b, 1, padded_vocab(cfg.vocab_size)), arch
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
