@@ -4,8 +4,8 @@ FedAdamW — accuracy and wire bytes."""
 import jax
 
 from benchmarks.common import Rows, bench_fl, print_table
-from repro.core import build_fed_state, get_algorithm
-from repro.core.extensions import wire_bytes
+from repro.comm import codec_for, upload_wire_bytes
+from repro.core import build_fed_state, upload_shape_spec
 from repro.config import FedConfig, get_arch
 from repro.config.model_config import reduced_variant
 from repro.models import build_model
@@ -19,10 +19,8 @@ def _wire_mb(algorithm: str) -> float:
                     local_steps=1)
     params, specs, alg, sstate = build_fed_state(
         model, fed, jax.random.key(0), cfg=cfg)
-    up = jax.eval_shape(lambda: alg.upload(
-        params, alg.init_client(params, sstate, fed, specs=specs),
-        specs, fed))
-    return wire_bytes(up, delta_int8=algorithm.endswith("+int8")) / 1e6
+    spec = upload_shape_spec(alg, params, sstate, specs, fed)
+    return upload_wire_bytes(spec, codec_for(algorithm)) / 1e6
 
 
 def run() -> Rows:

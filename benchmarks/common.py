@@ -47,7 +47,8 @@ def bench_fl(algorithm: str = "fedadamw", *, dirichlet: float = 0.6,
         seed=seed, eval_every=1000000,  # evaluate at the end only
     )
     kw.update(overrides)
-    kw["eval_every"] = kw["rounds"]  # final-round eval
+    if "eval_every" not in overrides:
+        kw["eval_every"] = kw["rounds"]  # final-round eval
     return run_training(**kw)
 
 

@@ -17,7 +17,8 @@ def main() -> None:
                             fig2_variance_drift, kernels_bench,
                             roofline_report, speedup_theorem1, table1_main,
                             table4_ablation, table5_alpha,
-                            table6_weight_decay, table7_aggregation)
+                            table6_weight_decay, table7_aggregation,
+                            table_comm_codecs)
     benches = [
         ("fig1_adamw_vs_sgd", fig1_adamw_vs_sgd.run),
         ("fig2_variance_drift", fig2_variance_drift.run),
@@ -26,6 +27,7 @@ def main() -> None:
         ("table5_alpha", table5_alpha.run),
         ("table6_weight_decay", table6_weight_decay.run),
         ("table7_aggregation", table7_aggregation.run),
+        ("table_comm_codecs", table_comm_codecs.run),
         ("speedup_theorem1", speedup_theorem1.run),
         ("beyond_paper", beyond_paper.run),
         ("kernels_bench", kernels_bench.run),

@@ -1,0 +1,65 @@
+"""Communication-codec sweep: codecs x algorithms, bytes-to-target-loss.
+
+The paper's headline claim is communication efficiency; this table makes
+the repo's version of that claim measurable. For each (algorithm, codec)
+pair we train on the synthetic non-iid task and report
+
+  * per-round per-client upload MB (true wire bytes from the codec),
+  * final train loss after the shared round budget,
+  * cumulative upload MB until train loss first reaches the uncompressed
+    run's final loss + 10% (``inf`` if never reached) — the
+    bytes-to-target-accuracy metric FedLADA/DP-FedAdamW compete on.
+
+Usage: BENCH_QUICK=1 python benchmarks/table_comm_codecs.py
+"""
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import Rows, bench_fl, budget, print_table
+
+ALGORITHMS = ["fedadamw", "fedavg"]
+CODECS = ["", "int8", "int4", "topk0.1", "lowrank4"]
+TARGET_SLACK = 1.10
+# passed explicitly so the bytes-to-target math and the runs cannot
+# drift apart if bench_fl's internal default is retuned
+CLIENTS_PER_ROUND = budget(4, 2)
+
+
+def _run(algorithm: str):
+    return bench_fl(algorithm, eval_every=1, rounds=budget(15, 3),
+                    clients_per_round=CLIENTS_PER_ROUND)
+
+
+def _bytes_to_target(history, target: float, clients_per_round: int):
+    per_round_mb = history["upload_mbytes"][-1] * clients_per_round
+    for i, loss in enumerate(history["train_loss"]):
+        if loss <= target:
+            return (i + 1) * per_round_mb
+    return math.inf
+
+
+def run() -> Rows:
+    rows = Rows("table_comm_codecs")
+    for alg in ALGORITHMS:
+        baseline = _run(alg)
+        target = baseline["train_loss"][-1] * TARGET_SLACK
+        for codec in CODECS:
+            name = f"{alg}+{codec}" if codec else alg
+            hist = baseline if not codec else _run(name)
+            rows.add(
+                algorithm=alg, codec=codec or "none",
+                upload_mb_per_round=round(hist["upload_mbytes"][-1], 4),
+                final_train_loss=round(hist["train_loss"][-1], 4),
+                mb_to_target=round(_bytes_to_target(
+                    hist, target, CLIENTS_PER_ROUND), 3),
+                target_loss=round(target, 4),
+            )
+    path = rows.save()
+    print_table("comm codecs: bytes-to-target-loss", rows.rows)
+    print(f"saved -> {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Communication layer: what goes on the wire, how it is compressed, and
+what it costs (README.md §Communication layer).
+
+``codecs``           wire-accurate upload codec registry
+                     (none | int8 | int4 | topk<r> | lowrank<k>)
+``error_feedback``   client-resident residual accumulation for lossy codecs
+``compress``         ``compressed(alg, codec)`` FedAlgorithm wrapper
+"""
+from repro.comm.codecs import (
+    Codec,
+    Encoded,
+    codec_for,
+    get_codec,
+    parse_codec_spec,
+    payload_wire_bytes,
+    register_codec,
+    split_algorithm_name,
+    upload_wire_bytes,
+)
+from repro.comm.compress import compressed
+from repro.comm.error_feedback import (
+    CID_KEY,
+    COMM_STATE_KEYS,
+    EF_KEY,
+    ROUND_KEY,
+    client_residual,
+    init_ef_table,
+    scatter_residuals,
+)
+
+__all__ = [
+    "Codec", "Encoded", "codec_for", "get_codec", "parse_codec_spec",
+    "payload_wire_bytes", "register_codec", "split_algorithm_name",
+    "upload_wire_bytes",
+    "compressed", "CID_KEY", "COMM_STATE_KEYS", "EF_KEY", "ROUND_KEY",
+    "client_residual", "init_ef_table", "scatter_residuals",
+]

@@ -1,0 +1,336 @@
+"""Upload codec registry: what a client→server payload looks like on the wire.
+
+A :class:`Codec` owns the three sides of the communication story:
+
+``encode(tree, key) -> Encoded``
+    Compress a parameter-delta pytree into a wire payload. The payload's
+    array leaves have *exactly* the sizes that would be transferred (int4
+    codes are physically packed two-per-byte, top-k carries only the kept
+    values + indices), so byte accounting is a property of the payload
+    spec, never a side estimate. ``key`` feeds stochastic codecs.
+
+``decode(payload) -> tree``
+    Reconstruct the dense tree the server averages. In simulation the
+    client runs ``decode(encode(x))`` before upload so the aggregation
+    sees exactly the values the wire would carry.
+
+``wire_bytes(payload_spec) -> int``
+    Exact transfer size of a payload (works on arrays or the
+    ``jax.eval_shape`` spec — sizes are shape-static).
+
+Codecs are looked up by *spec string*: ``none``, ``int8``, ``int4``,
+``topk<ratio>`` (e.g. ``topk0.1``), ``lowrank<rank>`` (e.g. ``lowrank8``).
+The spec doubles as the algorithm-name suffix (``fedadamw+int4``).
+
+To add a codec: write ``encode_leaf/decode_leaf`` pair, lift with
+:func:`leafwise_codec`, and :func:`register_codec` a parser for its spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+_SCALE_FLOOR = 1e-12   # guards all-zero tensors (scale would divide by 0)
+# f32-rounded reciprocals: a single multiply is bit-deterministic across
+# the jnp and Pallas quantpack paths (see kernels/quantpack), so both
+# produce identical wire payloads
+_INV_QMAX8 = float(np.float32(1.0 / 127.0))
+_INV_QMAX4 = float(np.float32(1.0 / 7.0))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Encoded:
+    """Wire payload: per-leaf array dicts + static reconstruction metadata.
+
+    ``data`` is a list of dict-of-arrays (one per leaf of the encoded
+    tree, in flatten order); ``meta`` is static aux data (treedef plus
+    per-leaf (shape, dtype)) so the payload traverses jit/eval_shape as a
+    pytree whose only traced content is the wire arrays."""
+
+    data: Any
+    meta: Any
+
+    def tree_flatten(self):
+        return (self.data,), self.meta
+
+    @classmethod
+    def tree_unflatten(cls, meta, children):
+        return cls(children[0], meta)
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    name: str                      # canonical spec string, e.g. "topk0.1"
+    lossy: bool
+    encode: Callable[[Tree, jax.Array], Encoded]
+    decode: Callable[[Encoded], Tree]
+    # True when encode() consumes the PRNG key (stochastic rounding);
+    # deterministic codecs let callers pass a constant key for free.
+    # lowrank uses its key only for the projection init, which is meant
+    # to be reused across rounds (PowerSGD-style warm start) -> False.
+    stochastic: bool = False
+
+    def wire_bytes(self, payload_spec) -> int:
+        return payload_wire_bytes(payload_spec)
+
+
+def payload_wire_bytes(payload) -> int:
+    """Exact bytes of a payload (arrays or ShapeDtypeStructs)."""
+    return sum(int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree.leaves(payload))
+
+
+def leafwise_codec(name: str, lossy: bool, encode_leaf: Callable,
+                   decode_leaf: Callable, *, stochastic: bool = False
+                   ) -> Codec:
+    """Lift per-leaf (encode, decode) into a tree codec.
+
+    ``encode_leaf(x, key) -> dict_of_arrays``; ``decode_leaf(data, shape,
+    dtype) -> x``. Each leaf gets an independent fold of the key."""
+
+    def encode(tree: Tree, key: jax.Array) -> Encoded:
+        leaves, treedef = jax.tree.flatten(tree)
+        data = [encode_leaf(x, jax.random.fold_in(key, i))
+                for i, x in enumerate(leaves)]
+        meta = (treedef, tuple((x.shape, jnp.dtype(x.dtype).name)
+                               for x in leaves))
+        return Encoded(data, meta)
+
+    def decode(payload: Encoded) -> Tree:
+        treedef, shapes = payload.meta
+        leaves = [decode_leaf(d, shape, jnp.dtype(dt))
+                  for d, (shape, dt) in zip(payload.data, shapes)]
+        return jax.tree.unflatten(treedef, leaves)
+
+    return Codec(name, lossy, encode, decode, stochastic)
+
+
+# ---------------------------------------------------------------------------
+# none — dense passthrough (the uncompressed wire format)
+# ---------------------------------------------------------------------------
+
+def _none_codec() -> Codec:
+    return leafwise_codec(
+        "none", False,
+        lambda x, key: {"values": x},
+        lambda d, shape, dtype: d["values"])
+
+
+# ---------------------------------------------------------------------------
+# int8 — symmetric per-tensor scale, round-to-nearest
+# ---------------------------------------------------------------------------
+
+def _int8_scale(x32: jax.Array) -> jax.Array:
+    return jnp.maximum(jnp.max(jnp.abs(x32)), _SCALE_FLOOR) * _INV_QMAX8
+
+
+def _int8_encode_leaf(x, key):
+    x32 = x.astype(jnp.float32).reshape(-1)
+    scale = _int8_scale(x32)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def _int8_decode_leaf(d, shape, dtype):
+    return (d["q"].astype(jnp.float32) * d["scale"]).reshape(shape) \
+        .astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# int4 — stochastic rounding, two codes packed per byte
+# ---------------------------------------------------------------------------
+# Wire format per tensor: ceil(n/2) bytes of codes (offset-8 nibbles,
+# element 2i in the low nibble of byte i) + one f32 scale. Stochastic
+# rounding q = floor(x/scale + u), u ~ U[0,1) is unbiased:
+# E[q]*scale = x exactly, so the client-mean of int4 uploads is an
+# unbiased estimate of the mean delta.
+
+def pack_nibbles(codes: jax.Array) -> jax.Array:
+    """uint8 codes in [0, 15], flat, even length -> half-length bytes."""
+    pairs = codes.reshape(-1, 2)
+    return (pairs[:, 0] | (pairs[:, 1] << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`pack_nibbles`, sliced to the true element count."""
+    lo = packed & 0xF
+    hi = packed >> 4
+    return jnp.stack([lo, hi], axis=1).reshape(-1)[:n]
+
+
+def _int4_scale(x32: jax.Array) -> jax.Array:
+    return jnp.maximum(jnp.max(jnp.abs(x32)), _SCALE_FLOOR) * _INV_QMAX4
+
+
+def _int4_encode_leaf(x, key):
+    x32 = x.astype(jnp.float32).reshape(-1)
+    n = x32.size
+    scale = _int4_scale(x32)
+    u = jax.random.uniform(key, (n,), jnp.float32)
+    q = jnp.clip(jnp.floor(x32 / scale + u), -8, 7).astype(jnp.int32)
+    codes = (q + 8).astype(jnp.uint8)
+    if n % 2:
+        codes = jnp.concatenate([codes, jnp.full((1,), 8, jnp.uint8)])
+    return {"q": pack_nibbles(codes), "scale": scale}
+
+
+def _int4_decode_leaf(d, shape, dtype):
+    n = int(np.prod(shape)) if shape else 1
+    codes = unpack_nibbles(d["q"], n)
+    x = (codes.astype(jnp.int32) - 8).astype(jnp.float32) * d["scale"]
+    return x.reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# topk — magnitude sparsification (values + int32 indices)
+# ---------------------------------------------------------------------------
+
+def _topk_codec(ratio: float) -> Codec:
+    if not 0.0 < ratio <= 1.0:
+        raise ValueError(f"topk ratio must be in (0, 1], got {ratio}")
+
+    def encode_leaf(x, key):
+        x32 = x.astype(jnp.float32).reshape(-1)
+        k = max(1, int(math.ceil(ratio * x32.size)))
+        _, idx = jax.lax.top_k(jnp.abs(x32), k)
+        return {"values": jnp.take(x32, idx), "indices": idx.astype(jnp.int32)}
+
+    def decode_leaf(d, shape, dtype):
+        n = int(np.prod(shape)) if shape else 1
+        dense = jnp.zeros((n,), jnp.float32).at[d["indices"]].set(d["values"])
+        return dense.reshape(shape).astype(dtype)
+
+    return leafwise_codec(f"topk{ratio:g}", True, encode_leaf, decode_leaf)
+
+
+# ---------------------------------------------------------------------------
+# lowrank — per-2D-leaf truncated projection (PowerSGD-style single
+# power iteration: P = orth(M Q0), Q = M^T P; wire carries P and Q)
+# ---------------------------------------------------------------------------
+
+def _lowrank_codec(rank: int) -> Codec:
+    if rank < 1:
+        raise ValueError(f"lowrank rank must be >= 1, got {rank}")
+
+    def encode_leaf(x, key):
+        if x.ndim != 2 or min(x.shape) <= rank:
+            # too small to win from factorization: dense passthrough
+            return {"values": x.astype(jnp.float32)}
+        m, n = x.shape
+        x32 = x.astype(jnp.float32)
+        q0 = jax.random.normal(key, (n, rank), jnp.float32)
+        p, _ = jnp.linalg.qr(x32 @ q0)
+        return {"p": p, "q": x32.T @ p}
+
+    def decode_leaf(d, shape, dtype):
+        if "values" in d:
+            return d["values"].astype(dtype)
+        return (d["p"] @ d["q"].T).astype(dtype)
+
+    return leafwise_codec(f"lowrank{rank}", True, encode_leaf, decode_leaf)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+# name -> factory(arg_string_or_None) -> Codec; parameterized codecs parse
+# the spec remainder ("topk0.1" -> factory("0.1"))
+_REGISTRY: Dict[str, Callable[[Optional[str]], Codec]] = {}
+
+
+def register_codec(name: str,
+                   factory: Callable[[Optional[str]], Codec]) -> None:
+    _REGISTRY[name] = factory
+
+
+def _exact(name: str, arg: Optional[str], make: Callable[[], Codec]) -> Codec:
+    if arg is not None:
+        raise ValueError(f"codec {name!r} takes no parameter, got {arg!r}")
+    return make()
+
+
+def _pallas_quant_codec(name: str) -> Codec:
+    """int8/int4 with encoding routed through the fused quantize-pack
+    Pallas kernel (same math and wire format as the jnp path)."""
+    from repro.kernels.quantpack import ops as qp_ops
+    bits = {"int8": 8, "int4": 4}[name]
+    decode = _int8_decode_leaf if bits == 8 else _int4_decode_leaf
+    return leafwise_codec(
+        name, True,
+        lambda x, key: qp_ops.quantpack_leaf(x, bits=bits, key=key),
+        decode, stochastic=(bits == 4))
+
+
+register_codec("none", lambda arg: _exact("none", arg, _none_codec))
+register_codec("int8", lambda arg: _exact("int8", arg, lambda: leafwise_codec(
+    "int8", True, _int8_encode_leaf, _int8_decode_leaf)))
+register_codec("int4", lambda arg: _exact("int4", arg, lambda: leafwise_codec(
+    "int4", True, _int4_encode_leaf, _int4_decode_leaf, stochastic=True)))
+register_codec("topk", lambda arg: _topk_codec(float(arg if arg else 0.1)))
+register_codec("lowrank", lambda arg: _lowrank_codec(int(arg if arg else 4)))
+
+
+def parse_codec_spec(spec: str, *, use_pallas: bool = False) -> Codec:
+    """``"int4"`` / ``"topk0.1"`` / ``"lowrank8"`` -> Codec (ValueError on
+    unknown). ``use_pallas`` routes int8/int4 encoding through the fused
+    quantize-pack kernel (interpret mode off-TPU)."""
+    for name in sorted(_REGISTRY, key=len, reverse=True):
+        if spec == name or spec.startswith(name):
+            arg = spec[len(name):] or None
+            try:
+                codec = _REGISTRY[name](arg)
+            except ValueError as e:
+                raise ValueError(f"bad codec spec {spec!r}: {e}") from e
+            if use_pallas and name in ("int8", "int4"):
+                codec = _pallas_quant_codec(name)
+            return codec
+    raise ValueError(
+        f"unknown codec spec {spec!r}; known: {sorted(_REGISTRY)}")
+
+
+def get_codec(spec: str, *, use_pallas: bool = False) -> Codec:
+    return parse_codec_spec(spec, use_pallas=use_pallas)
+
+
+def split_algorithm_name(name: str) -> tuple:
+    """``"fedadamw+int4"`` -> ``("fedadamw", "int4")``; no suffix ->
+    ``(name, None)``. The one place the suffix convention lives."""
+    base, _, spec = name.partition("+")
+    return base, (spec or None)
+
+
+def codec_for(algorithm_name: str, *,
+              use_pallas: bool = False) -> Optional[Codec]:
+    """Codec named by an algorithm's ``+<codec>`` suffix, or None."""
+    _, spec = split_algorithm_name(algorithm_name)
+    return get_codec(spec, use_pallas=use_pallas) if spec else None
+
+
+def upload_wire_bytes(upload_spec: Dict[str, Tree],
+                      codec: Optional[Codec] = None) -> int:
+    """True per-client transfer size of one upload pytree.
+
+    ``delta`` is costed through the codec's wire payload; ``comm_ef``
+    (error-feedback residual) is client-resident and never transferred;
+    every other entry (block-mean v, control variates, ...) ships dense
+    at its dtype size."""
+    total = 0
+    for name, sub in upload_spec.items():
+        if name == "comm_ef":
+            continue
+        if name == "delta" and codec is not None and codec.name != "none":
+            payload_spec = jax.eval_shape(
+                lambda t: codec.encode(t, jax.random.PRNGKey(0)), sub)
+            total += codec.wire_bytes(payload_spec)
+        else:
+            total += payload_wire_bytes(sub)
+    return int(total)

@@ -1,0 +1,148 @@
+"""``compressed(alg, codec)``: wrap any FedAlgorithm so its delta upload
+goes through an upload codec, with optional client-resident error feedback.
+
+Replaces ``repro.core.extensions.quantized`` (int8-only, no feedback).
+The wrapper is algorithm-agnostic: the base algorithm's own state and
+auxiliary upload entries (block-mean v, control variates, ...) pass
+through untouched; only the ``delta`` entry is run through
+``decode(encode(.))`` so the server averages exactly the values the wire
+would carry, while :func:`repro.comm.upload_wire_bytes` costs the true
+payload.
+
+With error feedback on, the wrapper needs the sampled client ids (the
+residual table is indexed by client), so it sets ``needs_client_ids`` and
+requires the ``client_parallel`` layout — same contract as SCAFFOLD.
+Everything stays jit/vmap/scan-compatible: comm state is threaded through
+the client-state dict and carried across the local-step scan unchanged.
+
+Behavior change vs the legacy ``extensions.quantized``: the ``"+int8"``
+algorithm suffix now gets error feedback by default, which improves the
+trajectory but allocates the per-client residual table (num_clients f32
+copies of the params). Set ``FedConfig.comm_error_feedback=False`` for
+the old no-feedback semantics; ``extensions.quantized`` itself keeps
+them.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.codecs import Codec
+from repro.comm.error_feedback import (CID_KEY, COMM_STATE_KEYS, EF_KEY,
+                                       ROUND_KEY, client_residual,
+                                       init_ef_table, scatter_residuals)
+from repro.core.fedadamw import FedAlgorithm
+from repro.core.tree_util import tree_add, tree_sub
+
+
+def _strip_comm(d: dict) -> dict:
+    return {k: v for k, v in d.items() if k not in COMM_STATE_KEYS}
+
+
+def _encode_key(round_index, client_id, target) -> jax.Array:
+    """Per-(round, client) PRNG key, derived inside the trace: stochastic
+    codecs need noise independent of the data and fresh each round, but
+    the round engine threads no rng — so the wrapper keeps its own round
+    counter in server state and folds it with the client id. Without
+    error feedback there is no client id in scope; a salt from the
+    client's own delta bits decorrelates the vmapped clients instead
+    (the round fold still guarantees a repeated delta draws fresh
+    noise, so no systematic bias across rounds)."""
+    key = jax.random.PRNGKey(0)
+    if round_index is not None:
+        key = jax.random.fold_in(key, round_index)
+    if client_id is not None:
+        key = jax.random.fold_in(key, client_id)
+    else:
+        total = sum(jnp.sum(jnp.abs(leaf).astype(jnp.float32))
+                    for leaf in jax.tree.leaves(target))
+        salt = jax.lax.bitcast_convert_type(total.astype(jnp.float32),
+                                            jnp.int32)
+        key = jax.random.fold_in(key, salt)
+    return key
+
+
+def compressed(alg: FedAlgorithm, codec: Codec, *,
+               error_feedback: Optional[bool] = None) -> FedAlgorithm:
+    """Route ``alg``'s delta upload through ``codec``.
+
+    ``error_feedback=None`` enables feedback iff the codec is lossy."""
+    ef = codec.lossy if error_feedback is None else error_feedback
+    needs_ids = ef or alg.needs_client_ids
+
+    def init_server(params, specs, fed):
+        sstate = dict(alg.init_server(params, specs, fed))
+        if ef:
+            # per-client residuals: num_clients f32 copies of the params,
+            # same footprint as SCAFFOLD's control-variate table
+            sstate[EF_KEY] = init_ef_table(params, fed.num_clients)
+        if codec.stochastic:
+            sstate[ROUND_KEY] = jnp.zeros((), jnp.int32)
+        return sstate
+
+    def init_client(params, sstate, fed, specs=None, client_id=None):
+        kw = {"specs": specs}
+        if alg.needs_client_ids:
+            kw["client_id"] = client_id
+        cstate = dict(alg.init_client(params, sstate, fed, **kw))
+        if ef:
+            if client_id is None:
+                raise ValueError(
+                    f"{alg.name}+{codec.name} uses error feedback: "
+                    "init_client needs the sampled client_id")
+            cstate[EF_KEY] = client_residual(sstate[EF_KEY], client_id)
+            cstate[CID_KEY] = jnp.asarray(client_id, jnp.int32)
+        if codec.stochastic:
+            cstate[ROUND_KEY] = sstate[ROUND_KEY]
+        return cstate
+
+    def local_step(params, grads, cstate, sstate, fed, lr_scale):
+        comm = {k: cstate[k] for k in COMM_STATE_KEYS if k in cstate}
+        params, new_c = alg.local_step(params, grads, _strip_comm(cstate),
+                                       sstate, fed, lr_scale)
+        new_c = dict(new_c)
+        new_c.update(comm)
+        return params, new_c
+
+    def upload(delta, cstate, specs, fed):
+        up = dict(alg.upload(delta, _strip_comm(cstate), specs, fed))
+        target = tree_add(delta, cstate[EF_KEY]) if ef else delta
+        key = (_encode_key(cstate.get(ROUND_KEY), cstate.get(CID_KEY),
+                           target)
+               if codec.stochastic else jax.random.PRNGKey(0))
+        decoded = codec.decode(codec.encode(target, key))
+        decoded = jax.tree.map(lambda d, x: d.astype(x.dtype),
+                               decoded, delta)
+        up["delta"] = decoded
+        if ef:
+            up[EF_KEY] = tree_sub(target, decoded)
+        return up
+
+    def server_update(params, sstate, mean_up, specs, fed,
+                      per_client=None, client_ids=None):
+        base_mean = {k: v for k, v in mean_up.items() if k != EF_KEY}
+        if alg.needs_client_ids:
+            base_pc = (None if per_client is None else
+                       {k: v for k, v in per_client.items() if k != EF_KEY})
+            new_params, new_sstate = alg.server_update(
+                params, sstate, base_mean, specs, fed,
+                per_client=base_pc, client_ids=client_ids)
+        else:
+            new_params, new_sstate = alg.server_update(
+                params, sstate, base_mean, specs, fed)
+        new_sstate = dict(new_sstate)
+        if ef:
+            table = sstate[EF_KEY]
+            if per_client is not None and client_ids is not None:
+                table = scatter_residuals(table, per_client[EF_KEY],
+                                          client_ids)
+            new_sstate[EF_KEY] = table
+        if codec.stochastic:
+            new_sstate[ROUND_KEY] = sstate[ROUND_KEY] + 1
+        return new_params, new_sstate
+
+    return FedAlgorithm(f"{alg.name}+{codec.name}", init_server, init_client,
+                        local_step, upload, server_update,
+                        needs_client_ids=needs_ids)

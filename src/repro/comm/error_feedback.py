@@ -1,0 +1,55 @@
+"""Client-resident error feedback for lossy upload codecs.
+
+Each client i keeps a residual e_i across rounds and uploads the
+compressed *compensated* delta (EF-SGD / EF21 family):
+
+    target_i = delta_i + e_i
+    wire_i   = decode(encode(target_i))
+    e_i'     = target_i - wire_i
+
+so the quantization/sparsification error is re-injected instead of lost —
+the cumulative compression error stays bounded and lossy codecs track the
+uncompressed trajectory.
+
+In a real deployment e_i never leaves the client. This simulation keeps
+the per-client residuals in a server-state table indexed by client id
+(exactly how SCAFFOLD's per-client control variates are simulated here);
+the residual rides the upload pytree only to reach the scatter update and
+is excluded from wire accounting (:func:`repro.comm.upload_wire_bytes`).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+# keys the compression wrapper threads through client state / uploads;
+# never part of the base algorithm's own state
+EF_KEY = "comm_ef"
+CID_KEY = "comm_cid"
+ROUND_KEY = "comm_round"
+COMM_STATE_KEYS = (EF_KEY, CID_KEY, ROUND_KEY)
+
+
+def init_ef_table(params: Tree, num_clients: int) -> Tree:
+    """Zero residual table: one f32 copy of the params per client."""
+    return jax.tree.map(
+        lambda x: jnp.zeros((num_clients,) + x.shape, jnp.float32), params)
+
+
+def client_residual(table: Tree, client_id) -> Tree:
+    return jax.tree.map(lambda t: t[client_id], table)
+
+
+def scatter_residuals(table: Tree, per_client_residuals: Tree,
+                      client_ids) -> Tree:
+    """Write the sampled clients' new residuals back into the table.
+
+    ``per_client_residuals`` leaves carry a leading (S,) client axis (the
+    vmapped uploads); ``client_ids`` is the matching (S,) index vector."""
+    return jax.tree.map(
+        lambda t, u: t.at[client_ids].set(u.astype(jnp.float32)),
+        table, per_client_residuals)

@@ -58,6 +58,11 @@ class FedConfig:
 
     use_pallas_update: bool = False    # route local update through the Pallas kernel
 
+    # communication layer (repro.comm): algorithm names take an upload
+    # codec suffix ("fedadamw+int4", "fedadamw+topk0.1", ...)
+    comm_error_feedback: bool = True   # EF for lossy codecs (client_parallel)
+    use_pallas_quantpack: bool = False  # fused quantize-pack kernel for int8/int4
+
     # gradient micro-batching inside each local step: the per-step batch is
     # split into this many chunks whose gradients are accumulated (identical
     # semantics — the mean of micro-gradients IS the batch gradient) so the
@@ -67,13 +72,19 @@ class FedConfig:
     grad_microbatches: int = 1
 
     def validate(self) -> None:
-        base = self.algorithm.removesuffix("+int8")
+        # lazy import: the comm layer depends on this config module
+        from repro.comm.codecs import split_algorithm_name
+        base, codec_spec = split_algorithm_name(self.algorithm)
         if base not in (
             "fedadamw", "fedavg", "scaffold", "fedcm", "fedadam", "fedlada",
             "local_adam", "local_adamw", "local_sgd",
             "fedlamb", "fedlion",  # beyond-paper (paper conclusion)
         ):
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if codec_spec:
+            # raises ValueError on unknown codec specs
+            from repro.comm.codecs import parse_codec_spec
+            parse_codec_spec(codec_spec)
         if self.v_aggregation not in ("mean_v", "full_v", "full_vm", "none"):
             raise ValueError(f"unknown v_aggregation {self.v_aggregation!r}")
         if self.layout not in ("client_parallel", "client_sequential"):

@@ -16,6 +16,7 @@ from repro.core.rounds import (
     init_server_state,
     build_fed_state,
     cosine_lr_scale,
+    upload_shape_spec,
 )
 
 __all__ = [
@@ -23,5 +24,5 @@ __all__ = [
     "tree_block_means", "tree_broadcast_means", "total_blocks",
     "get_algorithm", "FedAlgorithm", "upload_bytes",
     "make_round_fn", "make_local_phase", "init_server_state",
-    "build_fed_state", "cosine_lr_scale",
+    "build_fed_state", "cosine_lr_scale", "upload_shape_spec",
 ]

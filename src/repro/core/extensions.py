@@ -11,11 +11,10 @@ optimizers to FL such as LAMB or Lion").
              it keeps the Delta_G correction and decoupled decay. Its
              upload is delta only (1x communication).
 
-Also here: ``int8`` fake-quantized uploads (symmetric per-tensor scale) —
-a communication-efficiency knob composable with every algorithm; the
-math uses the dequantized values (quantization error enters the average
-exactly as it would on the wire) while ``wire_bytes`` reports the true
-transfer size.
+The int8 upload quantization that used to live here moved into the
+communication layer (:mod:`repro.comm`): ``fake_quant_int8``,
+``quantized`` and ``wire_bytes`` remain as deprecated aliases so existing
+imports and the ``"+int8"`` algorithm-name suffix keep working.
 """
 from __future__ import annotations
 
@@ -110,43 +109,27 @@ def fedlion() -> FedAlgorithm:
 
 
 # ---------------------------------------------------------------------------
-# int8 upload quantization (composable wrapper)
+# int8 upload quantization — DEPRECATED, now repro.comm (kept as aliases)
 # ---------------------------------------------------------------------------
 
 def fake_quant_int8(x: jax.Array) -> jax.Array:
-    """Symmetric per-tensor int8 fake quantization (quantize->dequantize).
-    The averaging then sees exactly the values the wire would carry."""
-    x32 = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(x32)) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(x32 / scale), -127, 127)
-    return (q * scale).astype(x.dtype)
+    """Deprecated: ``decode(encode(x))`` of the ``int8`` codec in
+    :mod:`repro.comm.codecs`."""
+    from repro.comm import get_codec
+    codec = get_codec("int8")
+    out = codec.decode(codec.encode(x, jax.random.PRNGKey(0)))
+    return out.astype(x.dtype)
 
 
 def quantized(alg: FedAlgorithm) -> FedAlgorithm:
-    """Wrap any algorithm so its delta upload is int8-quantized."""
-    base_upload = alg.upload
-
-    def upload(delta, cstate, specs, fed):
-        up = base_upload(delta, cstate, specs, fed)
-        if "delta" in up:
-            up = dict(up)
-            up["delta"] = jax.tree.map(fake_quant_int8, up["delta"])
-        return up
-
-    return FedAlgorithm(alg.name + "+int8", alg.init_server,
-                        alg.init_client, alg.local_step, upload,
-                        alg.server_update, alg.needs_client_ids)
+    """Deprecated: ``repro.comm.compressed(alg, get_codec("int8"))`` —
+    preserved with the original semantics (no error feedback)."""
+    from repro.comm import compressed, get_codec
+    return compressed(alg, get_codec("int8"), error_feedback=False)
 
 
 def wire_bytes(upload_tree, *, delta_int8: bool = False) -> int:
-    """True transfer size: int8 deltas count 1 byte/elem + 4 for the
-    scale; everything else its dtype size."""
-    total = 0
-    for kp, leaf in jax.tree_util.tree_flatten_with_path(upload_tree)[0]:
-        names = [getattr(k, "key", str(k)) for k in kp]
-        if delta_int8 and names and names[0] == "delta":
-            total += leaf.size + 4
-        else:
-            total += leaf.size * leaf.dtype.itemsize
-    return total
+    """Deprecated: :func:`repro.comm.upload_wire_bytes` with a codec."""
+    from repro.comm import get_codec, upload_wire_bytes
+    return upload_wire_bytes(upload_tree,
+                             get_codec("int8") if delta_int8 else None)

@@ -478,15 +478,21 @@ def _fedlada() -> FedAlgorithm:
 # ---------------------------------------------------------------------------
 
 def get_algorithm(fed: FedConfig) -> FedAlgorithm:
+    """Resolve ``fed.algorithm``: ``<base>[+<codec>]`` where the suffix is
+    an upload codec spec (``fedadamw+int4``, ``fedadamw+topk0.1``, ...)
+    handled by the communication layer (repro.comm)."""
     fed.validate()
-    name = fed.algorithm
-    quant = name.endswith("+int8")
-    if quant:
-        name = name[:-len("+int8")]
-    alg = _get_base_algorithm(name)
-    if quant:
-        from repro.core.extensions import quantized
-        alg = quantized(alg)
+    from repro.comm import compressed, get_codec, split_algorithm_name
+    base_name, codec_spec = split_algorithm_name(fed.algorithm)
+    alg = _get_base_algorithm(base_name)
+    if codec_spec:
+        codec = get_codec(codec_spec, use_pallas=fed.use_pallas_quantpack)
+        # error feedback keeps a per-client residual table, which (like
+        # SCAFFOLD's control variates) needs the sampled client ids —
+        # only the client_parallel layout provides them
+        ef = (codec.lossy and fed.comm_error_feedback
+              and fed.layout == "client_parallel")
+        alg = compressed(alg, codec, error_feedback=ef)
     return alg
 
 

@@ -194,3 +194,17 @@ def build_fed_state(model, fed: FedConfig, rng: jax.Array,
     alg = get_algorithm(fed)
     sstate = init_server_state(alg, params, specs, fed)
     return params, specs, alg, sstate
+
+
+def upload_shape_spec(alg: FedAlgorithm, params, sstate, specs,
+                      fed: FedConfig):
+    """Shape/dtype spec of one client's upload pytree (no FLOPs: abstract
+    evaluation only). ``params`` stands in for the delta — same spec."""
+    def one_upload():
+        kw = {"specs": specs}
+        if alg.needs_client_ids:
+            kw["client_id"] = jnp.zeros((), jnp.int32)
+        cstate = alg.init_client(params, sstate, fed, **kw)
+        return alg.upload(params, cstate, specs, fed)
+
+    return jax.eval_shape(one_upload)

@@ -7,6 +7,8 @@ per round over every parameter (DESIGN.md §5):
                  fusing 5 HBM round-trips into one read/write pass)
 ``blockmean``    tiled column-mean reduction used for the O(B) block-mean
                  second-moment upload (paper Eq. 4)
+``quantpack``    fused per-tensor scale + int8/int4 quantize-pack for the
+                 upload codecs (repro.comm)
 
 Each kernel ships ``ops.py`` (jit'd wrapper) and ``ref.py`` (pure-jnp
 oracle); tests sweep shapes/dtypes with assert_allclose. Kernels target

@@ -1,0 +1,11 @@
+"""Fused quantize-pack kernel for the upload codecs (repro.comm)."""
+from repro.kernels.quantpack.quantpack import (
+    BLOCK_ROWS,
+    LANES,
+    quantpack_int4_2d,
+    quantpack_int8_2d,
+)
+from repro.kernels.quantpack.ops import quantpack_leaf
+
+__all__ = ["BLOCK_ROWS", "LANES", "quantpack_int4_2d", "quantpack_int8_2d",
+           "quantpack_leaf"]

@@ -1,0 +1,46 @@
+"""jit'd wrapper: run arbitrary leaves through the fused quantize-pack
+kernel (flatten -> pad to (R, LANES) tiles -> kernel -> slice to the
+exact wire length).
+
+Zero padding is mask-correct by construction: pads cannot raise the
+absmax, quantize to code 0 (int8) / 8 (int4 offset) and are sliced off —
+except the shared final nibble of an odd-length int4 tensor, which holds
+the same zero code the jnp codec writes, so the wire bytes are identical.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantpack.quantpack import (
+    BLOCK_ROWS, LANES, quantpack_int4_2d, quantpack_int8_2d)
+
+TILE = BLOCK_ROWS * LANES
+
+
+def _pad_to_tiles(flat: jax.Array) -> jax.Array:
+    pad = (-flat.size) % TILE
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    return flat.reshape(-1, LANES)
+
+
+def quantpack_leaf(x: jax.Array, *, bits: int,
+                   key: Optional[jax.Array] = None,
+                   interpret: bool = True) -> Dict[str, jax.Array]:
+    """One tensor -> wire payload dict, same format as the jnp codec path
+    (``repro.comm.codecs``): int8 -> {"q": int8 (n,), "scale": ()};
+    int4 -> {"q": packed uint8 (ceil(n/2),), "scale": ()}."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.size
+    x2d = _pad_to_tiles(flat)
+    if bits == 8:
+        q, scale = quantpack_int8_2d(x2d, interpret=interpret)
+        return {"q": q.reshape(-1)[:n], "scale": scale[0, 0]}
+    if bits != 4:
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    u = jax.random.uniform(key, x2d.shape, jnp.float32)
+    packed, scale = quantpack_int4_2d(x2d, u, interpret=interpret)
+    return {"q": packed.reshape(-1)[:(n + 1) // 2], "scale": scale[0, 0]}

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused quantize-pack kernel.
+
+Same scale formula and rounding as the kernel so parity is exact: scales
+bit-exact (max-reduction order cannot change the result, the division is
+the same op), codes exact for identical noise.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantpack.quantpack import (INV_QMAX4, INV_QMAX8,
+                                               SCALE_FLOOR)
+
+
+def quantpack_int8_ref(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (R, C) f32 -> (codes int8 (R, C), scale f32 ())."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), SCALE_FLOOR) * INV_QMAX8
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantpack_int4_ref(x: jax.Array, u: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """x, u: (R, C) f32, C even -> (packed uint8 (R, C // 2), scale ())."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), SCALE_FLOOR) * INV_QMAX4
+    q = jnp.clip(jnp.floor(x32 / scale + u), -8, 7)
+    codes = (q + 8).astype(jnp.uint8)
+    pairs = codes.reshape(codes.shape[0], -1, 2)
+    return pairs[..., 0] | (pairs[..., 1] << 4), scale

@@ -22,9 +22,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import codec_for, upload_wire_bytes
 from repro.config import FedConfig, get_arch
 from repro.config.model_config import reduced_variant
-from repro.core import (build_fed_state, make_round_fn, upload_bytes)
+from repro.core import build_fed_state, make_round_fn, upload_shape_spec
 from repro.data import make_task, round_batches, sample_clients
 from repro.metrics import CSVLogger, Meter
 from repro.models import build_model
@@ -49,7 +50,9 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                  task_kind: str = "class_lm", seq_len: int = 32,
                  log_path: str = "", eval_every: int = 5,
                  cosine: bool = True, use_pallas: bool = False,
-                 layout: str = "client_parallel") -> Dict[str, list]:
+                 layout: str = "client_parallel",
+                 comm_error_feedback: bool = True,
+                 use_pallas_quantpack: bool = False) -> Dict[str, list]:
     cfg = get_arch(arch)
     if reduce_model:
         cfg = reduced_variant(cfg)
@@ -62,7 +65,9 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         v_aggregation=v_aggregation, decoupled_wd=decoupled_wd,
         layout=layout,
         sequential_clients=clients_per_round,
-        use_pallas_update=use_pallas)
+        use_pallas_update=use_pallas,
+        comm_error_feedback=comm_error_feedback,
+        use_pallas_quantpack=use_pallas_quantpack)
     model = build_model(cfg, compute_dtype=jnp.float32)
     task = make_task(task_kind, vocab_size=cfg.vocab_size, seq_len=seq_len,
                      num_samples=max(2048, 64 * num_clients),
@@ -81,7 +86,14 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
     history = {"round": [], "train_loss": [], "test_acc": [],
                "test_loss": [], "upload_mbytes": []}
 
-    comm_bytes = None
+    # per-client wire bytes (paper Table 7 accounting, codec-aware): the
+    # delta entry is costed through the codec's packed payload, not its
+    # dense dequantized f32 shape; EF residuals are client-resident and
+    # cost nothing. Payload sizes are shape-static, so one abstract
+    # evaluation prices every round.
+    codec = codec_for(fed.algorithm)
+    comm_bytes = upload_wire_bytes(
+        upload_shape_spec(alg, params, sstate, specs, fed), codec)
     for r in range(rounds):
         cids = sample_clients(fed.num_clients, fed.clients_per_round, rng)
         batches = round_batches(task, cids, fed.local_steps, batch_size, rng)
@@ -90,14 +102,6 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
             params, sstate, batches, jnp.asarray(cids), jnp.asarray(r))
         loss = float(metrics["loss_mean"])
         meter.update(loss)
-        if comm_bytes is None:
-            # per-client upload size (paper Table 7 accounting)
-            up_shape = jax.eval_shape(
-                lambda: alg.upload(params, alg.init_client(
-                    params, sstate, fed, specs=specs,
-                    **({"client_id": jnp.zeros((), jnp.int32)}
-                       if alg.needs_client_ids else {})), specs, fed))
-            comm_bytes = upload_bytes(up_shape)
         rec = {"round": r, "train_loss": loss,
                "upload_mbytes": comm_bytes / 1e6}
         if (r + 1) % eval_every == 0 or r == rounds - 1:
@@ -132,6 +136,11 @@ def main() -> None:
     ap.add_argument("--log", default="")
     ap.add_argument("--layout", default="client_parallel")
     ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="disable error feedback for lossy upload codecs")
+    ap.add_argument("--pallas-quantpack", action="store_true",
+                    help="route int8/int4 encoding through the fused "
+                         "quantize-pack kernel")
     args = ap.parse_args()
     t0 = time.time()
     hist = run_training(
@@ -141,7 +150,9 @@ def main() -> None:
         lr=args.lr, weight_decay=args.weight_decay, alpha=args.alpha,
         dirichlet=args.dirichlet, seed=args.seed,
         reduce_model=not args.full_model, log_path=args.log,
-        layout=args.layout, use_pallas=args.pallas)
+        layout=args.layout, use_pallas=args.pallas,
+        comm_error_feedback=not args.no_error_feedback,
+        use_pallas_quantpack=args.pallas_quantpack)
     print(json.dumps({
         "final_train_loss": hist["train_loss"][-1],
         "final_test_acc": hist["test_acc"][-1],

@@ -1,0 +1,325 @@
+"""Communication layer: codec round-trips, wire-byte exactness, error
+feedback, name parsing, and compressed end-to-end training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import build_tiny
+from repro.comm import (EF_KEY, compressed, get_codec, payload_wire_bytes,
+                        upload_wire_bytes)
+from repro.comm.codecs import pack_nibbles, unpack_nibbles
+from repro.config import FedConfig
+from repro.core import build_fed_state, make_round_fn, upload_shape_spec
+from repro.core.fedadamw import get_algorithm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(37, 19)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(101,)), jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# codec round-trips
+# ---------------------------------------------------------------------------
+
+def test_none_roundtrip_exact():
+    x = _tree()
+    c = get_codec("none")
+    y = c.decode(c.encode(x, KEY))
+    for k in x:
+        assert y[k].dtype == x[k].dtype
+        np.testing.assert_array_equal(np.asarray(y[k], np.float32),
+                                      np.asarray(x[k], np.float32))
+
+
+def test_int8_roundtrip_error_bound():
+    x = _tree()
+    c = get_codec("int8")
+    y = c.decode(c.encode(x, KEY))
+    # round-to-nearest: error <= scale / 2 per tensor
+    w32 = np.asarray(x["w"], np.float32)
+    scale = np.abs(w32).max() / 127.0
+    err = np.abs(np.asarray(y["w"], np.float32) - w32).max()
+    assert err <= scale * 0.5 + 1e-7, (err, scale)
+
+
+def test_int4_roundtrip_error_bound():
+    x = _tree()
+    c = get_codec("int4")
+    y = c.decode(c.encode(x, KEY))
+    # stochastic floor: error < scale per tensor
+    w32 = np.asarray(x["w"], np.float32)
+    scale = np.abs(w32).max() / 7.0
+    err = np.abs(np.asarray(y["w"], np.float32) - w32).max()
+    assert err <= scale + 1e-7, (err, scale)
+
+
+def test_int4_stochastic_rounding_unbiased():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(400,)), jnp.float32)
+    c = get_codec("int4")
+    dec = jax.jit(lambda k: c.decode(c.encode(x, k)))
+    n = 300
+    acc = sum(np.asarray(dec(jax.random.PRNGKey(i))) for i in range(n)) / n
+    scale = float(jnp.max(jnp.abs(x))) / 7.0
+    # SE of the mean of U[0,1)-rounding error is scale/sqrt(12 n);
+    # allow ~5 sigma over the max of 400 elements
+    tol = 5.0 * scale / np.sqrt(12 * n)
+    assert np.abs(acc - np.asarray(x)).max() < tol
+
+
+def test_int4_pack_unpack_inverse():
+    codes = jnp.asarray(np.random.default_rng(0).integers(0, 16, 64),
+                        jnp.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_nibbles(pack_nibbles(codes), 64)),
+        np.asarray(codes))
+
+
+def test_topk_keeps_largest():
+    x = {"w": jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0], jnp.float32)}
+    c = get_codec("topk0.34")  # k = ceil(0.34 * 6) = 3
+    y = c.decode(c.encode(x, KEY))["w"]
+    np.testing.assert_allclose(np.asarray(y),
+                               [0.0, -5.0, 0.2, 3.0, 0.0, 0.0], atol=1e-7)
+
+
+def test_lowrank_exact_on_lowrank_matrix():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(24, 3)).astype(np.float32)
+    b = rng.normal(size=(3, 17)).astype(np.float32)
+    x = {"w": jnp.asarray(a @ b)}  # rank 3 exactly
+    c = get_codec("lowrank3")
+    y = c.decode(c.encode(x, KEY))["w"]
+    # single power iteration recovers an exactly-rank-r matrix
+    np.testing.assert_allclose(np.asarray(y), a @ b, rtol=1e-3, atol=1e-3)
+
+
+def test_lowrank_small_leaf_passthrough():
+    x = {"b": jnp.asarray(np.random.default_rng(0).normal(size=(11,)),
+                          jnp.float32)}
+    c = get_codec("lowrank4")
+    y = c.decode(c.encode(x, KEY))["b"]
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x["b"]))
+
+
+# ---------------------------------------------------------------------------
+# wire bytes: exact for every codec
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_exact_per_codec():
+    x = _tree()
+    n_w, n_b = 37 * 19, 101
+    expected = {
+        "none": n_w * 4 + n_b * 2,                      # f32 + bf16
+        "int8": (n_w + 4) + (n_b + 4),                  # bytes + f32 scale
+        "int4": ((n_w + 1) // 2 + 4) + ((n_b + 1) // 2 + 4),
+        # k = ceil(0.1 * n) values (f32) + indices (int32)
+        "topk0.1": (71 * 8) + (11 * 8),
+        # w (37, 19): P (37, 2) + Q (19, 2) f32; b: dense passthrough
+        "lowrank2": (37 + 19) * 2 * 4 + n_b * 4,
+    }
+    for spec, want in expected.items():
+        c = get_codec(spec)
+        got = payload_wire_bytes(c.encode(x, KEY))
+        assert got == want, (spec, got, want)
+        # byte count is shape-static: the eval_shape spec prices the same
+        spec_bytes = c.wire_bytes(
+            jax.eval_shape(lambda t: c.encode(t, KEY), x))
+        assert spec_bytes == want, (spec, spec_bytes, want)
+
+
+def test_upload_wire_bytes_skips_ef_and_costs_codec():
+    up = {"delta": {"w": jnp.zeros((100,), jnp.float32)},
+          "v_mean": jnp.zeros((10,), jnp.float32),
+          EF_KEY: {"w": jnp.zeros((100,), jnp.float32)}}
+    assert upload_wire_bytes(up, None) == 100 * 4 + 10 * 4
+    assert upload_wire_bytes(up, get_codec("int8")) == (100 + 4) + 10 * 4
+
+
+# ---------------------------------------------------------------------------
+# name parsing / registry
+# ---------------------------------------------------------------------------
+
+def test_algorithm_codec_suffix_parsing():
+    alg = get_algorithm(FedConfig(algorithm="fedadamw+int4"))
+    assert alg.name == "fedadamw+int4"
+    assert alg.needs_client_ids  # error feedback table is per-client
+    alg = get_algorithm(FedConfig(algorithm="fedadamw+topk0.25"))
+    assert alg.name == "fedadamw+topk0.25"
+    # lossless codec: no feedback, no client ids needed
+    alg = get_algorithm(FedConfig(algorithm="fedavg+none"))
+    assert not alg.needs_client_ids
+
+
+def test_unknown_codec_spec_rejected():
+    with pytest.raises(ValueError):
+        FedConfig(algorithm="fedadamw+int2").validate()
+    with pytest.raises(ValueError):
+        get_codec("bogus")
+    with pytest.raises(ValueError):
+        get_codec("topk1.5")
+
+
+def test_int8_backcompat_alias():
+    """The pre-comm-layer ``"+int8"`` spelling and the deprecated
+    extensions entry points keep working."""
+    from repro.core.extensions import fake_quant_int8, quantized, wire_bytes
+    alg = get_algorithm(FedConfig(algorithm="fedadamw+int8"))
+    assert alg.name == "fedadamw+int8"
+    wrapped = quantized(get_algorithm(FedConfig(algorithm="fedavg")))
+    assert wrapped.name == "fedavg+int8"
+    assert not wrapped.needs_client_ids  # legacy wrapper: no feedback
+    x = jnp.asarray([0.0, 1.0, -1.0, 0.5], jnp.float32)
+    q = fake_quant_int8(x)
+    np.testing.assert_allclose(float(q[1]), 1.0, rtol=1e-6)
+    up = {"delta": {"w": jnp.zeros((100,), jnp.float32)},
+          "v_mean": jnp.zeros((10,), jnp.float32)}
+    assert wire_bytes(up, delta_int8=True) == 100 + 4 + 10 * 4
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_residual_identity():
+    """One upload: residual == compensated target minus wire values."""
+    fed = FedConfig(algorithm="fedadamw+int4", num_clients=4,
+                    clients_per_round=2, local_steps=2)
+    codec = get_codec("int4")
+    alg = compressed(get_algorithm(FedConfig(algorithm="fedadamw")),
+                     codec, error_feedback=True)
+    delta = {"w": jnp.asarray(
+        np.random.default_rng(0).normal(size=(8, 16)), jnp.float32)}
+    ef = {"w": jnp.full((8, 16), 0.25, jnp.float32)}
+    cstate = {"m": delta, "v": delta, "k": jnp.zeros((), jnp.int32),
+              EF_KEY: ef, "comm_cid": jnp.zeros((), jnp.int32)}
+    fed0 = FedConfig(algorithm="fedadamw", v_aggregation="none",
+                     num_clients=4, clients_per_round=2, local_steps=2)
+    up = alg.upload(delta, cstate, None, fed0)
+    target = np.asarray(delta["w"]) + 0.25
+    np.testing.assert_allclose(
+        np.asarray(up[EF_KEY]["w"]),
+        target - np.asarray(up["delta"]["w"]), atol=1e-6)
+    # lossy wire: residual must be nonzero
+    assert float(jnp.abs(up[EF_KEY]["w"]).max()) > 0
+
+
+def test_stochastic_noise_varies_per_round_and_client():
+    """The wrapper's round counter decorrelates int4 rounding noise
+    across rounds even for identical deltas (a repeated delta must not
+    see the same noise stream, or its quantization error would become a
+    systematic bias)."""
+    codec = get_codec("int4")
+    alg = compressed(get_algorithm(FedConfig(algorithm="fedavg")),
+                     codec, error_feedback=True)
+    fed = FedConfig(algorithm="fedavg", num_clients=4, clients_per_round=2)
+    delta = {"w": jnp.asarray(
+        np.random.default_rng(0).normal(size=(64,)), jnp.float32)}
+    zero_ef = {"w": jnp.zeros((64,), jnp.float32)}
+
+    def wire(rnd, cid):
+        cstate = {"k": jnp.zeros((), jnp.int32), EF_KEY: zero_ef,
+                  "comm_cid": jnp.asarray(cid, jnp.int32),
+                  "comm_round": jnp.asarray(rnd, jnp.int32)}
+        return np.asarray(alg.upload(delta, cstate, None, fed)["delta"]["w"])
+
+    assert not np.array_equal(wire(0, 0), wire(1, 0))  # across rounds
+    assert not np.array_equal(wire(0, 0), wire(0, 1))  # across clients
+    np.testing.assert_array_equal(wire(2, 1), wire(2, 1))  # reproducible
+
+    # without error feedback there is no client id: the data-salt still
+    # decorrelates rounds (via the counter) for a repeated delta
+    alg_noef = compressed(get_algorithm(FedConfig(algorithm="fedavg")),
+                          codec, error_feedback=False)
+
+    def wire_noef(rnd):
+        cstate = {"k": jnp.zeros((), jnp.int32),
+                  "comm_round": jnp.asarray(rnd, jnp.int32)}
+        return np.asarray(
+            alg_noef.upload(delta, cstate, None, fed)["delta"]["w"])
+
+    assert not np.array_equal(wire_noef(0), wire_noef(1))
+    np.testing.assert_array_equal(wire_noef(0), wire_noef(0))
+
+
+def _round_setup(algorithm, num_clients=4):
+    cfg, model, _ = build_tiny("dense")
+    fed = FedConfig(algorithm=algorithm, num_clients=num_clients,
+                    clients_per_round=num_clients, local_steps=4, lr=1e-3)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    round_fn = jax.jit(make_round_fn(model, fed, specs, alg=alg))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (num_clients, 4, 4, 16))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32),
+             "labels": jnp.asarray(np.roll(toks, -1, -1), jnp.int32)}
+    cids = jnp.arange(num_clients, dtype=jnp.int32)
+    return fed, params, specs, alg, sstate, round_fn, batch, cids
+
+
+def test_error_feedback_accumulates_across_rounds():
+    fed, params, specs, alg, sstate, round_fn, batch, cids = \
+        _round_setup("fedadamw+topk0.1")
+    assert EF_KEY in sstate
+
+    def table_norms(s):
+        return np.asarray(jnp.stack(
+            [jnp.sum(jnp.abs(t)) for t in jax.tree.leaves(s[EF_KEY])]))
+
+    assert table_norms(sstate).sum() == 0.0
+    params, sstate, _ = round_fn(params, sstate, batch, cids,
+                                 jnp.asarray(0))
+    after1 = table_norms(sstate).sum()
+    assert after1 > 0.0  # lossy upload left a residual for every client
+    params, sstate2, _ = round_fn(params, sstate, batch, cids,
+                                  jnp.asarray(1))
+    after2 = table_norms(sstate2).sum()
+    # round 2 re-encodes delta + residual: table changes but stays bounded
+    assert after2 > 0.0 and np.isfinite(after2)
+    assert not np.allclose(after1, after2)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: compressed algorithms train through the jitted round engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["fedadamw+int4", "fedadamw+topk0.1",
+                                       "fedadamw+lowrank4"])
+def test_compressed_trains_and_saves_bytes(algorithm):
+    fed, params, specs, alg, sstate, round_fn, batch, cids = \
+        _round_setup(algorithm)
+    losses = []
+    for r in range(3):
+        params, sstate, m = round_fn(params, sstate, batch, cids,
+                                     jnp.asarray(r))
+        losses.append(float(m["loss_mean"]))
+    assert all(np.isfinite(losses)) and losses[-1] < losses[0], losses
+    for p in jax.tree.leaves(params):
+        assert bool(jnp.all(jnp.isfinite(p)))
+    # codec-aware wire accounting strictly below the dense upload
+    codec = get_codec(algorithm.partition("+")[2])
+    spec = upload_shape_spec(alg, params, sstate, specs, fed)
+    assert upload_wire_bytes(spec, codec) < upload_wire_bytes(spec, None)
+
+
+def test_quantized_trajectory_close_to_dense():
+    """int4 + EF must not materially change the training trajectory."""
+    def run(algorithm):
+        fed, params, specs, alg, sstate, round_fn, batch, cids = \
+            _round_setup(algorithm)
+        losses = []
+        for r in range(3):
+            params, sstate, m = round_fn(params, sstate, batch, cids,
+                                         jnp.asarray(r))
+            losses.append(float(m["loss_mean"]))
+        return losses
+
+    l_dense = run("fedadamw")
+    l_int4 = run("fedadamw+int4")
+    assert abs(l_dense[-1] - l_int4[-1]) < 0.1 * abs(l_dense[-1]), \
+        (l_dense, l_int4)

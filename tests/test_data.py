@@ -1,7 +1,8 @@
 """Data pipeline: Dirichlet partitioning properties + batch assembly."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.data import make_task, round_batches, sample_clients
 from repro.data.synthetic import dirichlet_label_partition

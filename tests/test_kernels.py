@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.blockmean.ops import block_means_2d
 from repro.kernels.blockmean.ref import column_mean_ref
@@ -96,3 +97,66 @@ def test_blockmean_exact_fp32():
     np.testing.assert_allclose(np.asarray(block_means_2d(x)),
                                np.asarray(column_mean_ref(x)),
                                rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# quantpack: fused per-tensor scale + quantize-pack (upload codecs)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.quantpack import (quantpack_int4_2d, quantpack_int8_2d,
+                                     quantpack_leaf)
+from repro.kernels.quantpack.quantpack import BLOCK_ROWS as QP_ROWS
+from repro.kernels.quantpack.quantpack import LANES as QP_LANES
+from repro.kernels.quantpack.ref import quantpack_int4_ref, quantpack_int8_ref
+
+
+@pytest.mark.parametrize("tiles", [1, 2, 5])
+def test_quantpack_int8_matches_ref_bit_exact(tiles):
+    rng = np.random.default_rng(tiles)
+    x = jnp.asarray(rng.normal(size=(tiles * QP_ROWS, QP_LANES)),
+                    jnp.float32)
+    q, s = quantpack_int8_2d(x)
+    qr, sr = quantpack_int8_ref(x)
+    # scale bit-exact, codes exact (deterministic round-to-nearest)
+    assert np.asarray(s[0, 0]).tobytes() == np.asarray(sr).tobytes()
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+
+
+@pytest.mark.parametrize("tiles", [1, 3])
+def test_quantpack_int4_matches_ref_bit_exact(tiles):
+    rng = np.random.default_rng(100 + tiles)
+    x = jnp.asarray(rng.normal(size=(tiles * QP_ROWS, QP_LANES)),
+                    jnp.float32)
+    u = jnp.asarray(rng.uniform(size=x.shape), jnp.float32)
+    packed, s = quantpack_int4_2d(x, u)
+    pr, sr = quantpack_int4_ref(x, u)
+    assert packed.dtype == jnp.uint8 and packed.shape == (x.shape[0],
+                                                          QP_LANES // 2)
+    assert np.asarray(s[0, 0]).tobytes() == np.asarray(sr).tobytes()
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(pr))
+
+
+def test_quantpack_leaf_matches_jnp_codec():
+    """The kernel path emits the exact wire payload of the jnp int8 codec
+    (same scale formula, same packing) for arbitrary leaf shapes."""
+    from repro.comm.codecs import _int8_encode_leaf
+    rng = np.random.default_rng(0)
+    for shape in [(37, 19), (5,), (130,), (3, 5, 9)]:
+        leaf = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        pk = quantpack_leaf(leaf, bits=8)
+        pj = _int8_encode_leaf(leaf, None)
+        assert np.asarray(pk["scale"]).tobytes() == \
+            np.asarray(pj["scale"]).tobytes()
+        np.testing.assert_array_equal(np.asarray(pk["q"]),
+                                      np.asarray(pj["q"]))
+
+
+def test_quantpack_leaf_int4_wire_size_and_bound():
+    from repro.comm.codecs import _int4_decode_leaf
+    rng = np.random.default_rng(1)
+    leaf = jnp.asarray(rng.normal(size=(33, 7)), jnp.float32)  # odd count
+    payload = quantpack_leaf(leaf, bits=4, key=jax.random.PRNGKey(2))
+    assert payload["q"].shape == ((leaf.size + 1) // 2,)
+    dec = _int4_decode_leaf(payload, leaf.shape, jnp.float32)
+    err = float(jnp.max(jnp.abs(dec - leaf)))
+    assert err <= float(payload["scale"]) + 1e-7
