@@ -18,7 +18,7 @@ def main() -> None:
                             roofline_report, speedup_theorem1, table1_main,
                             table4_ablation, table5_alpha,
                             table6_weight_decay, table7_aggregation,
-                            table_comm_codecs)
+                            table_comm_codecs, table_state_store)
     benches = [
         ("fig1_adamw_vs_sgd", fig1_adamw_vs_sgd.run),
         ("fig2_variance_drift", fig2_variance_drift.run),
@@ -28,6 +28,7 @@ def main() -> None:
         ("table6_weight_decay", table6_weight_decay.run),
         ("table7_aggregation", table7_aggregation.run),
         ("table_comm_codecs", table_comm_codecs.run),
+        ("table_state_store", table_state_store.run),
         ("speedup_theorem1", speedup_theorem1.run),
         ("beyond_paper", beyond_paper.run),
         ("kernels_bench", kernels_bench.run),

@@ -1,0 +1,86 @@
+"""Client-state store: table memory by policy + trajectory fidelity.
+
+Two claims this table makes measurable (ISSUE 2 acceptance):
+
+  * memory — the per-client state table (SCAFFOLD control variates / EF
+    residuals) under ``dense`` vs ``blockmean`` vs ``int8`` storage, with
+    the reduction factor vs dense (int8 must be >= 3.5x);
+  * fidelity — final train loss of SCAFFOLD and fedadamw+int4 (EF on)
+    per (policy, layout), showing the lossy policies track dense and the
+    two placement layouts agree (client_sequential used to be banned for
+    both algorithms).
+
+Usage: BENCH_QUICK=1 python benchmarks/table_state_store.py
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, bench_fl, budget, print_table
+
+POLICIES = ["dense", "blockmean", "int8"]
+ALGORITHMS = ["scaffold", "fedadamw+int4"]
+LAYOUTS = ["client_parallel", "client_sequential"]
+
+
+def _table_mb():
+    """Exact per-policy table bytes for the benchmark model's param tree."""
+    from repro.config import FedConfig, get_arch
+    from repro.config.model_config import reduced_variant
+    from repro.core.partition import build_block_specs
+    from repro.models import build_model
+    from repro.state import store_for
+
+    cfg = reduced_variant(get_arch("vit-tiny-fl"))
+    fed = FedConfig(num_clients=budget(16, 4))
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    specs = build_block_specs(params, cfg, fed)
+    return {p: store_for(fed, specs, policy=p).table_bytes()
+            for p in POLICIES}
+
+
+def run() -> Rows:
+    rows = Rows("table_state_store")
+    sizes = _table_mb()
+    dense_b = sizes["dense"]
+
+    final = {}
+    for alg in ALGORITHMS:
+        for layout in LAYOUTS:
+            for policy in POLICIES:
+                hist = bench_fl(alg, layout=layout,
+                                client_state_policy=policy)
+                final[(alg, layout, policy)] = hist["train_loss"][-1]
+
+    for policy in POLICIES:
+        row = dict(
+            policy=policy,
+            table_mb=round(sizes[policy] / 1e6, 4),
+            reduction_vs_dense=round(dense_b / sizes[policy], 2),
+        )
+        for alg in ALGORITHMS:
+            short = alg.replace("fedadamw", "fadamw")
+            for layout in LAYOUTS:
+                row[f"{short}_{layout.split('_')[1]}_loss"] = round(
+                    final[(alg, layout, policy)], 4)
+        rows.add(**row)
+
+    path = rows.save()
+    print_table("client-state store: memory x fidelity", rows.rows)
+    assert dense_b / sizes["int8"] >= 3.5, sizes
+    # layout parity on the dense policy: the sequential run must land on
+    # the parallel trajectory (same clients, same batches, same noise)
+    for alg in ALGORITHMS:
+        a = final[(alg, "client_parallel", "dense")]
+        b = final[(alg, "client_sequential", "dense")]
+        assert abs(a - b) <= 0.02 * max(abs(a), 1e-9), (alg, a, b)
+    print(f"int8 table reduction: {dense_b / sizes['int8']:.2f}x "
+          f"(>= 3.5x required)")
+    print(f"saved -> {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -9,18 +9,22 @@ through untouched; only the ``delta`` entry is run through
 would carry, while :func:`repro.comm.upload_wire_bytes` costs the true
 payload.
 
-With error feedback on, the wrapper needs the sampled client ids (the
-residual table is indexed by client), so it sets ``needs_client_ids`` and
-requires the ``client_parallel`` layout — same contract as SCAFFOLD.
-Everything stays jit/vmap/scan-compatible: comm state is threaded through
-the client-state dict and carried across the local-step scan unchanged.
+With error feedback on, the per-client residuals live in a
+:class:`repro.state.ClientStateStore` table (policy:
+``FedConfig.client_state_policy``) inside server state; the wrapper sets
+``needs_client_ids`` and commits each sampled client's new residual row
+through the algorithm ``commit`` hook — which the round engine drives in
+BOTH placement layouts (vectorized under ``client_parallel``, one client
+per scan step under ``client_sequential``). Everything stays
+jit/vmap/scan-compatible: comm state is threaded through the client-state
+dict and carried across the local-step scan unchanged.
 
 Behavior change vs the legacy ``extensions.quantized``: the ``"+int8"``
 algorithm suffix now gets error feedback by default, which improves the
-trajectory but allocates the per-client residual table (num_clients f32
-copies of the params). Set ``FedConfig.comm_error_feedback=False`` for
-the old no-feedback semantics; ``extensions.quantized`` itself keeps
-them.
+trajectory but allocates the per-client residual table (``blockmean`` /
+``int8`` store policies shrink it). Set
+``FedConfig.comm_error_feedback=False`` for the old no-feedback
+semantics; ``extensions.quantized`` itself keeps them.
 """
 from __future__ import annotations
 
@@ -31,10 +35,10 @@ import jax.numpy as jnp
 
 from repro.comm.codecs import Codec
 from repro.comm.error_feedback import (CID_KEY, COMM_STATE_KEYS, EF_KEY,
-                                       ROUND_KEY, client_residual,
-                                       init_ef_table, scatter_residuals)
+                                       ROUND_KEY)
 from repro.core.fedadamw import FedAlgorithm
 from repro.core.tree_util import tree_add, tree_sub
+from repro.state import store_for
 
 
 def _strip_comm(d: dict) -> dict:
@@ -45,11 +49,13 @@ def _encode_key(round_index, client_id, target) -> jax.Array:
     """Per-(round, client) PRNG key, derived inside the trace: stochastic
     codecs need noise independent of the data and fresh each round, but
     the round engine threads no rng — so the wrapper keeps its own round
-    counter in server state and folds it with the client id. Without
-    error feedback there is no client id in scope; a salt from the
-    client's own delta bits decorrelates the vmapped clients instead
-    (the round fold still guarantees a repeated delta draws fresh
-    noise, so no systematic bias across rounds)."""
+    counter in server state and folds it with the sampled client id
+    (which both placement layouts now thread to every stochastic-codec
+    client). The data-derived salt below is a documented FALLBACK only,
+    for callers that invoke ``upload`` outside the round engine with no
+    client id in scope: without it two clients holding equal-magnitude
+    deltas would draw identical rounding noise and their quantization
+    errors would correlate instead of averaging out."""
     key = jax.random.PRNGKey(0)
     if round_index is not None:
         key = jax.random.fold_in(key, round_index)
@@ -70,14 +76,18 @@ def compressed(alg: FedAlgorithm, codec: Codec, *,
 
     ``error_feedback=None`` enables feedback iff the codec is lossy."""
     ef = codec.lossy if error_feedback is None else error_feedback
-    needs_ids = ef or alg.needs_client_ids
+    # client ids are needed for the EF residual table AND for stochastic
+    # codecs (per-client rounding noise decorrelation) — both layouts
+    # provide them
+    needs_ids = ef or alg.needs_client_ids or codec.stochastic
 
     def init_server(params, specs, fed):
         sstate = dict(alg.init_server(params, specs, fed))
         if ef:
-            # per-client residuals: num_clients f32 copies of the params,
-            # same footprint as SCAFFOLD's control-variate table
-            sstate[EF_KEY] = init_ef_table(params, fed.num_clients)
+            # per-client residual rows in the client-state store (dense:
+            # num_clients f32 copies of the params, same footprint as
+            # SCAFFOLD's control-variate table; blockmean/int8 shrink it)
+            sstate[EF_KEY] = store_for(fed, specs).init()
         if codec.stochastic:
             sstate[ROUND_KEY] = jnp.zeros((), jnp.int32)
         return sstate
@@ -92,7 +102,9 @@ def compressed(alg: FedAlgorithm, codec: Codec, *,
                 raise ValueError(
                     f"{alg.name}+{codec.name} uses error feedback: "
                     "init_client needs the sampled client_id")
-            cstate[EF_KEY] = client_residual(sstate[EF_KEY], client_id)
+            cstate[EF_KEY] = store_for(fed, specs).gather(
+                sstate[EF_KEY], client_id)
+        if client_id is not None:
             cstate[CID_KEY] = jnp.asarray(client_id, jnp.int32)
         if codec.stochastic:
             cstate[ROUND_KEY] = sstate[ROUND_KEY]
@@ -120,29 +132,35 @@ def compressed(alg: FedAlgorithm, codec: Codec, *,
             up[EF_KEY] = tree_sub(target, decoded)
         return up
 
-    def server_update(params, sstate, mean_up, specs, fed,
-                      per_client=None, client_ids=None):
+    def commit(sstate, up, client_ids, specs, fed):
+        new_sstate = dict(sstate)
+        new_up = {k: v for k, v in up.items() if k != EF_KEY}
+        if ef:
+            new_sstate[EF_KEY] = store_for(fed, specs).scatter(
+                sstate[EF_KEY], client_ids, up[EF_KEY])
+        if alg.commit is not None:
+            new_sstate, new_up = alg.commit(new_sstate, new_up, client_ids,
+                                            specs, fed)
+        return new_sstate, new_up
+
+    def server_update(params, sstate, mean_up, specs, fed):
+        # per-client rows were already committed; EF residuals never reach
+        # the aggregation (commit strips them), so only guard against
+        # direct callers that skip commit
         base_mean = {k: v for k, v in mean_up.items() if k != EF_KEY}
-        if alg.needs_client_ids:
-            base_pc = (None if per_client is None else
-                       {k: v for k, v in per_client.items() if k != EF_KEY})
-            new_params, new_sstate = alg.server_update(
-                params, sstate, base_mean, specs, fed,
-                per_client=base_pc, client_ids=client_ids)
-        else:
-            new_params, new_sstate = alg.server_update(
-                params, sstate, base_mean, specs, fed)
+        new_params, new_sstate = alg.server_update(
+            params, sstate, base_mean, specs, fed)
         new_sstate = dict(new_sstate)
         if ef:
-            table = sstate[EF_KEY]
-            if per_client is not None and client_ids is not None:
-                table = scatter_residuals(table, per_client[EF_KEY],
-                                          client_ids)
-            new_sstate[EF_KEY] = table
+            # base server_updates that rebuild their state dict (fedcm)
+            # would drop the table
+            new_sstate[EF_KEY] = sstate[EF_KEY]
         if codec.stochastic:
             new_sstate[ROUND_KEY] = sstate[ROUND_KEY] + 1
         return new_params, new_sstate
 
     return FedAlgorithm(f"{alg.name}+{codec.name}", init_server, init_client,
                         local_step, upload, server_update,
-                        needs_client_ids=needs_ids)
+                        needs_client_ids=needs_ids,
+                        commit=(commit if (ef or alg.commit is not None)
+                                else None))

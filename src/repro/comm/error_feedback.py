@@ -12,10 +12,16 @@ the cumulative compression error stays bounded and lossy codecs track the
 uncompressed trajectory.
 
 In a real deployment e_i never leaves the client. This simulation keeps
-the per-client residuals in a server-state table indexed by client id
-(exactly how SCAFFOLD's per-client control variates are simulated here);
-the residual rides the upload pytree only to reach the scatter update and
-is excluded from wire accounting (:func:`repro.comm.upload_wire_bytes`).
+the per-client residuals in a :class:`repro.state.ClientStateStore` table
+inside server state (exactly how SCAFFOLD's per-client control variates
+are kept), gathered per client id at round start and scattered back via
+the algorithm ``commit`` hook in both placement layouts; the residual
+rides the upload pytree only to reach that commit and is excluded from
+wire accounting (:func:`repro.comm.upload_wire_bytes`).
+
+The dense-table helpers below predate the store and remain as thin
+dense-policy equivalents for external callers; new code should use
+``repro.state.store_for(fed, specs)`` directly.
 """
 from __future__ import annotations
 

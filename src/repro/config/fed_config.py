@@ -51,6 +51,12 @@ class FedConfig:
     min_block_size: int = 512
     max_blocks: int = 65536
 
+    # per-client server-side state tables (SCAFFOLD control variates, EF
+    # residuals — repro.state.ClientStateStore): how each client's row is
+    # stored. dense (exact f32) | blockmean (per-Hessian-block means,
+    # O(n_blocks)/client) | int8 (quantized rows, ~4x memory cut)
+    client_state_policy: str = "dense"
+
     # placement: client_parallel | client_sequential (see DESIGN.md §2)
     layout: str = "client_parallel"
     # number of sequential client chunks when layout == client_sequential
@@ -89,5 +95,8 @@ class FedConfig:
             raise ValueError(f"unknown v_aggregation {self.v_aggregation!r}")
         if self.layout not in ("client_parallel", "client_sequential"):
             raise ValueError(f"unknown layout {self.layout!r}")
+        if self.client_state_policy not in ("dense", "blockmean", "int8"):
+            raise ValueError(
+                f"unknown client_state_policy {self.client_state_policy!r}")
         if self.clients_per_round > self.num_clients:
             raise ValueError("clients_per_round > num_clients")

@@ -9,8 +9,14 @@ placement layout:
     local_step(params, grads, cstate, sstate, fed,
                lr_scale)                             -> (params, cstate)
     upload(delta, cstate, specs, fed)                -> upload pytree
+    commit(sstate, upload, client_ids, specs, fed)   -> (sstate, upload)
+        [optional: per-client server-state write-back, pre-aggregation]
     server_update(params, sstate, mean_upload,
                   specs, fed)                        -> (params, sstate)
+
+Algorithms with per-client server state (SCAFFOLD, error feedback) keep
+it in a ``repro.state.ClientStateStore`` table and expose ``commit``;
+the round engine drives them identically under both placement layouts.
 
 Conventions
 -----------
@@ -36,7 +42,7 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,9 +63,18 @@ class FedAlgorithm:
     local_step: Callable[..., tuple]
     upload: Callable[..., Dict[str, Tree]]
     server_update: Callable[..., tuple]
-    # scaffold keeps a per-client control variate table on the server and
-    # therefore needs the sampled client ids inside the round
+    # True when the algorithm keeps per-client server state (a
+    # repro.state.ClientStateStore table): the round engine then threads
+    # the sampled client ids to init_client and calls ``commit`` — in
+    # BOTH placement layouts.
     needs_client_ids: bool = False
+    # commit(sstate, upload, client_ids, specs, fed) -> (sstate, upload):
+    # write the sampled clients' new per-client rows into the server-state
+    # tables and reduce/drop per-client-only upload entries, BEFORE the
+    # cross-client aggregation. ``client_ids``/``upload`` are the stacked
+    # (S,)-leading round values under client_parallel, or one scalar id /
+    # one client's upload per call inside the client_sequential scan.
+    commit: Optional[Callable[..., tuple]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -275,18 +290,20 @@ def _fedavg() -> FedAlgorithm:
 # ---------------------------------------------------------------------------
 
 def _scaffold() -> FedAlgorithm:
+    from repro.state import store_for
+
     def init_server(params, specs, fed):
         return {
             "c": tree_zeros_like(params, jnp.float32),
-            # per-client control variates, indexed by client id
-            "c_all": jax.tree.map(
-                lambda x: jnp.zeros((fed.num_clients,) + x.shape, jnp.float32),
-                params),
+            # per-client control variates, indexed by client id; stored
+            # via the client-state store (policy: fed.client_state_policy)
+            "c_all": store_for(fed, specs).init(),
         }
 
     def init_client(params, sstate, fed, specs=None, client_id=None):
-        ci = jax.tree.map(lambda c: c[client_id], sstate["c_all"])
-        return {"k": jnp.zeros((), jnp.int32), "c_i": ci}
+        ci = store_for(fed, specs).gather(sstate["c_all"], client_id)
+        return {"k": jnp.zeros((), jnp.int32), "c_i": ci,
+                "lr_scale": jnp.ones((), jnp.float32)}
 
     def local_step(params, grads, cstate, sstate, fed, lr_scale):
         lr = fed.lr * lr_scale
@@ -297,42 +314,49 @@ def _scaffold() -> FedAlgorithm:
                                          * x.astype(jnp.float32))
                                  ).astype(x.dtype),
             params, grads, cstate["c_i"], sstate["c"])
-        return params, {"k": cstate["k"] + 1, "c_i": cstate["c_i"]}
+        # carry the round's lr scale so upload() divides delta by the
+        # eta actually used (cosine decay would otherwise mis-scale c_i+)
+        return params, {"k": cstate["k"] + 1, "c_i": cstate["c_i"],
+                        "lr_scale": jnp.asarray(lr_scale, jnp.float32)}
 
     def upload(delta, cstate, specs, fed):
         # Option II: c_i+ = c_i - c + (x^r - x^{r,K})/(K*eta)
         #          = c_i - c - delta/(K*eta)   (computed at the server side
         # needs c, so we upload the -delta/(K*eta) part plus old c_i)
-        inv = -1.0 / (fed.local_steps * fed.lr)
+        inv = -1.0 / (fed.local_steps * fed.lr * cstate["lr_scale"])
         return {"delta": delta,
                 "c_new_minus_c": jax.tree.map(
                     lambda ci, d: ci + inv * d.astype(jnp.float32),
                     cstate["c_i"], delta)}
 
-    def server_update(params, sstate, mean_up, specs, fed,
-                      per_client=None, client_ids=None):
+    def commit(sstate, up, client_ids, specs, fed):
+        # c_i+ = (c_i - delta/(K eta)) - c  for the sampled clients;
+        # per-client rows go into the store, the upload keeps only the
+        # control-variate *change* (whose cross-client mean the server
+        # aggregation consumes) — runs identically with stacked (S,)
+        # uploads (client_parallel) or one client at a time (sequential).
+        store = store_for(fed, specs)
+        c_new = jax.tree.map(lambda u, c: u - c,
+                             up["c_new_minus_c"], sstate["c"])
+        c_old = store.gather(sstate["c_all"], client_ids)
+        new_state = dict(sstate)
+        new_state["c_all"] = store.scatter(sstate["c_all"], client_ids, c_new)
+        new_up = {k: v for k, v in up.items() if k != "c_new_minus_c"}
+        new_up["dc"] = jax.tree.map(jnp.subtract, c_new, c_old)
+        return new_state, new_up
+
+    def server_update(params, sstate, mean_up, specs, fed):
         new_params = _plain_delta_server(params, mean_up["delta"], fed)
         new_state = dict(sstate)
-        if per_client is not None and client_ids is not None:
-            # c_i+ = (c_i - delta/(K eta)) - c  for the sampled clients
-            c_new = jax.tree.map(
-                lambda u, c: u - c[None],
-                per_client["c_new_minus_c"], sstate["c"])
-            c_all = jax.tree.map(
-                lambda table, upd: table.at[client_ids].set(upd),
-                sstate["c_all"], c_new)
-            # c += S/N * mean_i(c_i+ - c_i)
-            frac = fed.clients_per_round / fed.num_clients
-            dc = jax.tree.map(
-                lambda upd, table: (upd - table[client_ids]).mean(0),
-                c_new, sstate["c_all"])
-            new_state["c"] = jax.tree.map(
-                lambda c, d: c + frac * d, sstate["c"], dc)
-            new_state["c_all"] = c_all
+        # c += S/N * mean_i(c_i+ - c_i)
+        frac = fed.clients_per_round / fed.num_clients
+        new_state["c"] = jax.tree.map(
+            lambda c, d: c + frac * d, sstate["c"], mean_up["dc"])
         return new_params, new_state
 
     return FedAlgorithm("scaffold", init_server, init_client, local_step,
-                        upload, server_update, needs_client_ids=True)
+                        upload, server_update, needs_client_ids=True,
+                        commit=commit)
 
 
 # ---------------------------------------------------------------------------
@@ -487,11 +511,11 @@ def get_algorithm(fed: FedConfig) -> FedAlgorithm:
     alg = _get_base_algorithm(base_name)
     if codec_spec:
         codec = get_codec(codec_spec, use_pallas=fed.use_pallas_quantpack)
-        # error feedback keeps a per-client residual table, which (like
-        # SCAFFOLD's control variates) needs the sampled client ids —
-        # only the client_parallel layout provides them
-        ef = (codec.lossy and fed.comm_error_feedback
-              and fed.layout == "client_parallel")
+        # error feedback keeps a per-client residual table in the client
+        # state store; both placement layouts thread the sampled client
+        # ids, so EF is on for every lossy codec unless explicitly
+        # disabled (FedConfig.comm_error_feedback=False)
+        ef = codec.lossy and fed.comm_error_feedback
         alg = compressed(alg, codec, error_feedback=ef)
     return alg
 
@@ -524,7 +548,16 @@ def _get_base_algorithm(name: str) -> FedAlgorithm:
     raise ValueError(name)
 
 
-def upload_bytes(upload_tree) -> int:
-    """Communication cost of one client upload (paper Table 7 accounting)."""
-    return sum(leaf.size * leaf.dtype.itemsize
-               for leaf in jax.tree.leaves(upload_tree))
+def upload_bytes(upload_tree, codec=None) -> int:
+    """Communication cost of one client upload (paper Table 7 accounting).
+
+    .. deprecated:: delegates to :func:`repro.comm.upload_wire_bytes` —
+       the codec-aware accounting that prices the ``delta`` entry through
+       the codec's packed wire payload and never charges client-resident
+       error-feedback residuals. The old ``size x itemsize`` sum here
+       over-reported every compressed upload (pre-codec dense bytes);
+       pass ``codec`` (or call ``upload_wire_bytes`` directly) to price a
+       lossy upload correctly.
+    """
+    from repro.comm import upload_wire_bytes
+    return upload_wire_bytes(upload_tree, codec)

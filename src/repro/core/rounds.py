@@ -15,10 +15,18 @@ Two placement layouts (DESIGN.md §2):
 
 ``client_sequential``
     One client at a time occupies the whole mesh (params + optimizer state
-    FSDPxTP sharded over *all* axes); ``lax.scan`` iterates the clients of
-    the round and accumulates upload sums online, so peak memory never
-    holds more than one client's optimizer state. Required for the >13B
-    architectures.
+    FSDPxTP sharded over *all* axes); ``lax.scan`` iterates the
+    ``(batches, client_ids)`` pairs of the round and accumulates upload
+    sums online, so peak memory never holds more than one client's
+    optimizer state. Required for the >13B architectures.
+
+Algorithms with per-client server state (SCAFFOLD control variates, the
+error-feedback residual table — any ``repro.state.ClientStateStore``
+table) work in BOTH layouts: the engine passes each client's id to
+``init_client`` (gather the client's row) and calls the algorithm's
+``commit`` hook with the client's upload (scatter the new row, reduce
+per-client-only upload entries) — vectorized over the stacked uploads in
+``client_parallel``, one client at a time inside the sequential scan.
 
 The K local steps are a ``lax.scan`` over the per-step batch axis; the
 whole round is one XLA program (one ``jax.jit``), which is what the
@@ -136,50 +144,59 @@ def make_round_fn(model, fed: FedConfig, specs, *,
             uploads, metrics = jax.vmap(
                 local_phase, in_axes=(None, None, 0, None, 0),
                 out_axes=0)(gparams, sstate, batches, lr_scale, client_ids)
+            if alg.commit is not None:
+                # write the sampled clients' per-client server state rows
+                # (control variates, EF residuals) before aggregation
+                sstate, uploads = alg.commit(sstate, uploads, client_ids,
+                                             specs, fed)
             mean_up = jax.tree.map(lambda u: u.mean(axis=0), uploads)
-            if alg.needs_client_ids:
-                new_params, new_state = alg.server_update(
-                    gparams, sstate, mean_up, specs, fed,
-                    per_client=uploads, client_ids=client_ids)
-            else:
-                new_params, new_state = alg.server_update(
-                    gparams, sstate, mean_up, specs, fed)
+            new_params, new_state = alg.server_update(
+                gparams, sstate, mean_up, specs, fed)
             out_metrics = jax.tree.map(lambda m: m.mean(axis=0), metrics)
             return new_params, new_state, out_metrics
 
     else:  # client_sequential
 
-        if alg.needs_client_ids:
-            raise NotImplementedError(
-                f"{alg.name} keeps per-client server state; use the "
-                "client_parallel layout")
-
         def round_fn(gparams, sstate, batches, client_ids, round_index):
             lr_scale = _lr_scale(round_index)
 
-            def scan_client(acc, per_client_batches):
-                up, m = local_phase(gparams, sstate, per_client_batches,
-                                    lr_scale)
-                acc_up, acc_m, n = acc
+            def one_client(sst, per_client_batches, cid):
+                """One client's local phase + per-client state commit.
+
+                Distinct clients touch distinct table rows, so committing
+                inside the scan is exactly the vectorized commit of the
+                parallel layout (round-start values for everything the
+                clients *read*: c, delta_g and each client's own row)."""
+                up, m = local_phase(gparams, sst, per_client_batches,
+                                    lr_scale, cid)
+                if alg.commit is not None:
+                    sst, up = alg.commit(sst, up, cid, specs, fed)
+                return sst, up, m
+
+            def scan_client(acc, xs):
+                per_client_batches, cid = xs
+                acc_up, acc_m, n, sst = acc
+                sst, up, m = one_client(sst, per_client_batches, cid)
                 acc_up = jax.tree.map(jnp.add, acc_up, up)
                 acc_m = jax.tree.map(jnp.add, acc_m, m)
-                return (acc_up, acc_m, n + 1), None
+                return (acc_up, acc_m, n + 1, sst), None
 
             # build zero accumulators with the right structure via one
             # abstract evaluation (no FLOPs at runtime: jitted away)
             up0_shape = jax.eval_shape(
-                lambda b: local_phase(gparams, sstate, b, lr_scale),
-                jax.tree.map(lambda x: x[0], batches))
+                lambda b, cid: one_client(sstate, b, cid)[1:],
+                jax.tree.map(lambda x: x[0], batches), client_ids[0])
             acc0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                 up0_shape)
-            (sum_up, sum_m, n), _ = jax.lax.scan(
-                scan_client, (acc0[0], acc0[1], jnp.zeros((), jnp.float32)),
-                batches)
+            (sum_up, sum_m, n, sstate_k), _ = jax.lax.scan(
+                scan_client,
+                (acc0[0], acc0[1], jnp.zeros((), jnp.float32), sstate),
+                (batches, client_ids))
             inv = 1.0 / jnp.maximum(n, 1.0)
             mean_up = jax.tree.map(lambda u: u * inv, sum_up)
             out_metrics = jax.tree.map(lambda m: m * inv, sum_m)
             new_params, new_state = alg.server_update(
-                gparams, sstate, mean_up, specs, fed)
+                gparams, sstate_k, mean_up, specs, fed)
             return new_params, new_state, out_metrics
 
     return round_fn

@@ -31,10 +31,20 @@ from repro.metrics import CSVLogger, Meter
 from repro.models import build_model
 
 
-def evaluate(model, params, task, batch_size: int = 256) -> Dict[str, float]:
+def make_eval_fn(model):
+    """One jitted loss for ALL eval rounds. ``jax.jit(model.loss)`` inside
+    the eval call would build a fresh wrapper — and recompile — per round
+    (bound methods compare unequal across accesses, so jit's cache never
+    hits)."""
+    return jax.jit(model.loss)
+
+
+def evaluate(model, params, task, batch_size: int = 256,
+             loss_fn=None) -> Dict[str, float]:
+    loss_fn = loss_fn if loss_fn is not None else make_eval_fn(model)
     batch = task.test_batch(batch_size)
     batch = {k: jnp.asarray(v) for k, v in batch.items()}
-    loss, metrics = jax.jit(model.loss)(params, batch)
+    loss, metrics = loss_fn(params, batch)
     return {"test_loss": float(loss),
             "test_acc": float(metrics["accuracy"])}
 
@@ -52,7 +62,8 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                  cosine: bool = True, use_pallas: bool = False,
                  layout: str = "client_parallel",
                  comm_error_feedback: bool = True,
-                 use_pallas_quantpack: bool = False) -> Dict[str, list]:
+                 use_pallas_quantpack: bool = False,
+                 client_state_policy: str = "dense") -> Dict[str, list]:
     cfg = get_arch(arch)
     if reduce_model:
         cfg = reduced_variant(cfg)
@@ -67,7 +78,8 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         sequential_clients=clients_per_round,
         use_pallas_update=use_pallas,
         comm_error_feedback=comm_error_feedback,
-        use_pallas_quantpack=use_pallas_quantpack)
+        use_pallas_quantpack=use_pallas_quantpack,
+        client_state_policy=client_state_policy)
     model = build_model(cfg, compute_dtype=jnp.float32)
     task = make_task(task_kind, vocab_size=cfg.vocab_size, seq_len=seq_len,
                      num_samples=max(2048, 64 * num_clients),
@@ -81,8 +93,13 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         cosine_total_rounds=rounds if cosine else 0))
 
     rng = np.random.default_rng(seed + 1)
-    logger = CSVLogger(log_path) if log_path else None
+    # declare the eval-only columns up front so every CSV carries them
+    # even before the first eval round lands
+    logger = CSVLogger(log_path, fieldnames=[
+        "round", "train_loss", "upload_mbytes", "test_loss", "test_acc",
+    ]) if log_path else None
     meter = Meter()
+    eval_loss = make_eval_fn(model)
     history = {"round": [], "train_loss": [], "test_acc": [],
                "test_loss": [], "upload_mbytes": []}
 
@@ -105,7 +122,7 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         rec = {"round": r, "train_loss": loss,
                "upload_mbytes": comm_bytes / 1e6}
         if (r + 1) % eval_every == 0 or r == rounds - 1:
-            rec.update(evaluate(model, params, task))
+            rec.update(evaluate(model, params, task, loss_fn=eval_loss))
             history["round"].append(r)
             history["train_loss"].append(loss)
             history["test_acc"].append(rec["test_acc"])
@@ -141,6 +158,10 @@ def main() -> None:
     ap.add_argument("--pallas-quantpack", action="store_true",
                     help="route int8/int4 encoding through the fused "
                          "quantize-pack kernel")
+    ap.add_argument("--client-state-policy", default="dense",
+                    choices=["dense", "blockmean", "int8"],
+                    help="storage policy for per-client server state "
+                         "tables (SCAFFOLD control variates, EF residuals)")
     args = ap.parse_args()
     t0 = time.time()
     hist = run_training(
@@ -152,7 +173,8 @@ def main() -> None:
         reduce_model=not args.full_model, log_path=args.log,
         layout=args.layout, use_pallas=args.pallas,
         comm_error_feedback=not args.no_error_feedback,
-        use_pallas_quantpack=args.pallas_quantpack)
+        use_pallas_quantpack=args.pallas_quantpack,
+        client_state_policy=args.client_state_policy)
     print(json.dumps({
         "final_train_loss": hist["train_loss"][-1],
         "final_test_acc": hist["test_acc"][-1],

@@ -1,6 +1,7 @@
 """Lightweight metric logging: CSV / JSONL files + an EMA meter."""
 from __future__ import annotations
 
+import csv
 import json
 import os
 import time
@@ -8,27 +9,65 @@ from typing import Any, Dict, Optional
 
 
 class CSVLogger:
+    """CSV logger whose column set may grow mid-run.
+
+    The header is NOT frozen on the first row: pass ``fieldnames`` as a
+    superset up front, or let a later row introduce new keys — the file
+    is rewritten with the extended header so no column is silently
+    dropped (training loops log eval-only keys like ``test_acc`` on a
+    subset of rounds)."""
+
+    @staticmethod
+    def _writer(fh):
+        return csv.writer(fh, lineterminator="\n")
+
     def __init__(self, path: str, fieldnames=None):
         self.path = path
-        self.fieldnames = list(fieldnames) if fieldnames else None
+        self.fieldnames = list(fieldnames) if fieldnames else []
         self._fh = None
         if path:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-            self._fh = open(path, "w")
+            self._fh = open(path, "w", newline="")
+            if self.fieldnames:
+                self._writer(self._fh).writerow(self.fieldnames)
+                self._fh.flush()
+
+    def _write_row(self, fh, row: Dict[str, Any]) -> None:
+        self._writer(fh).writerow(
+            [str(row.get(k, "")) for k in self.fieldnames])
+
+    def _rewrite(self, old_fields) -> None:
+        """Re-key the on-disk rows (every row is flushed, so the file IS
+        the row buffer — nothing is held in memory) under the widened
+        header; atomic via temp-file + rename so a crash mid-rewrite
+        cannot lose already-flushed rows."""
+        self._fh.close()
+        with open(self.path, newline="") as f:
+            lines = list(csv.reader(f))
+        data = lines[1:] if old_fields else lines
+        tmp = self.path + ".tmp"
+        with open(tmp, "w", newline="") as f:
+            self._writer(f).writerow(self.fieldnames)
+            for values in data:
+                self._write_row(f, dict(zip(old_fields, values)))
+        os.replace(tmp, self.path)
+        self._fh = open(self.path, "a", newline="")
 
     def log(self, row: Dict[str, Any]) -> None:
-        if self.fieldnames is None:
-            self.fieldnames = list(row.keys())
+        new_keys = [k for k in row if k not in self.fieldnames]
+        if new_keys:
+            old_fields = list(self.fieldnames)
+            self.fieldnames.extend(new_keys)
             if self._fh:
-                self._fh.write(",".join(self.fieldnames) + "\n")
+                self._rewrite(old_fields)
         if self._fh:
-            self._fh.write(",".join(str(row.get(k, "")) for k in
-                                    self.fieldnames) + "\n")
+            self._write_row(self._fh, row)
             self._fh.flush()
 
     def close(self) -> None:
         if self._fh:
             self._fh.close()
+            self._fh = None
 
 
 class JSONLLogger:

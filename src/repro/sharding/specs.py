@@ -174,8 +174,13 @@ def param_pspecs(params, cfg: ModelConfig, mesh: Mesh,
 def state_pspecs(sstate, params_specs, params, cfg: ModelConfig, mesh: Mesh,
                  fed: Optional[FedConfig] = None):
     """Server-state PartitionSpecs: param-shaped leaves inherit the param
-    spec; everything else (scalars, block-mean vectors, per-client tables)
-    is replicated."""
+    spec; per-client state tables (``repro.state.ClientStateStore`` —
+    SCAFFOLD's ``c_all``, the EF residual table) shard their leading
+    ``num_clients`` axis over the client mesh axes (``pod`` + ``data``)
+    so the table is distributed instead of replicated; everything else
+    (scalars, block-mean vectors) is replicated."""
+    from repro.state import CLIENT_TABLE_KEYS, client_row_pspec
+
     flat_params = {}
     for kp, spec in jax.tree_util.tree_flatten_with_path(params_specs)[0]:
         flat_params[_path_names(kp)] = spec
@@ -183,15 +188,20 @@ def state_pspecs(sstate, params_specs, params, cfg: ModelConfig, mesh: Mesh,
     for kp, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
         param_shapes[_path_names(kp)] = tuple(leaf.shape)
 
+    n_clients = fed.num_clients if fed is not None else 0
+
     flat, treedef = jax.tree_util.tree_flatten_with_path(sstate)
     out = []
     for kp, leaf in flat:
         # fields like delta_g/v_bar/momentum/server_m mirror the param tree:
         # strip the leading field name and look the rest up; reuse the param
         # spec only when the shapes actually match (block-mean vectors don't)
-        sub = _path_names(kp)[1:]
+        names = _path_names(kp)
+        sub = names[1:]
         if sub in flat_params and param_shapes[sub] == tuple(leaf.shape):
             out.append(flat_params[sub])
+        elif names and names[0] in CLIENT_TABLE_KEYS and n_clients > 1:
+            out.append(client_row_pspec(leaf, mesh, n_clients))
         else:
             out.append(P(*([None] * leaf.ndim)))
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,20 @@
+"""Per-client server-side state (README.md §Client-state store).
+
+``store``  ClientStateStore: one table API (init/gather/scatter) with
+           dense | blockmean | int8 storage policies and a client-axis
+           sharding rule.
+"""
+from repro.state.store import (
+    CLIENT_TABLE_KEYS,
+    POLICIES,
+    ClientStateStore,
+    client_row_pspec,
+    specs_like,
+    store_for,
+    table_pspecs,
+)
+
+__all__ = [
+    "CLIENT_TABLE_KEYS", "POLICIES", "ClientStateStore",
+    "client_row_pspec", "specs_like", "store_for", "table_pspecs",
+]

@@ -1,0 +1,217 @@
+"""Unified per-client server-side state store (``ClientStateStore``).
+
+Every stateful-per-client mechanism in the repo — SCAFFOLD control
+variates, the error-feedback residual table of lossy upload codecs, and
+any future per-client momentum / personalization / DP-accountant table —
+keeps a ``num_clients x params`` table on the server. Before this module
+each mechanism allocated and indexed its own dense f32 table, which (a)
+duplicated the gather/scatter logic, (b) replicated the table on every
+device, and (c) made per-client state impossible under the
+``client_sequential`` layout. The store centralizes all of it behind one
+functional API:
+
+    store = store_for(fed, specs)
+    table = store.init()                   # zero rows, storage per policy
+    rows  = store.gather(table, cids)      # dense f32 rows (decoded)
+    table = store.scatter(table, cids, rows)
+
+``cids`` may be a scalar (one client at a time — the ``client_sequential``
+scan) or an ``(S,)`` vector (the vmapped ``client_parallel`` round); the
+gathered/scattered values carry a matching leading axis.
+
+Storage policies (``FedConfig.client_state_policy``):
+
+``dense``
+    ``(num_clients, *leaf.shape)`` f32 per leaf — exact, 4 bytes/elem/client.
+``blockmean``
+    ``(num_clients, n_blocks)`` f32 per leaf via the Hessian-block
+    ``partition`` machinery — O(n_blocks) per client; gather broadcasts
+    the block means back to full shape (lossy, same approximation the
+    paper applies to ``v``).
+``int8``
+    symmetric per-row int8 rows + one f32 scale per (client, leaf) via the
+    quantpack codec math — ~4x memory cut, error <= scale/2 per element.
+
+The table is an ordinary pytree (nested dicts/arrays) so it lives inside
+server state, traverses jit/scan/vmap, and checkpoints like everything
+else. :func:`table_pspecs` shards the leading client axis over the
+(``pod``, ``data``) mesh axes so the table is distributed instead of
+replicated (``sharding.specs.state_pspecs`` applies the same rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import partition
+from repro.core.partition import LeafBlockSpec
+
+Array = jax.Array
+Tree = Any
+
+POLICIES = ("dense", "blockmean", "int8")
+
+# identical constants to repro.comm.codecs so int8 rows are bit-compatible
+# with the quantpack wire format (single f32-rounded reciprocal multiply)
+_SCALE_FLOOR = 1e-12
+_INV_QMAX8 = float(np.float32(1.0 / 127.0))
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, LeafBlockSpec)
+
+
+def _leaf_elems(spec: LeafBlockSpec) -> int:
+    return int(np.prod(spec.shape)) if spec.shape else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientStateStore:
+    """Policy + shape metadata for one per-client state table.
+
+    ``specs`` is the LeafBlockSpec tree of the stored quantity (same
+    structure as the param tree); it provides the leaf shapes for every
+    policy and the block structure for ``blockmean``.
+    """
+
+    num_clients: int
+    policy: str = "dense"
+    specs: Tree = None
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown client_state_policy {self.policy!r}; "
+                f"known: {POLICIES}")
+        if self.specs is None:
+            raise ValueError("ClientStateStore needs a LeafBlockSpec tree "
+                             "(build one with partition.build_block_specs "
+                             "or specs_like)")
+
+    # -- per-leaf kernels ---------------------------------------------------
+
+    def _init_leaf(self, spec: LeafBlockSpec):
+        n_c = self.num_clients
+        if self.policy == "dense":
+            return jnp.zeros((n_c,) + tuple(spec.shape), jnp.float32)
+        if self.policy == "blockmean":
+            return jnp.zeros((n_c, spec.n_blocks), jnp.float32)
+        return {"q": jnp.zeros((n_c, _leaf_elems(spec)), jnp.int8),
+                "scale": jnp.zeros((n_c,), jnp.float32)}
+
+    def _gather_leaf(self, spec: LeafBlockSpec, tleaf, cids):
+        if self.policy == "dense":
+            return tleaf[cids]
+        if self.policy == "blockmean":
+            rows = tleaf[cids]                       # (..., n_blocks)
+            dec = lambda r: partition.broadcast_means(r, spec)  # noqa: E731
+            return dec(rows) if rows.ndim == 1 else jax.vmap(dec)(rows)
+        q = tleaf["q"][cids].astype(jnp.float32)     # (..., n)
+        s = tleaf["scale"][cids]
+        x = q * (s[..., None] if q.ndim > 1 else s)
+        lead = (x.shape[0],) if q.ndim > 1 else ()
+        return x.reshape(lead + tuple(spec.shape))
+
+    def _scatter_leaf(self, spec: LeafBlockSpec, tleaf, cids, value):
+        v32 = jnp.asarray(value).astype(jnp.float32)
+        batched = v32.ndim > len(spec.shape)
+        if self.policy == "dense":
+            return tleaf.at[cids].set(v32)
+        if self.policy == "blockmean":
+            enc = lambda x: partition.block_means(x, spec)  # noqa: E731
+            return tleaf.at[cids].set(
+                jax.vmap(enc)(v32) if batched else enc(v32))
+
+        def enc(x):
+            flat = x.reshape(-1)
+            scale = jnp.maximum(jnp.max(jnp.abs(flat)),
+                                _SCALE_FLOOR) * _INV_QMAX8
+            q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+            return q, scale
+
+        q, s = jax.vmap(enc)(v32) if batched else enc(v32)
+        return {"q": tleaf["q"].at[cids].set(q),
+                "scale": tleaf["scale"].at[cids].set(s)}
+
+    # -- tree-level API -----------------------------------------------------
+
+    def init(self) -> Tree:
+        """Zero table; per-leaf storage layout set by the policy."""
+        return jax.tree.map(self._init_leaf, self.specs, is_leaf=_is_spec)
+
+    def gather(self, table: Tree, cids) -> Tree:
+        """Decode the rows of ``cids`` to dense f32 param-shaped values."""
+        return jax.tree.map(
+            lambda s, t: self._gather_leaf(s, t, cids),
+            self.specs, table, is_leaf=_is_spec)
+
+    def scatter(self, table: Tree, cids, values: Tree) -> Tree:
+        """Encode ``values`` (dense rows matching ``cids``) into the table."""
+        return jax.tree.map(
+            lambda s, t, v: self._scatter_leaf(s, t, cids, v),
+            self.specs, table, values, is_leaf=_is_spec)
+
+    def table_bytes(self, table: Tree = None) -> int:
+        """Exact storage footprint of the table (shape-static)."""
+        if table is None:
+            table = jax.eval_shape(self.init)
+        return sum(int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+                   for leaf in jax.tree.leaves(table))
+
+
+# ---------------------------------------------------------------------------
+# constructors / sharding
+# ---------------------------------------------------------------------------
+
+def specs_like(tree: Tree) -> Tree:
+    """Trivial one-block-per-tensor LeafBlockSpec tree for an arbitrary
+    pytree of arrays (enough for ``dense``/``int8``; ``blockmean`` wants
+    the real Hessian-block specs from :func:`partition.build_block_specs`)."""
+    return jax.tree.map(
+        lambda x: LeafBlockSpec(tuple(x.shape), (), ()), tree)
+
+
+def store_for(fed, specs: Tree, *, policy: str = None) -> ClientStateStore:
+    """Store for ``fed``'s client-state policy over the given spec tree."""
+    return ClientStateStore(
+        num_clients=fed.num_clients,
+        policy=policy or getattr(fed, "client_state_policy", "dense"),
+        specs=specs)
+
+
+# server-state keys that hold ClientStateStore tables — the sharding
+# rules (table_pspecs here, sharding.specs.state_pspecs) key off this
+# list; extend it when adding a new per-client mechanism. "comm_ef" is
+# repro.comm.error_feedback.EF_KEY (kept literal: state must not depend
+# on comm).
+CLIENT_TABLE_KEYS = ("c_all", "comm_ef")
+
+
+def client_row_pspec(leaf, mesh, num_clients: int):
+    """PartitionSpec for ONE table leaf: shard the leading client axis
+    over the mesh's client axes (``pod`` + ``data``); replicate when the
+    leaf has no ``num_clients`` leading axis or the axis product does not
+    divide it. The single source of the rule — ``table_pspecs`` and
+    ``sharding.specs.state_pspecs`` both apply it."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.specs import client_axes
+
+    cax = client_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in cax])) if cax else 1
+    shard = (cax and size > 1 and leaf.ndim >= 1
+             and leaf.shape[0] == num_clients and num_clients % size == 0)
+    if not shard:
+        return P(*([None] * leaf.ndim))
+    ax = cax if len(cax) > 1 else cax[0]
+    return P(ax, *([None] * (leaf.ndim - 1)))
+
+
+def table_pspecs(table: Tree, mesh, num_clients: int) -> Tree:
+    """PartitionSpecs for a whole table (leaf-wise client_row_pspec)."""
+    return jax.tree.map(
+        lambda leaf: client_row_pspec(leaf, mesh, num_clients), table)

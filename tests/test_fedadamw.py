@@ -184,3 +184,30 @@ def test_delta_g_is_negative_mean_delta_over_k_eta():
         np.testing.assert_allclose(
             np.asarray(dg), scale * (np.asarray(a) - np.asarray(b)),
             rtol=2e-3, atol=2e-4)
+
+
+def test_scaffold_upload_uses_scaled_lr():
+    """c_i+ must divide delta by the eta the local steps ACTUALLY used:
+    under cosine decay lr_scale != 1 and pricing with the unscaled
+    fed.lr would mis-scale the control variates."""
+    from repro.core.tree_util import tree_sub
+    cfg, model, params = build_tiny("dense")
+    fed = FedConfig(algorithm="scaffold", num_clients=2, clients_per_round=2,
+                    local_steps=1, lr=1e-2, weight_decay=0.0)
+    alg = get_algorithm(fed)
+    specs = build_block_specs(params, cfg, fed)
+    sstate = init_server_state(alg, params, specs, fed)
+    cstate = alg.init_client(params, sstate, fed, specs=specs,
+                             client_id=jnp.asarray(0, jnp.int32))
+    g = jax.tree.map(jnp.ones_like, params)
+    p1, cstate = alg.local_step(params, g, cstate, sstate, fed,
+                                jnp.asarray(0.5, jnp.float32))
+    delta = tree_sub(p1, params)
+    up = alg.upload(delta, cstate, specs, fed)
+    # c_i = 0, c = 0: c_new_minus_c == -delta / (K * lr * lr_scale)
+    scale = -1.0 / (fed.local_steps * fed.lr * 0.5)
+    for got, d in zip(jax.tree.leaves(up["c_new_minus_c"]),
+                      jax.tree.leaves(delta)):
+        np.testing.assert_allclose(np.asarray(got),
+                                   scale * np.asarray(d, np.float32),
+                                   rtol=1e-5, atol=1e-7)

@@ -102,3 +102,96 @@ def test_model_flops_moe_uses_active():
     c = count_params(moe)
     assert c["active"] < 0.45 * c["total"]
     assert model_flops(moe, 1000) == pytest.approx(6 * c["active"] * 1000)
+
+
+# ---------------------------------------------------------------------------
+# metric logging / eval loop regressions
+# ---------------------------------------------------------------------------
+
+def test_csvlogger_header_grows_with_late_keys(tmp_path):
+    """Regression: the header used to freeze on the first row's keys, so
+    eval-only columns (test_acc/test_loss) logged on later rounds were
+    silently dropped from every training CSV."""
+    from repro.metrics import CSVLogger
+    path = str(tmp_path / "log.csv")
+    lg = CSVLogger(path)
+    lg.log({"round": 0, "train_loss": 1.0})
+    lg.log({"round": 1, "train_loss": 0.9, "test_acc": 0.5,
+            "test_loss": 2.0})
+    lg.log({"round": 2, "train_loss": 0.8})
+    lg.close()
+    lines = open(path).read().strip().split("\n")
+    header = lines[0].split(",")
+    assert "test_acc" in header and "test_loss" in header
+    rows = [dict(zip(header, ln.split(","))) for ln in lines[1:]]
+    assert len(rows) == 3
+    assert rows[1]["test_acc"] == "0.5"      # the eval row landed
+    assert rows[0]["test_acc"] == ""         # non-eval rows: empty cell
+    assert rows[2]["train_loss"] == "0.8"
+
+
+def test_csvlogger_fieldnames_superset_upfront(tmp_path):
+    from repro.metrics import CSVLogger
+    path = str(tmp_path / "log.csv")
+    lg = CSVLogger(path, fieldnames=["round", "train_loss", "test_acc"])
+    lg.log({"round": 0, "train_loss": 1.0})
+    lg.close()
+    lines = open(path).read().strip().split("\n")
+    assert lines[0] == "round,train_loss,test_acc"
+    assert lines[1] == "0,1.0,"
+
+
+def test_training_csv_contains_eval_rows(tmp_path):
+    """End-to-end: an eval-round row must land in the training CSV."""
+    from repro.launch.train import run_training
+    path = str(tmp_path / "train.csv")
+    run_training(arch="vit-tiny-fl", algorithm="fedavg", rounds=2,
+                 num_clients=2, clients_per_round=2, local_steps=2,
+                 batch_size=2, eval_every=2, log_path=path, cosine=False)
+    lines = open(path).read().strip().split("\n")
+    header = lines[0].split(",")
+    assert "test_acc" in header and "test_loss" in header
+    rows = [dict(zip(header, ln.split(","))) for ln in lines[1:]]
+    eval_rows = [r for r in rows if r["test_acc"] != ""]
+    assert eval_rows, rows
+    assert all(np.isfinite(float(r["test_acc"])) for r in eval_rows)
+
+
+def test_evaluate_compiles_once():
+    """Regression: evaluate() used to call jax.jit(model.loss) per eval
+    round — a fresh wrapper (bound methods compare unequal), so every
+    eval round recompiled. The hoisted eval fn must trace exactly once."""
+    from repro.data import make_task
+    from repro.launch.train import evaluate
+    cfg, model, params = build_tiny("dense")
+    task = make_task("class_lm", vocab_size=cfg.vocab_size, seq_len=16,
+                     num_samples=128, num_clients=2, dirichlet_alpha=0.6,
+                     seed=0)
+    traces = {"n": 0}
+
+    def counting_loss(p, b):
+        traces["n"] += 1
+        return model.loss(p, b)
+
+    eval_fn = jax.jit(counting_loss)
+    r1 = evaluate(model, params, task, batch_size=32, loss_fn=eval_fn)
+    r2 = evaluate(model, params, task, batch_size=32, loss_fn=eval_fn)
+    assert traces["n"] == 1, traces
+    assert np.isfinite(r1["test_loss"]) and r1 == r2
+
+
+def test_csvlogger_preserves_commas_across_rewrite(tmp_path):
+    """Values containing commas must survive the header-widening rewrite
+    (rows are re-parsed from disk with the csv module, not split(','))."""
+    import csv
+
+    from repro.metrics import CSVLogger
+    path = str(tmp_path / "log.csv")
+    lg = CSVLogger(path)
+    lg.log({"note": "a,b"})
+    lg.log({"note": "x", "loss": 1.0})
+    lg.close()
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    assert rows[0]["note"] == "a,b" and rows[0]["loss"] == ""
+    assert rows[1]["note"] == "x" and rows[1]["loss"] == "1.0"
