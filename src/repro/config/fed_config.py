@@ -64,6 +64,14 @@ class FedConfig:
 
     use_pallas_update: bool = False    # route local update through the Pallas kernel
 
+    # multi-round fusion (repro.launch.pipeline): lax.scan this many
+    # consecutive rounds inside ONE jitted call over pre-staged batch
+    # stacks, amortizing per-call dispatch/transfer overhead where small
+    # models are launch-bound. 1 = one jitted call per round (seed
+    # behavior). Trajectories are bit-identical for any value; blocks
+    # never cross an eval boundary.
+    rounds_per_call: int = 1
+
     # communication layer (repro.comm): algorithm names take an upload
     # codec suffix ("fedadamw+int4", "fedadamw+topk0.1", ...)
     comm_error_feedback: bool = True   # EF for lossy codecs (client_parallel)
@@ -100,3 +108,5 @@ class FedConfig:
                 f"unknown client_state_policy {self.client_state_policy!r}")
         if self.clients_per_round > self.num_clients:
             raise ValueError("clients_per_round > num_clients")
+        if self.rounds_per_call < 1:
+            raise ValueError("rounds_per_call must be >= 1")

@@ -51,6 +51,15 @@ def init_server_state(alg: FedAlgorithm, params, specs, fed: FedConfig):
     return alg.init_server(params, specs, fed)
 
 
+def _accum_dtype(dtype) -> jnp.dtype:
+    """Accumulator dtype for gradient micro-batching: match the gradient
+    leaf unless it is a sub-32-bit float, which still sums in f32."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating) and jnp.finfo(dtype).bits < 32:
+        return jnp.dtype(jnp.float32)
+    return dtype
+
+
 def cosine_lr_scale(round_index: Array, total_rounds: int,
                     min_scale: float = 0.0) -> Array:
     """Paper Appendix C: cosine learning-rate decay over rounds."""
@@ -71,6 +80,16 @@ def make_local_phase(loss_fn: Callable, alg: FedAlgorithm, fed: FedConfig,
         else:
             cstate = alg.init_client(gparams, sstate, fed, specs=specs)
 
+        if fed.grad_microbatches > 1:
+            # One zero accumulator tree per local phase, shared by every
+            # local step's micro-batch scan (was: fresh f32 zeros per
+            # grad call, i.e. per local step). Leaves are dtype-matched
+            # to the gradients so f32 training adds straight into the
+            # scan carry with no per-micro-step cast copy; sub-32-bit
+            # grads still accumulate in f32.
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, _accum_dtype(p.dtype)), gparams)
+
         def grad_of(params, batch):
             """Batch leaves are (b, ...) normally, or (mb, b_micro, ...)
             when fed.grad_microbatches > 1 — the micro axis is explicit in
@@ -88,13 +107,13 @@ def make_local_phase(loss_fn: Callable, alg: FedAlgorithm, fed: FedConfig,
                 (loss, _aux), g = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, mbatch)
                 gsum = jax.tree.map(
-                    lambda a, gi: a + gi.astype(jnp.float32), acc[0], g)
+                    lambda a, gi: a + (gi if gi.dtype == a.dtype
+                                       else gi.astype(a.dtype)),
+                    acc[0], g)
                 return (gsum, acc[1] + loss), None
 
-            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                              params)
             (gsum, lsum), _ = jax.lax.scan(
-                micro_step, (g0, jnp.zeros((), jnp.float32)), batch)
+                micro_step, (zero_grads, jnp.zeros((), jnp.float32)), batch)
             inv = 1.0 / mb
             return lsum * inv, jax.tree.map(lambda g: g * inv, gsum)
 
@@ -200,6 +219,46 @@ def make_round_fn(model, fed: FedConfig, specs, *,
             return new_params, new_state, out_metrics
 
     return round_fn
+
+
+def make_multi_round_fn(model, fed: FedConfig, specs, *,
+                        alg: Optional[FedAlgorithm] = None,
+                        loss_fn: Optional[Callable] = None,
+                        cosine_total_rounds: int = 0) -> Callable:
+    """Fuse M consecutive federated rounds into ONE jitted call.
+
+    multi_round_fn(gparams, sstate, batches, client_ids, round_index)
+        -> (new_params, new_sstate, metrics)
+
+    batches: pytree whose leaves have leading axes (M, S, K, ...);
+    client_ids: (M, S); round_index: scalar index of the FIRST round of
+    the block. Metrics leaves come back stacked per round, shape (M,).
+
+    The body is exactly the single-round ``make_round_fn`` program
+    scanned over the round axis — the cosine schedule is computed from
+    the carried round index (``round_index + i`` on step i), so a fused
+    trajectory is bit-identical to M eager calls on the same data while
+    paying the host dispatch / transfer cost once per block
+    (``FedConfig.rounds_per_call``). Launch-bound small models amortize
+    their per-call overhead by M; compute-bound models are unaffected.
+    """
+    round_fn = make_round_fn(model, fed, specs, alg=alg, loss_fn=loss_fn,
+                             cosine_total_rounds=cosine_total_rounds)
+
+    def multi_round_fn(gparams, sstate, batches, client_ids, round_index):
+        def body(carry, xs):
+            params, sst, r = carry
+            per_round_batches, cids = xs
+            params, sst, m = round_fn(params, sst, per_round_batches,
+                                      cids, r)
+            return (params, sst, r + 1), m
+
+        (params, sstate, _), metrics = jax.lax.scan(
+            body, (gparams, sstate, jnp.asarray(round_index)),
+            (batches, client_ids))
+        return params, sstate, metrics
+
+    return multi_round_fn
 
 
 def build_fed_state(model, fed: FedConfig, rng: jax.Array,

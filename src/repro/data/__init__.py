@@ -1,5 +1,7 @@
 """Synthetic federated data pipeline (Dirichlet non-iid partitioning)."""
 from repro.data.synthetic import SyntheticTask, make_task
-from repro.data.sampler import sample_clients, round_batches
+from repro.data.sampler import (RoundBatchGenerator, round_batches,
+                                sample_clients)
 
-__all__ = ["SyntheticTask", "make_task", "sample_clients", "round_batches"]
+__all__ = ["SyntheticTask", "make_task", "sample_clients", "round_batches",
+           "RoundBatchGenerator"]

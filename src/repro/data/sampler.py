@@ -3,10 +3,15 @@
 ``round_batches`` builds the (S, K, batch, seq) pytree the round engine
 scans/vmaps over: S sampled clients, K local steps, each step a fresh
 mini-batch drawn from that client's own (non-iid) shard.
+
+``RoundBatchGenerator`` wraps the two into a reusable deterministic
+per-round stream so the pipelined driver (``repro.launch.pipeline``) can
+assemble round r+1 on a background thread while round r computes, with
+bit-identical data to the eager loop.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Tuple, Union
 
 import numpy as np
 
@@ -31,6 +36,53 @@ def round_batches(task: SyntheticTask, client_ids: np.ndarray,
             tok[si, k] = b["tokens"]
             lab[si, k] = b["labels"]
     return {"tokens": tok, "labels": lab}
+
+
+class RoundBatchGenerator:
+    """Deterministic per-round ``(batches, client_ids)`` stream.
+
+    One instance owns one ``np.random.Generator`` and consumes it in
+    exactly the order of the eager seed loop (``sample_clients`` then
+    ``round_batches``, once per round), so eager, host-prefetched, and
+    multi-round-fused executions of the same seed see bit-identical
+    data regardless of *when* each round's batch is assembled.
+    """
+
+    def __init__(self, task: SyntheticTask, *, num_clients: int,
+                 clients_per_round: int, local_steps: int, batch_size: int,
+                 rng: Union[np.random.Generator, int, None] = None):
+        self.task = task
+        self.num_clients = num_clients
+        self.clients_per_round = clients_per_round
+        self.local_steps = local_steps
+        self.batch_size = batch_size
+        if not isinstance(rng, np.random.Generator):
+            rng = np.random.default_rng(rng)
+        self.rng = rng
+        self.rounds_produced = 0
+
+    def next_round(self) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """One round's ``({tokens, labels}: (S, K, b, seq)}, cids: (S,))``."""
+        cids = sample_clients(self.num_clients, self.clients_per_round,
+                              self.rng)
+        batches = round_batches(self.task, cids, self.local_steps,
+                                self.batch_size, self.rng)
+        self.rounds_produced += 1
+        return batches, cids.astype(np.int32)
+
+    def next_rounds(self, m: int) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """``m`` consecutive rounds stacked on a new leading axis:
+        ``({tokens, labels}: (M, S, K, b, seq)}, cids: (M, S))``.
+
+        Implemented as exactly ``m`` calls of :meth:`next_round` so the
+        rng stream — and therefore the data — matches per-round
+        consumption by construction.
+        """
+        rounds = [self.next_round() for _ in range(m)]
+        batches = {k: np.stack([b[k] for b, _ in rounds])
+                   for k in rounds[0][0]}
+        cids = np.stack([c for _, c in rounds])
+        return batches, cids
 
 
 def synthetic_round_batches(vocab_size: int, client_ids: np.ndarray,

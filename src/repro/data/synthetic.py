@@ -82,6 +82,32 @@ class SyntheticTask:
             sel = rng.integers(0, len(self.test_tokens), size=batch_size)
         return {"tokens": self.test_tokens[sel], "labels": self.test_labels[sel]}
 
+    def test_split_batches(self, batch_size: int) -> Dict[str, Array]:
+        """The FULL test split as ``(nb, batch, seq)`` stacks for a jitted
+        eval scan. The split is padded to a whole number of batches with
+        rows whose labels are all -1 (every position masked), so padding
+        contributes zero weight to any valid-count-weighted metric.
+        Memoized per batch size — eval runs every few rounds on the same
+        arrays."""
+        cache = getattr(self, "_test_stack_cache", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_test_stack_cache", cache)
+        if batch_size not in cache:
+            n = len(self.test_tokens)
+            nb = max(1, -(-n // batch_size))
+            pad = nb * batch_size - n
+            tok = np.concatenate(
+                [self.test_tokens,
+                 np.zeros((pad, self.seq_len), np.int32)])
+            lab = np.concatenate(
+                [self.test_labels,
+                 np.full((pad, self.seq_len), -1, np.int32)])
+            cache[batch_size] = {
+                "tokens": tok.reshape(nb, batch_size, self.seq_len),
+                "labels": lab.reshape(nb, batch_size, self.seq_len)}
+        return cache[batch_size]
+
 
 def _class_markov_chains(num_classes: int, feat_vocab: int,
                          rng: np.random.Generator) -> Array:

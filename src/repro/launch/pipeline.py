@@ -1,0 +1,215 @@
+"""Pipelined federated round execution.
+
+The eager seed loop serialized four things per round: host batch
+assembly, the host->device transfer, the jitted round dispatch, and a
+blocking scalar fetch of the round's loss. This module overlaps all of
+them:
+
+``plan_round_blocks``
+    Partitions the round range into scan blocks of at most
+    ``FedConfig.rounds_per_call`` rounds that never cross an eval
+    boundary, so fused execution preserves eval-every semantics exactly.
+
+``HostPrefetcher``
+    A bounded background producer: while the device runs round r's
+    block, a daemon thread samples clients and assembles the NEXT
+    block's ``(batches, client_ids)`` and stages the host->device
+    transfer, double-buffering up to ``depth`` blocks. ``depth=0``
+    degrades to the synchronous eager behavior (useful as the parity /
+    benchmark baseline).
+
+``RoundEngine``
+    Wraps the donated single-round and multi-round jitted callables and
+    dispatches whichever matches the block size. With donation the
+    global params, ``delta_g``/``v_bar``, and the num_clients-row client
+    state tables are updated in place instead of copied every round.
+
+The three pieces compose with ``repro.metrics.MetricsSpool`` (deferred
+scalar fetches) in ``repro.launch.train.run_training``; trajectories are
+bit-identical across eager / prefetched / fused execution because the
+data stream (``RoundBatchGenerator``) and the round program are shared.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FedConfig
+from repro.core import make_multi_round_fn, make_round_fn
+
+
+def eval_boundaries(rounds: int, eval_every: int) -> List[int]:
+    """Rounds r after which evaluation runs: (r+1) % eval_every == 0,
+    plus always the final round."""
+    ends = [r for r in range(rounds) if (r + 1) % max(eval_every, 1) == 0]
+    if rounds and (not ends or ends[-1] != rounds - 1):
+        ends.append(rounds - 1)
+    return ends
+
+
+def plan_round_blocks(rounds: int, eval_every: int,
+                      rounds_per_call: int = 1
+                      ) -> List[Tuple[int, int]]:
+    """Partition ``range(rounds)`` into ``(start, size)`` blocks with
+    ``size <= rounds_per_call`` that never straddle an eval boundary —
+    evaluation (and the metric flush) happens exactly where the eager
+    loop evaluated."""
+    if rounds_per_call < 1:
+        raise ValueError(f"rounds_per_call must be >= 1, got {rounds_per_call}")
+    ends = eval_boundaries(rounds, eval_every)
+    blocks: List[Tuple[int, int]] = []
+    r = 0
+    for end in ends:
+        while r <= end:
+            size = min(rounds_per_call, end + 1 - r)
+            blocks.append((r, size))
+            r += size
+    return blocks
+
+
+class HostPrefetcher:
+    """Iterate ``(start, size, batches, client_ids)`` over round blocks,
+    assembling and device-staging each block ahead of consumption.
+
+    gen:      a ``RoundBatchGenerator`` (consumed only by the producer,
+              in block order — the rng stream matches eager assembly).
+    blocks:   the ``plan_round_blocks`` output.
+    depth:    how many blocks may be staged ahead (bounded queue).
+              ``0`` = assemble inline on the consumer thread (eager).
+    stacked:  produce (M, S, K, ...) stacks for the multi-round engine
+              instead of (S, K, ...) single-round batches.
+
+    Attributes ``wait_s`` (time the consumer spent blocked obtaining the
+    next block — the host-blocked critical path) and ``produce_s``
+    (total assembly + staging time wherever it ran) feed the
+    round-throughput benchmark.
+    """
+
+    _SENTINEL = object()
+
+    def __init__(self, gen, blocks: List[Tuple[int, int]], *, depth: int = 2,
+                 stacked: bool = False, to_device: bool = True):
+        self.gen = gen
+        self.blocks = list(blocks)
+        self.depth = depth
+        self.stacked = stacked
+        self.to_device = to_device
+        self.wait_s = 0.0
+        self.produce_s = 0.0
+        self._stop = threading.Event()
+        self._queue: Optional[queue.Queue] = None
+        self._thread: Optional[threading.Thread] = None
+
+    def _produce(self, start: int, size: int):
+        t0 = time.perf_counter()
+        if self.stacked:
+            batches, cids = self.gen.next_rounds(size)
+        else:
+            assert size == 1, "single-round engine got a fused block"
+            batches, cids = self.gen.next_round()
+        if self.to_device:
+            batches = jax.device_put(batches)
+            cids = jax.device_put(cids)
+        else:
+            batches = {k: jnp.asarray(v) for k, v in batches.items()}
+            cids = jnp.asarray(cids)
+        self.produce_s += time.perf_counter() - t0
+        return start, size, batches, cids
+
+    # -- background producer --------------------------------------------
+    def _producer_loop(self) -> None:
+        try:
+            for start, size in self.blocks:
+                if self._stop.is_set():
+                    return
+                item = self._produce(start, size)
+                while not self._stop.is_set():
+                    try:
+                        self._queue.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+            self._queue.put(self._SENTINEL)
+        except BaseException as e:  # surfaced on the consumer thread
+            self._queue.put(e)
+
+    def __iter__(self) -> Iterator[Tuple[int, int, dict, jax.Array]]:
+        if self.depth <= 0:
+            for start, size in self.blocks:
+                t0 = time.perf_counter()
+                item = self._produce(start, size)
+                self.wait_s += time.perf_counter() - t0
+                yield item
+            return
+        self._queue = queue.Queue(maxsize=self.depth)
+        self._thread = threading.Thread(
+            target=self._producer_loop, name="round-prefetcher", daemon=True)
+        self._thread.start()
+        try:
+            while True:
+                t0 = time.perf_counter()
+                item = self._queue.get()
+                self.wait_s += time.perf_counter() - t0
+                if item is self._SENTINEL:
+                    return
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            # drain so a blocked put() can observe the stop flag
+            while self._thread.is_alive():
+                try:
+                    self._queue.get_nowait()
+                except queue.Empty:
+                    self._thread.join(timeout=0.2)
+            self._thread = None
+
+
+class RoundEngine:
+    """Jitted round dispatch with buffer donation and optional fusion.
+
+    Builds the single-round program, and — when any planned block has
+    size > 1 — the scanned multi-round program, both jitted with
+    ``donate_argnums=(0, 1)`` (params, sstate) unless ``donate=False``:
+    in/out specs match, so XLA reuses the largest live buffers (global
+    params, ``delta_g``/``v_bar``, the num_clients-row client-state
+    tables) instead of re-copying them every round.
+    """
+
+    def __init__(self, model, fed: FedConfig, specs, *, alg=None,
+                 cosine_total_rounds: int = 0, donate: bool = True,
+                 loss_fn: Optional[Callable] = None):
+        donate_argnums = (0, 1) if donate else ()
+        self.donate = donate
+        self.fed = fed
+        self.round_fn = jax.jit(
+            make_round_fn(model, fed, specs, alg=alg, loss_fn=loss_fn,
+                          cosine_total_rounds=cosine_total_rounds),
+            donate_argnums=donate_argnums)
+        self.multi_round_fn = jax.jit(
+            make_multi_round_fn(model, fed, specs, alg=alg, loss_fn=loss_fn,
+                                cosine_total_rounds=cosine_total_rounds),
+            donate_argnums=donate_argnums)
+        self.stacked = fed.rounds_per_call > 1
+
+    def run_block(self, params, sstate, batches, client_ids,
+                  start: int, size: int):
+        """Dispatch one block. Returns ``(params, sstate, metrics)``;
+        metric leaves are (size,)-stacked when the engine is fused,
+        scalars otherwise. The inputs' params/sstate buffers are donated
+        (consumed) when donation is on."""
+        if self.stacked:
+            return self.multi_round_fn(params, sstate, batches, client_ids,
+                                       jnp.asarray(start))
+        return self.round_fn(params, sstate, batches, client_ids,
+                             jnp.asarray(start))

@@ -5,6 +5,14 @@ Dirichlet non-iid task, logging train loss / test accuracy / communication
 bytes per round — the engine is the SAME jitted ``round_fn`` the multi-pod
 dry-run lowers, just on the host mesh.
 
+Execution is pipelined (``repro.launch.pipeline``): params/server-state
+buffers are donated into the jitted round, a background producer
+assembles and stages round r+1's batches while round r computes, scalar
+metrics are spooled on device and fetched in blocks at eval boundaries,
+and ``--rounds-per-call M`` fuses M rounds into one ``lax.scan``-ed
+dispatch. All of it is bit-exact against the eager loop
+(``--prefetch-depth 0 --rounds-per-call 1``).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch vit-tiny-fl \
       --algorithm fedadamw --rounds 30 --clients 16 --sample 8 \
@@ -13,10 +21,9 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,28 +32,61 @@ import numpy as np
 from repro.comm import codec_for, upload_wire_bytes
 from repro.config import FedConfig, get_arch
 from repro.config.model_config import reduced_variant
-from repro.core import build_fed_state, make_round_fn, upload_shape_spec
-from repro.data import make_task, round_batches, sample_clients
-from repro.metrics import CSVLogger, Meter
+from repro.core import build_fed_state, upload_shape_spec
+from repro.data import RoundBatchGenerator, make_task
+from repro.launch.pipeline import (HostPrefetcher, RoundEngine,
+                                   eval_boundaries, plan_round_blocks)
+from repro.metrics import CSVLogger, Meter, MetricsSpool
 from repro.models import build_model
 
 
-def make_eval_fn(model):
-    """One jitted loss for ALL eval rounds. ``jax.jit(model.loss)`` inside
-    the eval call would build a fresh wrapper — and recompile — per round
-    (bound methods compare unequal across accesses, so jit's cache never
-    hits)."""
-    return jax.jit(model.loss)
+def make_eval_fn(model, loss_fn: Optional[Callable] = None) -> Callable:
+    """One jitted full-test-split eval for ALL eval rounds.
+
+    ``eval_fn(params, stacked)`` scans the ``(nb, batch, ...)`` stacks of
+    ``task.test_split_batches``, weighting each batch's masked CE and
+    accuracy by its valid-label count, so padding rows (labels all -1)
+    carry zero weight and both are the EXACT split-level masked means —
+    identical to evaluating the whole split in one giant batch. Any
+    auxiliary loss (MoE load-balance) is combined as the same weighted
+    mean of per-batch values; it is zero for dense models and only
+    approximate under MoE (padding rows still pass through the router).
+
+    Built once per run: ``jax.jit(model.loss)`` per eval round would
+    re-trace every time (bound methods compare unequal across accesses,
+    so jit's cache never hits)."""
+    loss_fn = loss_fn if loss_fn is not None else model.loss
+
+    def eval_split(params, stacked):
+        def body(carry, batch):
+            _loss, metrics = loss_fn(params, batch)
+            n = (batch["labels"] >= 0).sum().astype(jnp.float32)
+            ces, auxs, accs, ns = carry
+            return (ces + metrics["ce"] * n, auxs + metrics["aux"] * n,
+                    accs + metrics["accuracy"] * n, ns + n), None
+
+        zeros = jnp.zeros((), jnp.float32)
+        (ces, auxs, accs, ns), _ = jax.lax.scan(
+            body, (zeros, zeros, zeros, zeros), stacked)
+        den = jnp.maximum(ns, 1.0)
+        return (ces + auxs) / den, accs / den
+
+    return jax.jit(eval_split)
 
 
 def evaluate(model, params, task, batch_size: int = 256,
-             loss_fn=None) -> Dict[str, float]:
-    loss_fn = loss_fn if loss_fn is not None else make_eval_fn(model)
-    batch = task.test_batch(batch_size)
-    batch = {k: jnp.asarray(v) for k, v in batch.items()}
-    loss, metrics = loss_fn(params, batch)
-    return {"test_loss": float(loss),
-            "test_acc": float(metrics["accuracy"])}
+             eval_fn: Optional[Callable] = None,
+             stacked=None) -> Dict[str, float]:
+    """Exact test_loss / test_acc over the FULL test split (batched scan;
+    a single-batch subsample is not measured anywhere anymore). Pass
+    ``stacked`` (device-resident ``test_split_batches`` stacks) to skip
+    re-transferring the split every eval round."""
+    eval_fn = eval_fn if eval_fn is not None else make_eval_fn(model)
+    if stacked is None:
+        stacked = {k: jnp.asarray(v)
+                   for k, v in task.test_split_batches(batch_size).items()}
+    loss, acc = eval_fn(params, stacked)
+    return {"test_loss": float(loss), "test_acc": float(acc)}
 
 
 def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
@@ -63,7 +103,9 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                  layout: str = "client_parallel",
                  comm_error_feedback: bool = True,
                  use_pallas_quantpack: bool = False,
-                 client_state_policy: str = "dense") -> Dict[str, list]:
+                 client_state_policy: str = "dense",
+                 prefetch_depth: int = 2, rounds_per_call: int = 1,
+                 donate: bool = True) -> Dict[str, list]:
     cfg = get_arch(arch)
     if reduce_model:
         cfg = reduced_variant(cfg)
@@ -79,7 +121,8 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         use_pallas_update=use_pallas,
         comm_error_feedback=comm_error_feedback,
         use_pallas_quantpack=use_pallas_quantpack,
-        client_state_policy=client_state_policy)
+        client_state_policy=client_state_policy,
+        rounds_per_call=rounds_per_call)
     model = build_model(cfg, compute_dtype=jnp.float32)
     task = make_task(task_kind, vocab_size=cfg.vocab_size, seq_len=seq_len,
                      num_samples=max(2048, 64 * num_clients),
@@ -88,18 +131,31 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
 
     params, specs, alg, sstate = build_fed_state(
         model, fed, jax.random.key(seed))
-    round_fn = jax.jit(make_round_fn(
-        model, fed, specs, alg=alg,
-        cosine_total_rounds=rounds if cosine else 0))
+    engine = RoundEngine(model, fed, specs, alg=alg,
+                         cosine_total_rounds=rounds if cosine else 0,
+                         donate=donate)
 
-    rng = np.random.default_rng(seed + 1)
+    gen = RoundBatchGenerator(
+        task, num_clients=fed.num_clients,
+        clients_per_round=fed.clients_per_round,
+        local_steps=fed.local_steps, batch_size=batch_size,
+        rng=np.random.default_rng(seed + 1))
+    blocks = plan_round_blocks(rounds, eval_every, fed.rounds_per_call)
+    eval_rounds = set(eval_boundaries(rounds, eval_every))
+    prefetcher = HostPrefetcher(gen, blocks, depth=prefetch_depth,
+                                stacked=engine.stacked)
+    spool = MetricsSpool()
+
     # declare the eval-only columns up front so every CSV carries them
     # even before the first eval round lands
     logger = CSVLogger(log_path, fieldnames=[
         "round", "train_loss", "upload_mbytes", "test_loss", "test_acc",
     ]) if log_path else None
     meter = Meter()
-    eval_loss = make_eval_fn(model)
+    eval_fn = make_eval_fn(model)
+    # stage the full test split on device ONCE — every eval round scans
+    # the same arrays
+    eval_stacked = jax.device_put(task.test_split_batches(256))
     history = {"round": [], "train_loss": [], "test_acc": [],
                "test_loss": [], "upload_mbytes": []}
 
@@ -111,27 +167,54 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
     codec = codec_for(fed.algorithm)
     comm_bytes = upload_wire_bytes(
         upload_shape_spec(alg, params, sstate, specs, fed), codec)
-    for r in range(rounds):
-        cids = sample_clients(fed.num_clients, fed.clients_per_round, rng)
-        batches = round_batches(task, cids, fed.local_steps, batch_size, rng)
-        batches = {k: jnp.asarray(v) for k, v in batches.items()}
-        params, sstate, metrics = round_fn(
-            params, sstate, batches, jnp.asarray(cids), jnp.asarray(r))
-        loss = float(metrics["loss_mean"])
-        meter.update(loss)
-        rec = {"round": r, "train_loss": loss,
-               "upload_mbytes": comm_bytes / 1e6}
-        if (r + 1) % eval_every == 0 or r == rounds - 1:
-            rec.update(evaluate(model, params, task, loss_fn=eval_loss))
-            history["round"].append(r)
-            history["train_loss"].append(loss)
-            history["test_acc"].append(rec["test_acc"])
-            history["test_loss"].append(rec["test_loss"])
-            history["upload_mbytes"].append(rec["upload_mbytes"])
+    t0 = time.perf_counter()
+    try:
+        for start, size, batches, cids in prefetcher:
+            params, sstate, metrics = engine.run_block(
+                params, sstate, batches, cids, start, size)
+            spool.append(start, metrics, size)
+            r_end = start + size - 1
+            if r_end not in eval_rounds:
+                continue
+            # eval boundary: one blocking fetch of everything spooled,
+            # then the exact full-split eval on the current params
+            eval_rec = evaluate(model, params, task, eval_fn=eval_fn,
+                                stacked=eval_stacked)
+            for r, m in spool.flush():
+                loss = m["loss_mean"]
+                meter.update(loss)
+                history["train_loss"].append(loss)  # EVERY round
+                rec = {"round": r, "train_loss": loss,
+                       "upload_mbytes": comm_bytes / 1e6}
+                if r == r_end:
+                    rec.update(eval_rec)
+                    history["round"].append(r)
+                    history["test_acc"].append(rec["test_acc"])
+                    history["test_loss"].append(rec["test_loss"])
+                    history["upload_mbytes"].append(rec["upload_mbytes"])
+                if logger:
+                    logger.log(rec)
+    finally:
+        prefetcher.close()
+        try:
+            # salvage rounds computed since the last eval boundary (an
+            # interrupt mid-interval must not drop logged rows the
+            # device already produced); no-op on a clean exit
+            for r, m in spool.flush():
+                history["train_loss"].append(m["loss_mean"])
+                if logger:
+                    logger.log({"round": r, "train_loss": m["loss_mean"],
+                                "upload_mbytes": comm_bytes / 1e6})
+        except Exception:
+            pass  # never mask the original in-flight exception
         if logger:
-            logger.log(rec)
-    if logger:
-        logger.close()
+            logger.close()
+    history["engine"] = {
+        "rounds": rounds, "wall_s": time.perf_counter() - t0,
+        "prefetch_depth": prefetch_depth,
+        "rounds_per_call": fed.rounds_per_call, "donate": donate,
+        "host_wait_s": prefetcher.wait_s, "produce_s": prefetcher.produce_s,
+    }
     return history
 
 
@@ -162,6 +245,15 @@ def main() -> None:
                     choices=["dense", "blockmean", "int8"],
                     help="storage policy for per-client server state "
                          "tables (SCAFFOLD control variates, EF residuals)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="round blocks staged ahead by the background "
+                         "producer (0 = synchronous eager loop)")
+    ap.add_argument("--rounds-per-call", type=int, default=1,
+                    help="fuse this many rounds into one jitted "
+                         "lax.scan dispatch (bit-exact for any value)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable params/state buffer donation into the "
+                         "jitted round")
     args = ap.parse_args()
     t0 = time.time()
     hist = run_training(
@@ -174,7 +266,10 @@ def main() -> None:
         layout=args.layout, use_pallas=args.pallas,
         comm_error_feedback=not args.no_error_feedback,
         use_pallas_quantpack=args.pallas_quantpack,
-        client_state_policy=args.client_state_policy)
+        client_state_policy=args.client_state_policy,
+        prefetch_depth=args.prefetch_depth,
+        rounds_per_call=args.rounds_per_call,
+        donate=not args.no_donate)
     print(json.dumps({
         "final_train_loss": hist["train_loss"][-1],
         "final_test_acc": hist["test_acc"][-1],

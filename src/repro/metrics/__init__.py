@@ -1,3 +1,4 @@
+from repro.metrics.deferred import MetricsSpool
 from repro.metrics.loggers import CSVLogger, JSONLLogger, Meter
 
-__all__ = ["CSVLogger", "JSONLLogger", "Meter"]
+__all__ = ["CSVLogger", "JSONLLogger", "Meter", "MetricsSpool"]

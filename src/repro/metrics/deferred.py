@@ -1,0 +1,52 @@
+"""Deferred per-round metrics: keep device scalars unfetched until a
+boundary, so the dispatch queue stays full between evals.
+
+The eager seed loop called ``float(metrics["loss_mean"])`` every round —
+a host<->device round-trip that drains the dispatch queue and leaves the
+device idle while the host assembles the next batch. ``MetricsSpool``
+instead holds the (0-d or per-round-stacked) device arrays and fetches
+them in ONE blocking transfer at eval boundaries.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+
+class MetricsSpool:
+    """Accumulates per-round metric pytrees on device; ``flush()`` does a
+    single blocking ``jax.device_get`` and expands them to per-round
+    ``(round, {name: float})`` records.
+
+    ``append(start_round, metrics)`` accepts either scalar leaves (one
+    round) or leaves with a leading round axis of length ``num_rounds``
+    (a fused multi-round block).
+    """
+
+    def __init__(self):
+        self._pending: List[Tuple[int, int, Dict[str, Any]]] = []
+
+    def append(self, start_round: int, metrics: Dict[str, Any],
+               num_rounds: int = 1) -> None:
+        self._pending.append((int(start_round), int(num_rounds), metrics))
+
+    def __len__(self) -> int:
+        return sum(n for _, n, _ in self._pending)
+
+    def flush(self) -> List[Tuple[int, Dict[str, float]]]:
+        """One blocking fetch of everything spooled since the last flush,
+        in round order."""
+        if not self._pending:
+            return []
+        fetched = jax.device_get([m for _, _, m in self._pending])
+        out: List[Tuple[int, Dict[str, float]]] = []
+        for (start, n, _), metrics in zip(self._pending, fetched):
+            arrs = {k: np.asarray(v) for k, v in metrics.items()}
+            for i in range(n):
+                out.append((start + i, {
+                    k: float(a) if a.ndim == 0 else float(a[i])
+                    for k, a in arrs.items()}))
+        self._pending.clear()
+        return out

@@ -160,9 +160,11 @@ def test_training_csv_contains_eval_rows(tmp_path):
 def test_evaluate_compiles_once():
     """Regression: evaluate() used to call jax.jit(model.loss) per eval
     round — a fresh wrapper (bound methods compare unequal), so every
-    eval round recompiled. The hoisted eval fn must trace exactly once."""
+    eval round recompiled. The hoisted eval fn must trace exactly once
+    across eval rounds (the loss body sits inside a lax.scan over the
+    test split, so one trace total)."""
     from repro.data import make_task
-    from repro.launch.train import evaluate
+    from repro.launch.train import evaluate, make_eval_fn
     cfg, model, params = build_tiny("dense")
     task = make_task("class_lm", vocab_size=cfg.vocab_size, seq_len=16,
                      num_samples=128, num_clients=2, dirichlet_alpha=0.6,
@@ -173,9 +175,9 @@ def test_evaluate_compiles_once():
         traces["n"] += 1
         return model.loss(p, b)
 
-    eval_fn = jax.jit(counting_loss)
-    r1 = evaluate(model, params, task, batch_size=32, loss_fn=eval_fn)
-    r2 = evaluate(model, params, task, batch_size=32, loss_fn=eval_fn)
+    eval_fn = make_eval_fn(model, loss_fn=counting_loss)
+    r1 = evaluate(model, params, task, batch_size=32, eval_fn=eval_fn)
+    r2 = evaluate(model, params, task, batch_size=32, eval_fn=eval_fn)
     assert traces["n"] == 1, traces
     assert np.isfinite(r1["test_loss"]) and r1 == r2
 

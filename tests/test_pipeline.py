@@ -1,0 +1,242 @@
+"""Pipelined round engine: block planning, prefetch/fusion parity,
+donation safety, deferred metrics, and the exact full-split eval."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import build_tiny
+from repro.config import FedConfig
+from repro.core import build_fed_state
+from repro.data import RoundBatchGenerator, make_task
+from repro.launch.pipeline import (HostPrefetcher, RoundEngine,
+                                   eval_boundaries, plan_round_blocks)
+from repro.metrics import MetricsSpool
+
+ROUNDS, EVERY = 6, 3
+
+
+def _task(cfg, num_clients=4, seq_len=16, num_samples=256, seed=0):
+    return make_task("class_lm", vocab_size=cfg.vocab_size, seq_len=seq_len,
+                     num_samples=num_samples, num_clients=num_clients,
+                     dirichlet_alpha=0.6, seed=seed)
+
+
+def _gen(task, seed=7, local_steps=2, batch_size=2):
+    return RoundBatchGenerator(task, num_clients=task.num_clients,
+                               clients_per_round=2, local_steps=local_steps,
+                               batch_size=batch_size, rng=seed)
+
+
+# ---------------------------------------------------------------- planning
+
+@pytest.mark.parametrize("rounds,every,rpc", [
+    (10, 4, 3), (10, 1, 4), (7, 100, 3), (5, 5, 1), (1, 1, 8), (12, 3, 3),
+])
+def test_plan_round_blocks_covers_and_respects_eval(rounds, every, rpc):
+    blocks = plan_round_blocks(rounds, every, rpc)
+    # exact cover, in order
+    covered = [r for start, size in blocks for r in range(start, start + size)]
+    assert covered == list(range(rounds))
+    ends = set(eval_boundaries(rounds, every))
+    for start, size in blocks:
+        assert 1 <= size <= rpc
+        # a block never straddles an eval boundary: no eval round strictly
+        # inside [start, start+size-1)
+        assert not any(r in ends for r in range(start, start + size - 1))
+    assert rounds - 1 in ends
+
+
+def test_plan_round_blocks_rejects_bad_rpc():
+    with pytest.raises(ValueError):
+        plan_round_blocks(4, 2, 0)
+
+
+# ---------------------------------------------------------- data generator
+
+def test_generator_stacked_matches_per_round():
+    cfg, _, _ = build_tiny("dense")
+    task = _task(cfg)
+    a, b = _gen(task, seed=3), _gen(task, seed=3)
+    singles = [a.next_round() for _ in range(4)]
+    stacked_b, cids_b = b.next_rounds(4)
+    for k in stacked_b:
+        np.testing.assert_array_equal(
+            stacked_b[k], np.stack([s[0][k] for s in singles]))
+    np.testing.assert_array_equal(cids_b, np.stack([s[1] for s in singles]))
+
+
+def test_prefetcher_depth0_matches_background():
+    cfg, _, _ = build_tiny("dense")
+    task = _task(cfg)
+    blocks = plan_round_blocks(ROUNDS, EVERY, 1)
+    out = {}
+    for depth in (0, 2):
+        items = list(HostPrefetcher(_gen(task), blocks, depth=depth,
+                                    to_device=False))
+        out[depth] = items
+        assert [(s, z) for s, z, _, _ in items] == blocks
+    for (s0, z0, b0, c0), (s1, z1, b1, c1) in zip(out[0], out[2]):
+        assert jnp.array_equal(c0, c1)
+        for k in b0:
+            assert jnp.array_equal(b0[k], b1[k])
+
+
+def test_prefetcher_propagates_producer_error():
+    class Boom:
+        def next_round(self):
+            raise RuntimeError("producer exploded")
+
+    pre = HostPrefetcher(Boom(), [(0, 1)], depth=1, stacked=False,
+                         to_device=False)
+    with pytest.raises(RuntimeError, match="producer exploded"):
+        list(pre)
+
+
+# -------------------------------------------------------------- metrics
+
+def test_metrics_spool_scalar_and_stacked():
+    spool = MetricsSpool()
+    spool.append(0, {"loss_mean": jnp.asarray(1.5)})
+    spool.append(1, {"loss_mean": jnp.asarray([2.5, 3.5])}, num_rounds=2)
+    assert len(spool) == 3
+    rows = spool.flush()
+    assert rows == [(0, {"loss_mean": 1.5}), (1, {"loss_mean": 2.5}),
+                    (2, {"loss_mean": 3.5})]
+    assert spool.flush() == []  # drained
+
+
+# ------------------------------------------------- trajectory parity (tiny)
+
+def _drive(engine, params, sstate, gen, blocks, depth):
+    """Run all blocks through the engine; returns (losses, params)."""
+    pre = HostPrefetcher(gen, blocks, depth=depth, stacked=engine.stacked)
+    spool = MetricsSpool()
+    for start, size, batches, cids in pre:
+        params, sstate, m = engine.run_block(params, sstate, batches, cids,
+                                             start, size)
+        spool.append(start, m, size)
+    return [m["loss_mean"] for _, m in spool.flush()], params, sstate
+
+
+@pytest.mark.parametrize("algorithm", ["fedadamw", "scaffold"])
+@pytest.mark.parametrize("layout", ["client_parallel", "client_sequential"])
+def test_modes_bit_exact(algorithm, layout):
+    """Eager loop, prefetched loop, and rounds_per_call>1 must produce
+    BIT-identical loss trajectories and final params for algorithms with
+    and without per-client server state, in both placement layouts."""
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg)
+    base = FedConfig(algorithm=algorithm, num_clients=4, clients_per_round=2,
+                     local_steps=2, lr=1e-3, layout=layout,
+                     sequential_clients=2)
+    params, specs, alg, sstate = build_fed_state(
+        model, base, jax.random.key(0), cfg=cfg)
+    engine = RoundEngine(model, base, specs, alg=alg,
+                         cosine_total_rounds=ROUNDS, donate=False)
+    fused_fed = dataclasses.replace(base, rounds_per_call=3)
+    fused_engine = RoundEngine(model, fused_fed, specs, alg=alg,
+                               cosine_total_rounds=ROUNDS, donate=False)
+
+    single_blocks = plan_round_blocks(ROUNDS, EVERY, 1)
+    fused_blocks = plan_round_blocks(ROUNDS, EVERY, 3)
+    l_eager, p_eager, s_eager = _drive(
+        engine, params, sstate, _gen(task), single_blocks, depth=0)
+    l_pre, p_pre, _ = _drive(
+        engine, params, sstate, _gen(task), single_blocks, depth=2)
+    l_fused, p_fused, s_fused = _drive(
+        fused_engine, params, sstate, _gen(task), fused_blocks, depth=2)
+
+    assert l_eager == l_pre == l_fused, (l_eager, l_pre, l_fused)
+    for a, b, c in zip(jax.tree.leaves(p_eager), jax.tree.leaves(p_pre),
+                       jax.tree.leaves(p_fused)):
+        assert jnp.array_equal(a, b) and jnp.array_equal(a, c)
+    # per-client server state (SCAFFOLD control variates) must match too
+    for a, b in zip(jax.tree.leaves(s_eager), jax.tree.leaves(s_fused)):
+        assert jnp.array_equal(a, b)
+
+
+# ------------------------------------------------------------- donation
+
+def test_donation_consumes_inputs_without_stale_reuse():
+    """donate_argnums=(0,1) must (a) leave the trajectory bit-identical
+    to the undonated engine and (b) actually consume the donated buffers
+    — no silent reuse of stale params/sstate after round_fn returns."""
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg)
+    fed = FedConfig(algorithm="fedadamw", num_clients=4, clients_per_round=2,
+                    local_steps=2, lr=1e-3)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    plain = RoundEngine(model, fed, specs, alg=alg, donate=False)
+    donating = RoundEngine(model, fed, specs, alg=alg, donate=True)
+    blocks = plan_round_blocks(4, 4, 1)
+
+    l_ref, p_ref, _ = _drive(plain, params, sstate, _gen(task), blocks, 0)
+
+    p = jax.tree.map(jnp.copy, params)
+    s = jax.tree.map(jnp.copy, sstate)
+    first_leaf = jax.tree.leaves(p)[0]
+    losses = []
+    for start, size, batches, cids in HostPrefetcher(
+            _gen(task), blocks, depth=0):
+        p, s, m = donating.run_block(p, s, batches, cids, start, size)
+        losses.append(float(m["loss_mean"]))
+    assert losses == l_ref
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p)):
+        assert jnp.array_equal(a, b)
+    # the donated input buffer is gone — reading it must raise, not
+    # silently serve stale data
+    assert first_leaf.is_deleted()
+    with pytest.raises(RuntimeError):
+        np.asarray(first_leaf)
+    # originals (never passed to the donating engine) are untouched
+    assert not jax.tree.leaves(params)[0].is_deleted()
+
+
+# ---------------------------------------------------------- full-split eval
+
+def test_evaluate_full_split_exact():
+    """evaluate() must equal the masked mean over the WHOLE test split —
+    including when the split does not divide the eval batch size (padding
+    rows are fully masked, so they carry zero weight)."""
+    from repro.launch.train import evaluate, make_eval_fn
+    cfg, model, params = build_tiny("dense")
+    task = _task(cfg, num_samples=200)  # test split: 30 samples
+    bs = 8  # 30 % 8 != 0 -> padded final batch
+    got = evaluate(model, params, task, batch_size=bs,
+                   eval_fn=make_eval_fn(model))
+
+    whole = {"tokens": jnp.asarray(task.test_tokens),
+             "labels": jnp.asarray(task.test_labels)}
+    loss, metrics = model.loss(params, whole)
+    assert got["test_loss"] == pytest.approx(float(loss), rel=1e-5)
+    assert got["test_acc"] == pytest.approx(float(metrics["accuracy"]),
+                                            rel=1e-5)
+
+
+# ------------------------------------------------------- end-to-end driver
+
+def test_run_training_mode_parity_and_history():
+    """run_training trajectories are identical across eager / prefetched /
+    fused execution, train_loss records EVERY round, and eval rounds
+    carry the full-split metrics."""
+    from repro.launch.train import run_training
+    kw = dict(arch="vit-tiny-fl", algorithm="fedadamw", rounds=4,
+              num_clients=4, clients_per_round=2, local_steps=2,
+              batch_size=4, eval_every=2, seed=3)
+    h_eager = run_training(**kw, prefetch_depth=0, rounds_per_call=1,
+                           donate=False)
+    h_pre = run_training(**kw, prefetch_depth=2, rounds_per_call=1)
+    h_fused = run_training(**kw, prefetch_depth=2, rounds_per_call=2)
+    assert h_eager["train_loss"] == h_pre["train_loss"] == \
+        h_fused["train_loss"]
+    assert h_eager["test_acc"] == h_pre["test_acc"] == h_fused["test_acc"]
+    assert h_eager["test_loss"] == h_fused["test_loss"]
+    assert len(h_eager["train_loss"]) == 4      # every round recorded
+    assert h_eager["round"] == [1, 3]           # eval rounds only
+    assert len(h_eager["test_acc"]) == 2
+    assert all(np.isfinite(v) for v in h_eager["train_loss"])
+    assert h_fused["engine"]["rounds_per_call"] == 2
