@@ -77,6 +77,20 @@ class FedConfig:
     comm_error_feedback: bool = True   # EF for lossy codecs (client_parallel)
     use_pallas_quantpack: bool = False  # fused quantize-pack kernel for int8/int4
 
+    # --- participation scenario (repro.scenario, docs/scenarios.md):
+    # system heterogeneity on top of the Dirichlet data heterogeneity.
+    # The defaults describe the degenerate scenario (all clients always
+    # available, uniform sampling + weights, every client runs K steps),
+    # which is BIT-EXACT with the scenario-free engine.
+    availability: str = "always_on"
+    # always_on | bernoulli<rate>[:<concentration>] | trace[:<path.npy>]
+    sampling: str = "uniform"
+    # uniform | weighted (data-size) | available (availability-constrained)
+    straggler_frac: float = 0.0        # fraction of clients that straggle
+    straggler_min_steps: int = 1       # floor of a straggler's K_i
+    agg_weighting: str = "uniform"     # uniform | data_size | inv_steps
+    scenario_seed: int = 0             # availability/straggler rng seed
+
     # gradient micro-batching inside each local step: the per-step batch is
     # split into this many chunks whose gradients are accumulated (identical
     # semantics — the mean of micro-gradients IS the batch gradient) so the
@@ -106,7 +120,40 @@ class FedConfig:
         if self.client_state_policy not in ("dense", "blockmean", "int8"):
             raise ValueError(
                 f"unknown client_state_policy {self.client_state_policy!r}")
-        if self.clients_per_round > self.num_clients:
-            raise ValueError("clients_per_round > num_clients")
         if self.rounds_per_call < 1:
             raise ValueError("rounds_per_call must be >= 1")
+        self._validate_participation()
+
+    def _validate_participation(self) -> None:
+        """Participation / scenario fields, with actionable messages (the
+        raw numpy failure for S > N is a generic 'larger sample than
+        population' with no federated context; worse, several fields used
+        to pass through unchecked and only blew up rounds into a run)."""
+        from repro.data.sampler import get_sampler, validate_participation
+        validate_participation(self.num_clients, self.clients_per_round)
+        if self.local_steps < 1:
+            raise ValueError(
+                f"local_steps must be >= 1, got {self.local_steps} "
+                "(each sampled client runs at least one local step)")
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        # raises ValueError with the known-spec list on a bad spec; the
+        # trace path is validated when the schedule is actually loaded
+        from repro.scenario.availability import parse_availability
+        if not self.availability.startswith("trace"):
+            parse_availability(self.availability, self.num_clients)
+        get_sampler(self.sampling)
+        if not 0.0 <= self.straggler_frac <= 1.0:
+            raise ValueError(
+                f"straggler_frac must be in [0, 1], got "
+                f"{self.straggler_frac}")
+        if not 1 <= self.straggler_min_steps <= self.local_steps:
+            raise ValueError(
+                f"straggler_min_steps must be in [1, local_steps="
+                f"{self.local_steps}], got {self.straggler_min_steps} "
+                "(a participating client always applies its first step)")
+        from repro.scenario.weights import WEIGHT_SCHEMES
+        if self.agg_weighting not in WEIGHT_SCHEMES:
+            raise ValueError(
+                f"unknown agg_weighting {self.agg_weighting!r}; "
+                f"known: {WEIGHT_SCHEMES}")

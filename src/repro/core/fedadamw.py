@@ -25,6 +25,13 @@ Conventions
 * The server applies ``x^{r+1} = x^r + gamma * mean_i(delta_i)`` — with the
   paper's gamma = 1.0 this is exactly FedAvg-style delta averaging
   (Algorithm 1 line 15 / Algorithm 2 server block).
+* ``mean_upload`` is whatever cross-client reduction the round engine
+  performed: the uniform mean of the paper's algorithms, or — under a
+  participation scenario with ``FedConfig.agg_weighting`` set — a
+  weighted mean with host-normalized weights (sum 1) over delta, v̄ and
+  every other upload entry alike (``repro.core.rounds._weighted_mean``).
+  ``server_update`` never needs to know which; its estimator contract
+  (aggregate ≈ cohort expectation) is unchanged.
 * The broadcast global-update estimate is
   ``Delta_G^r = -1/(K*eta) * mean_i(delta_i)`` (Algorithm 2/3), i.e. an
   *ascent* direction estimate; the local update *adds* ``alpha * Delta_G``
@@ -125,6 +132,10 @@ def _plain_delta_server(params, mean_delta, fed: FedConfig):
 
 
 def _delta_g_from_mean_delta(mean_delta, fed: FedConfig):
+    # NOTE: normalizes by the NOMINAL K. Under a straggler scenario the
+    # aggregated delta reflects K_i <= K applied steps per client, so
+    # Delta_G is attenuated by ~mean(K_i)/K; agg_weighting="inv_steps"
+    # is the built-in counter-measure (docs/scenarios.md §Stragglers).
     scale = -1.0 / (fed.local_steps * fed.lr)
     return tree_scale(mean_delta, scale)
 

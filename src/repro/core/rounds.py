@@ -31,6 +31,25 @@ per-client-only upload entries) — vectorized over the stacked uploads in
 The K local steps are a ``lax.scan`` over the per-step batch axis; the
 whole round is one XLA program (one ``jax.jit``), which is what the
 multi-pod dry-run lowers.
+
+Participation scenarios (``repro.scenario``, docs/scenarios.md) ride the
+round batch pytree under two reserved keys that :func:`_pop_scenario`
+splits off at trace time:
+
+* ``STEP_MASK_KEY`` — an ``(S, K)`` bool step-validity mask (straggler
+  simulation: client s only *applies* its first K_s steps; masked steps
+  still compute their gradient — static shapes — but the parameter /
+  optimizer-state update is discarded and the loss carries zero metric
+  weight).
+* ``AGG_WEIGHTS_KEY`` — an ``(S,)`` f32 weight vector (sums to 1) that
+  replaces the uniform cross-client mean of the uploads (delta, block-mean
+  v, SCAFFOLD dc, ...) with a weighted reduction.
+
+Key presence is part of the pytree *structure*, so a degenerate scenario
+(no reserved keys) traces the exact seed program — bit-exactness with the
+scenario-free engine is structural, not numerical luck. Both layouts,
+donation, and ``rounds_per_call`` fusion handle the keys unchanged: the
+fused scan slices ``(M, S, K)`` masks per round like any other batch leaf.
 """
 from __future__ import annotations
 
@@ -43,8 +62,44 @@ from repro.config import FedConfig, ModelConfig
 from repro.core import partition
 from repro.core.fedadamw import FedAlgorithm, get_algorithm
 from repro.core.tree_util import tree_sub
+from repro.scenario import AGG_WEIGHTS_KEY, STEP_MASK_KEY
 
 Array = jax.Array
+
+
+def _pop_scenario(batches):
+    """Split the reserved scenario keys out of the round batch pytree ->
+    ``(data_batches, step_mask | None, agg_weights | None)``. Presence is
+    static (pytree structure), so jit traces a mask-free program when the
+    scenario is degenerate."""
+    if not isinstance(batches, dict) or not (
+            STEP_MASK_KEY in batches or AGG_WEIGHTS_KEY in batches):
+        return batches, None, None
+    batches = dict(batches)
+    return (batches, batches.pop(STEP_MASK_KEY, None),
+            batches.pop(AGG_WEIGHTS_KEY, None))
+
+
+def _weighted_mean(uploads, weights):
+    """Cross-client upload reduction: uniform mean (weights=None, the
+    paper's Algorithms 1-3) or a ``(S,)``-weighted sum (weights sum to 1,
+    host-normalized by ``repro.scenario.aggregation_weights``)."""
+    if weights is None:
+        return jax.tree.map(lambda u: u.mean(axis=0), uploads)
+
+    def wmean(u):
+        # explicit left-to-right chain over the (small, static) client
+        # axis instead of a sum() reduction: XLA picks reduction shapes
+        # per program, so the same reduction can round differently inside
+        # the fused multi-round scan body than in the single-round
+        # program — a fixed association order keeps eager and fused
+        # trajectories bit-identical under active scenarios too
+        acc = u[0] * weights[0]
+        for i in range(1, u.shape[0]):
+            acc = acc + u[i] * weights[i]
+        return acc.astype(u.dtype)
+
+    return jax.tree.map(wmean, uploads)
 
 
 def init_server_state(alg: FedAlgorithm, params, specs, fed: FedConfig):
@@ -70,10 +125,15 @@ def cosine_lr_scale(round_index: Array, total_rounds: int,
 
 def make_local_phase(loss_fn: Callable, alg: FedAlgorithm, fed: FedConfig,
                      specs) -> Callable:
-    """Returns local_phase(global_params, sstate, batches, lr_scale[, cid])
-    -> (upload, metrics). ``batches``: pytree with leading K axis."""
+    """Returns local_phase(global_params, sstate, batches, lr_scale[, cid,
+    step_valid]) -> (upload, metrics). ``batches``: pytree with leading K
+    axis. ``step_valid`` (optional, (K,) bool) is the straggler
+    step-validity mask: invalid steps keep the batch shape (their
+    gradient is computed and discarded) but apply no update, so the
+    upload reflects exactly the client's first K_i steps."""
 
-    def local_phase(gparams, sstate, batches, lr_scale, client_id=None):
+    def local_phase(gparams, sstate, batches, lr_scale, client_id=None,
+                    step_valid=None):
         if alg.needs_client_ids:
             cstate = alg.init_client(gparams, sstate, fed, specs=specs,
                                      client_id=client_id)
@@ -124,12 +184,39 @@ def make_local_phase(loss_fn: Callable, alg: FedAlgorithm, fed: FedConfig,
                                          lr_scale)
             return (params, cst), loss
 
-        (params_k, cstate_k), losses = jax.lax.scan(
-            step, (gparams, cstate), batches)
+        def masked_step(carry, xs):
+            # straggler simulation: an invalid step computes its gradient
+            # (the scan shape is static) but the update is discarded —
+            # params AND client optimizer state (m, v, k, control
+            # variates) carry through unchanged, exactly as if the client
+            # had stopped after its K_i-th step
+            batch, valid = xs
+            params, cst = carry
+            loss, grads = grad_of(params, batch)
+            new_params, new_cst = alg.local_step(params, grads, cst, sstate,
+                                                 fed, lr_scale)
+            keep = lambda new, old: jnp.where(valid, new, old)  # noqa: E731
+            params = jax.tree.map(keep, new_params, params)
+            cst = jax.tree.map(keep, new_cst, cst)
+            return (params, cst), loss
+
+        if step_valid is None:
+            (params_k, cstate_k), losses = jax.lax.scan(
+                step, (gparams, cstate), batches)
+            metrics = {"loss_first": losses[0], "loss_last": losses[-1],
+                       "loss_mean": losses.mean()}
+        else:
+            (params_k, cstate_k), losses = jax.lax.scan(
+                masked_step, (gparams, cstate), (batches, step_valid))
+            v = step_valid.astype(jnp.float32)
+            n_valid = jnp.maximum(v.sum(), 1.0)
+            # last VALID step's loss: index of the largest k with v[k]=1
+            # (k=0 is always valid — straggler_min_steps >= 1)
+            last = jnp.argmax(jnp.arange(losses.shape[0]) * v)
+            metrics = {"loss_first": losses[0], "loss_last": losses[last],
+                       "loss_mean": (losses * v).sum() / n_valid}
         delta = tree_sub(params_k, gparams)
         up = alg.upload(delta, cstate_k, specs, fed)
-        metrics = {"loss_first": losses[0], "loss_last": losses[-1],
-                   "loss_mean": losses.mean()}
         return up, metrics
 
     return local_phase
@@ -159,16 +246,24 @@ def make_round_fn(model, fed: FedConfig, specs, *,
     if fed.layout == "client_parallel":
 
         def round_fn(gparams, sstate, batches, client_ids, round_index):
+            batches, step_mask, agg_w = _pop_scenario(batches)
             lr_scale = _lr_scale(round_index)
-            uploads, metrics = jax.vmap(
-                local_phase, in_axes=(None, None, 0, None, 0),
-                out_axes=0)(gparams, sstate, batches, lr_scale, client_ids)
+            if step_mask is None:
+                uploads, metrics = jax.vmap(
+                    local_phase, in_axes=(None, None, 0, None, 0),
+                    out_axes=0)(gparams, sstate, batches, lr_scale,
+                                client_ids)
+            else:
+                uploads, metrics = jax.vmap(
+                    local_phase, in_axes=(None, None, 0, None, 0, 0),
+                    out_axes=0)(gparams, sstate, batches, lr_scale,
+                                client_ids, step_mask)
             if alg.commit is not None:
                 # write the sampled clients' per-client server state rows
                 # (control variates, EF residuals) before aggregation
                 sstate, uploads = alg.commit(sstate, uploads, client_ids,
                                              specs, fed)
-            mean_up = jax.tree.map(lambda u: u.mean(axis=0), uploads)
+            mean_up = _weighted_mean(uploads, agg_w)
             new_params, new_state = alg.server_update(
                 gparams, sstate, mean_up, specs, fed)
             out_metrics = jax.tree.map(lambda m: m.mean(axis=0), metrics)
@@ -177,42 +272,65 @@ def make_round_fn(model, fed: FedConfig, specs, *,
     else:  # client_sequential
 
         def round_fn(gparams, sstate, batches, client_ids, round_index):
+            batches, step_mask, agg_w = _pop_scenario(batches)
             lr_scale = _lr_scale(round_index)
+            weighted = agg_w is not None
 
-            def one_client(sst, per_client_batches, cid):
+            def one_client(sst, per_client_batches, cid, step_valid):
                 """One client's local phase + per-client state commit.
 
                 Distinct clients touch distinct table rows, so committing
                 inside the scan is exactly the vectorized commit of the
                 parallel layout (round-start values for everything the
                 clients *read*: c, delta_g and each client's own row)."""
-                up, m = local_phase(gparams, sst, per_client_batches,
-                                    lr_scale, cid)
+                if step_valid is None:
+                    up, m = local_phase(gparams, sst, per_client_batches,
+                                        lr_scale, cid)
+                else:
+                    up, m = local_phase(gparams, sst, per_client_batches,
+                                        lr_scale, cid, step_valid)
                 if alg.commit is not None:
                     sst, up = alg.commit(sst, up, cid, specs, fed)
                 return sst, up, m
 
+            def contrib(up, w):
+                # weights sum to 1, so the accumulated weighted
+                # contributions ARE the weighted mean — no final divide
+                if not weighted:
+                    return up
+                return jax.tree.map(lambda u: (u * w).astype(u.dtype), up)
+
             def scan_client(acc, xs):
-                per_client_batches, cid = xs
                 acc_up, acc_m, n, sst = acc
-                sst, up, m = one_client(sst, per_client_batches, cid)
-                acc_up = jax.tree.map(jnp.add, acc_up, up)
+                sst, up, m = one_client(sst, xs["b"], xs["cid"],
+                                        xs.get("sm"))
+                acc_up = jax.tree.map(jnp.add, acc_up,
+                                      contrib(up, xs.get("w")))
                 acc_m = jax.tree.map(jnp.add, acc_m, m)
                 return (acc_up, acc_m, n + 1, sst), None
 
+            xs = {"b": batches, "cid": client_ids}
+            if step_mask is not None:
+                xs["sm"] = step_mask
+            if weighted:
+                xs["w"] = agg_w
+
             # build zero accumulators with the right structure via one
             # abstract evaluation (no FLOPs at runtime: jitted away)
-            up0_shape = jax.eval_shape(
-                lambda b, cid: one_client(sstate, b, cid)[1:],
-                jax.tree.map(lambda x: x[0], batches), client_ids[0])
+            def _first_contrib(x):
+                _, up, m = one_client(sstate, x["b"], x["cid"], x.get("sm"))
+                return contrib(up, x.get("w")), m
+
+            acc_shape = jax.eval_shape(_first_contrib,
+                                       jax.tree.map(lambda x: x[0], xs))
             acc0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                                up0_shape)
+                                acc_shape)
             (sum_up, sum_m, n, sstate_k), _ = jax.lax.scan(
                 scan_client,
-                (acc0[0], acc0[1], jnp.zeros((), jnp.float32), sstate),
-                (batches, client_ids))
+                (acc0[0], acc0[1], jnp.zeros((), jnp.float32), sstate), xs)
             inv = 1.0 / jnp.maximum(n, 1.0)
-            mean_up = jax.tree.map(lambda u: u * inv, sum_up)
+            mean_up = (sum_up if weighted
+                       else jax.tree.map(lambda u: u * inv, sum_up))
             out_metrics = jax.tree.map(lambda m: m * inv, sum_m)
             new_params, new_state = alg.server_update(
                 gparams, sstate_k, mean_up, specs, fed)

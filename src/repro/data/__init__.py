@@ -1,7 +1,9 @@
 """Synthetic federated data pipeline (Dirichlet non-iid partitioning)."""
 from repro.data.synthetic import SyntheticTask, make_task
-from repro.data.sampler import (RoundBatchGenerator, round_batches,
-                                sample_clients)
+from repro.data.sampler import (SAMPLERS, RoundBatchGenerator, get_sampler,
+                                register_sampler, round_batches,
+                                sample_clients, validate_participation)
 
 __all__ = ["SyntheticTask", "make_task", "sample_clients", "round_batches",
-           "RoundBatchGenerator"]
+           "RoundBatchGenerator", "SAMPLERS", "get_sampler",
+           "register_sampler", "validate_participation"]

@@ -7,20 +7,135 @@ mini-batch drawn from that client's own (non-iid) shard.
 ``RoundBatchGenerator`` wraps the two into a reusable deterministic
 per-round stream so the pipelined driver (``repro.launch.pipeline``) can
 assemble round r+1 on a background thread while round r computes, with
-bit-identical data to the eager loop.
+bit-identical data to the eager loop. Attach a
+``repro.scenario.ParticipationScenario`` to drive availability-aware
+sampling, straggler step masks, and aggregation weights through the same
+stream (docs/scenarios.md).
+
+Sampling strategies are a registry keyed by ``FedConfig.sampling``:
+
+>>> sorted(SAMPLERS)
+['available', 'uniform', 'weighted']
+>>> import numpy as np
+>>> rng = np.random.default_rng(0)
+>>> cids = get_sampler("uniform")(8, 4, rng)
+>>> sorted(set(int(c) for c in cids)) == sorted(int(c) for c in cids)
+True
+>>> avail = np.array([1, 1, 0, 0, 0, 0, 0, 0], dtype=bool)
+>>> sorted(get_sampler("available")(8, 2, rng, available=avail).tolist())
+[0, 1]
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple, Union
+from typing import Callable, Dict, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.data.synthetic import SyntheticTask
+from repro.scenario import ParticipationScenario
+
+
+def validate_participation(num_clients: int, clients_per_round: int) -> None:
+    """Actionable errors for impossible participation setups (the silent
+    failure mode: ``Generator.choice(replace=False)`` raises a generic
+    "larger sample than population" with no federated context)."""
+    if num_clients < 1:
+        raise ValueError(
+            f"num_clients must be >= 1, got {num_clients}")
+    if clients_per_round < 1:
+        raise ValueError(
+            f"clients_per_round must be >= 1, got {clients_per_round} "
+            "(a federated round needs at least one participant)")
+    if clients_per_round > num_clients:
+        raise ValueError(
+            f"clients_per_round={clients_per_round} exceeds "
+            f"num_clients={num_clients}: a round samples clients WITHOUT "
+            "replacement, so it cannot draw more distinct clients than "
+            "exist. Lower clients_per_round (or raise num_clients).")
+
+
+# ---------------------------------------------------------------------------
+# sampling strategy registry
+# ---------------------------------------------------------------------------
+# A sampler picks the round's S participants from the N clients:
+#   sampler(num_clients, clients_per_round, rng, *,
+#           data_sizes=None, available=None) -> (S,) int ids
+# It consumes `rng` (the generator's shared stream); `data_sizes` is the
+# per-client sample count vector; `available` the availability mask.
+
+Sampler = Callable[..., np.ndarray]
+SAMPLERS: Dict[str, Sampler] = {}
+
+
+def register_sampler(name: str, fn: Sampler) -> None:
+    SAMPLERS[name] = fn
+
+
+def get_sampler(name: str) -> Sampler:
+    try:
+        return SAMPLERS[name]
+    except KeyError:
+        raise ValueError(f"unknown sampling strategy {name!r}; "
+                         f"known: {sorted(SAMPLERS)}") from None
+
+
+def _uniform_sampler(num_clients: int, clients_per_round: int,
+                     rng: np.random.Generator, *, data_sizes=None,
+                     available=None) -> np.ndarray:
+    """Uniform without replacement over ALL clients (the seed engine's
+    sampler — availability is ignored, which models a server that assigns
+    work blindly). Makes exactly one ``rng.choice`` call so the rng
+    stream is byte-identical to the pre-scenario engine."""
+    return rng.choice(num_clients, size=clients_per_round, replace=False)
+
+
+def _weighted_sampler(num_clients: int, clients_per_round: int,
+                      rng: np.random.Generator, *, data_sizes=None,
+                      available=None) -> np.ndarray:
+    """Data-size-weighted without replacement: clients with bigger shards
+    are proportionally more likely to be picked."""
+    if data_sizes is None:
+        raise ValueError("sampling='weighted' needs per-client data sizes "
+                         "(build the scenario from a task or pass "
+                         "data_sizes=)")
+    p = np.asarray(data_sizes, np.float64)
+    if len(p) != num_clients or (p <= 0).any():
+        raise ValueError("weighted sampling needs one positive data size "
+                         f"per client (got {len(p)} sizes for "
+                         f"{num_clients} clients)")
+    return rng.choice(num_clients, size=clients_per_round, replace=False,
+                      p=p / p.sum())
+
+
+def _available_sampler(num_clients: int, clients_per_round: int,
+                       rng: np.random.Generator, *, data_sizes=None,
+                       available=None) -> np.ndarray:
+    """Availability-constrained uniform: sample from this round's
+    available set. When fewer than S clients are available the round is
+    topped up uniformly from the unavailable set (the server waits for
+    them) so the jitted round keeps its static S — the top-up keeps the
+    semantics total rather than crashing mid-sweep on an unlucky round."""
+    if available is None:
+        available = np.ones(num_clients, dtype=bool)
+    avail = np.flatnonzero(available)
+    if len(avail) >= clients_per_round:
+        pick = rng.choice(len(avail), size=clients_per_round, replace=False)
+        return avail[pick]
+    unavail = np.flatnonzero(~np.asarray(available, bool))
+    need = clients_per_round - len(avail)
+    fill = rng.choice(len(unavail), size=need, replace=False)
+    return np.concatenate([avail, unavail[fill]])
+
+
+register_sampler("uniform", _uniform_sampler)
+register_sampler("weighted", _weighted_sampler)
+register_sampler("available", _available_sampler)
 
 
 def sample_clients(num_clients: int, clients_per_round: int,
                    rng: np.random.Generator) -> np.ndarray:
-    return rng.choice(num_clients, size=clients_per_round, replace=False)
+    validate_participation(num_clients, clients_per_round)
+    return _uniform_sampler(num_clients, clients_per_round, rng)
 
 
 def round_batches(task: SyntheticTask, client_ids: np.ndarray,
@@ -42,15 +157,24 @@ class RoundBatchGenerator:
     """Deterministic per-round ``(batches, client_ids)`` stream.
 
     One instance owns one ``np.random.Generator`` and consumes it in
-    exactly the order of the eager seed loop (``sample_clients`` then
+    exactly the order of the eager seed loop (client sampling then
     ``round_batches``, once per round), so eager, host-prefetched, and
     multi-round-fused executions of the same seed see bit-identical
     data regardless of *when* each round's batch is assembled.
+
+    ``scenario`` (a ``repro.scenario.ParticipationScenario``) swaps in
+    availability-aware sampling and attaches the straggler step mask and
+    aggregation weights to the batch dict under the reserved keys; its
+    availability/straggler processes draw from their own per-round seeded
+    generators, NEVER from this stream, so attaching a degenerate
+    scenario changes nothing — bit-exactness holds by construction.
     """
 
     def __init__(self, task: SyntheticTask, *, num_clients: int,
                  clients_per_round: int, local_steps: int, batch_size: int,
-                 rng: Union[np.random.Generator, int, None] = None):
+                 rng: Union[np.random.Generator, int, None] = None,
+                 scenario: Optional[ParticipationScenario] = None):
+        validate_participation(num_clients, clients_per_round)
         self.task = task
         self.num_clients = num_clients
         self.clients_per_round = clients_per_round
@@ -59,24 +183,34 @@ class RoundBatchGenerator:
         if not isinstance(rng, np.random.Generator):
             rng = np.random.default_rng(rng)
         self.rng = rng
+        self.scenario = scenario
         self.rounds_produced = 0
 
     def next_round(self) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
-        """One round's ``({tokens, labels}: (S, K, b, seq)}, cids: (S,))``."""
-        cids = sample_clients(self.num_clients, self.clients_per_round,
-                              self.rng)
+        """One round's ``({tokens, labels[, _step_mask, _agg_weights]}:
+        (S, K, b, seq)}, cids: (S,))``."""
+        r = self.rounds_produced
+        if self.scenario is None:
+            cids = sample_clients(self.num_clients, self.clients_per_round,
+                                  self.rng)
+        else:
+            cids = self.scenario.sample_round(r, self.rng)
         batches = round_batches(self.task, cids, self.local_steps,
                                 self.batch_size, self.rng)
+        if self.scenario is not None:
+            batches.update(self.scenario.round_payload(r, cids))
         self.rounds_produced += 1
         return batches, cids.astype(np.int32)
 
     def next_rounds(self, m: int) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
         """``m`` consecutive rounds stacked on a new leading axis:
-        ``({tokens, labels}: (M, S, K, b, seq)}, cids: (M, S))``.
+        ``({tokens, labels, ...}: (M, S, K, b, seq)}, cids: (M, S))``.
 
         Implemented as exactly ``m`` calls of :meth:`next_round` so the
         rng stream — and therefore the data — matches per-round
-        consumption by construction.
+        consumption by construction. Scenario payload keys stack to
+        ``(M, S, K)`` / ``(M, S)`` and scan apart inside the fused
+        multi-round program.
         """
         rounds = [self.next_round() for _ in range(m)]
         batches = {k: np.stack([b[k] for b, _ in rounds])

@@ -28,6 +28,30 @@ The three pieces compose with ``repro.metrics.MetricsSpool`` (deferred
 scalar fetches) in ``repro.launch.train.run_training``; trajectories are
 bit-identical across eager / prefetched / fused execution because the
 data stream (``RoundBatchGenerator``) and the round program are shared.
+
+Usage — plan blocks, then stream them through a prefetcher (any object
+with ``next_round``/``next_rounds`` works as the generator; runs under
+``python -m doctest``):
+
+>>> from repro.launch.pipeline import HostPrefetcher, plan_round_blocks
+>>> plan_round_blocks(6, eval_every=3, rounds_per_call=4)
+... # fusion never crosses an eval boundary
+[(0, 3), (3, 3)]
+>>> import numpy as np
+>>> class CountingGen:                     # stands in for RoundBatchGenerator
+...     def __init__(self): self.calls = 0
+...     def next_round(self):
+...         self.calls += 1
+...         return {"tokens": np.zeros((2, 1, 4), np.int32)}, np.arange(2)
+>>> pre = HostPrefetcher(CountingGen(), [(0, 1), (1, 1)], depth=1,
+...                      to_device=False)
+>>> [(start, size) for start, size, batches, cids in pre]
+[(0, 1), (1, 1)]
+>>> pre.gen.calls                          # every block produced exactly once
+2
+
+The consumer drives ``RoundEngine.run_block`` with each yielded block;
+``depth=0`` degrades to inline assembly (the eager baseline).
 """
 from __future__ import annotations
 

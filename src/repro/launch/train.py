@@ -13,6 +13,13 @@ and ``--rounds-per-call M`` fuses M rounds into one ``lax.scan``-ed
 dispatch. All of it is bit-exact against the eager loop
 (``--prefetch-depth 0 --rounds-per-call 1``).
 
+Participation scenarios (``repro.scenario``, docs/scenarios.md) model
+system heterogeneity: ``--availability bernoulli0.7:2 --sampling
+available`` skews who shows up, ``--straggler-frac 0.5`` cuts clients off
+after K_i < K local steps, ``--agg-weighting data_size|inv_steps`` swaps
+the uniform upload mean for a weighted reduction. The defaults are the
+degenerate scenario — bit-exact with the pre-scenario engine.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch vit-tiny-fl \
       --algorithm fedadamw --rounds 30 --clients 16 --sample 8 \
@@ -38,6 +45,7 @@ from repro.launch.pipeline import (HostPrefetcher, RoundEngine,
                                    eval_boundaries, plan_round_blocks)
 from repro.metrics import CSVLogger, Meter, MetricsSpool
 from repro.models import build_model
+from repro.scenario import ParticipationScenario
 
 
 def make_eval_fn(model, loss_fn: Optional[Callable] = None) -> Callable:
@@ -105,7 +113,12 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                  use_pallas_quantpack: bool = False,
                  client_state_policy: str = "dense",
                  prefetch_depth: int = 2, rounds_per_call: int = 1,
-                 donate: bool = True) -> Dict[str, list]:
+                 donate: bool = True,
+                 availability: str = "always_on", sampling: str = "uniform",
+                 straggler_frac: float = 0.0, straggler_min_steps: int = 1,
+                 agg_weighting: str = "uniform",
+                 scenario_seed: Optional[int] = None,
+                 availability_trace=None) -> Dict[str, list]:
     cfg = get_arch(arch)
     if reduce_model:
         cfg = reduced_variant(cfg)
@@ -122,7 +135,12 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         comm_error_feedback=comm_error_feedback,
         use_pallas_quantpack=use_pallas_quantpack,
         client_state_policy=client_state_policy,
-        rounds_per_call=rounds_per_call)
+        rounds_per_call=rounds_per_call,
+        availability=availability, sampling=sampling,
+        straggler_frac=straggler_frac,
+        straggler_min_steps=straggler_min_steps,
+        agg_weighting=agg_weighting,
+        scenario_seed=seed if scenario_seed is None else scenario_seed)
     model = build_model(cfg, compute_dtype=jnp.float32)
     task = make_task(task_kind, vocab_size=cfg.vocab_size, seq_len=seq_len,
                      num_samples=max(2048, 64 * num_clients),
@@ -135,11 +153,15 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                          cosine_total_rounds=rounds if cosine else 0,
                          donate=donate)
 
+    # participation scenario (repro.scenario, docs/scenarios.md): the
+    # degenerate default is inert — no payload keys, identical rng stream
+    scenario = ParticipationScenario.from_fed(
+        fed, task=task, trace=availability_trace)
     gen = RoundBatchGenerator(
         task, num_clients=fed.num_clients,
         clients_per_round=fed.clients_per_round,
         local_steps=fed.local_steps, batch_size=batch_size,
-        rng=np.random.default_rng(seed + 1))
+        rng=np.random.default_rng(seed + 1), scenario=scenario)
     blocks = plan_round_blocks(rounds, eval_every, fed.rounds_per_call)
     eval_rounds = set(eval_boundaries(rounds, eval_every))
     prefetcher = HostPrefetcher(gen, blocks, depth=prefetch_depth,
@@ -254,6 +276,25 @@ def main() -> None:
     ap.add_argument("--no-donate", action="store_true",
                     help="disable params/state buffer donation into the "
                          "jitted round")
+    ap.add_argument("--availability", default="always_on",
+                    help="client availability process: always_on | "
+                         "bernoulli<rate>[:<conc>] | trace:<path.npy>")
+    ap.add_argument("--sampling", default="uniform",
+                    choices=["uniform", "weighted", "available"],
+                    help="client sampling strategy (weighted = data-size "
+                         "weighted, available = availability-constrained)")
+    ap.add_argument("--straggler-frac", type=float, default=0.0,
+                    help="fraction of clients that straggle (run "
+                         "K_i <= K local steps per round)")
+    ap.add_argument("--straggler-min-steps", type=int, default=1,
+                    help="floor of a straggler's per-round K_i")
+    ap.add_argument("--agg-weighting", default="uniform",
+                    choices=["uniform", "data_size", "inv_steps"],
+                    help="aggregation weights for the cross-client "
+                         "upload reduction")
+    ap.add_argument("--scenario-seed", type=int, default=None,
+                    help="availability/straggler process seed "
+                         "(defaults to --seed)")
     args = ap.parse_args()
     t0 = time.time()
     hist = run_training(
@@ -269,7 +310,12 @@ def main() -> None:
         client_state_policy=args.client_state_policy,
         prefetch_depth=args.prefetch_depth,
         rounds_per_call=args.rounds_per_call,
-        donate=not args.no_donate)
+        donate=not args.no_donate,
+        availability=args.availability, sampling=args.sampling,
+        straggler_frac=args.straggler_frac,
+        straggler_min_steps=args.straggler_min_steps,
+        agg_weighting=args.agg_weighting,
+        scenario_seed=args.scenario_seed)
     print(json.dumps({
         "final_train_loss": hist["train_loss"][-1],
         "final_test_acc": hist["test_acc"][-1],

@@ -6,6 +6,22 @@ a host<->device round-trip that drains the dispatch queue and leaves the
 device idle while the host assembles the next batch. ``MetricsSpool``
 instead holds the (0-d or per-round-stacked) device arrays and fetches
 them in ONE blocking transfer at eval boundaries.
+
+Usage — append per-round (scalar) or per-block (stacked) metrics, flush
+once at a boundary (runs under ``python -m doctest``):
+
+>>> import jax.numpy as jnp
+>>> from repro.metrics.deferred import MetricsSpool
+>>> spool = MetricsSpool()
+>>> spool.append(0, {"loss": jnp.asarray(1.5)})          # round 0
+>>> spool.append(1, {"loss": jnp.asarray([2.5, 3.5])},   # rounds 1-2,
+...              num_rounds=2)                           # one fused block
+>>> len(spool)
+3
+>>> spool.flush()                    # ONE device_get, per-round records
+[(0, {'loss': 1.5}), (1, {'loss': 2.5}), (2, {'loss': 3.5})]
+>>> spool.flush()                    # drained
+[]
 """
 from __future__ import annotations
 

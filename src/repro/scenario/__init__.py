@@ -1,0 +1,49 @@
+"""Participation scenarios: *system* heterogeneity on top of the data
+heterogeneity (docs/scenarios.md).
+
+The synthetic tasks model WHAT each client's data looks like (Dirichlet
+non-iid shards); this package models WHO shows up and HOW MUCH work they
+finish:
+
+``availability``   per-round client availability processes
+                   (always-on | per-client Bernoulli with skewed rates |
+                   trace-driven schedules)
+``straggler``      per-(round, client) effective local steps K_i <= K,
+                   realized as a static-shape (S, K) step-validity mask
+``weights``        aggregation weight schemes applied to the cross-client
+                   upload reduction (uniform | data_size | inv_steps)
+``engine``         ``ParticipationScenario`` — ties the three together,
+                   built from ``FedConfig`` (``ParticipationScenario.from_fed``)
+
+Everything here runs HOST-side and feeds the jitted round engine through
+two reserved keys of the round batch pytree (``STEP_MASK_KEY``,
+``AGG_WEIGHTS_KEY``) so jit, donation, multi-round fusion, and both
+placement layouts keep working unchanged. The degenerate scenario
+(all clients available, uniform weights, K_i = K) emits NO reserved keys
+and is bit-exact with the scenario-free engine.
+"""
+
+# Reserved keys of the round batch pytree. The batch generator adds them
+# when a scenario is non-degenerate; core.rounds pops them before the
+# local-step scan ever sees the batch dict. Leading underscore keeps them
+# out of any model input namespace.
+STEP_MASK_KEY = "_step_mask"      # (S, K) bool: step k of client s ran
+AGG_WEIGHTS_KEY = "_agg_weights"  # (S,) f32, sums to 1: upload weights
+
+from repro.scenario.availability import (  # noqa: E402
+    AlwaysOn,
+    Bernoulli,
+    Trace,
+    parse_availability,
+)
+from repro.scenario.straggler import StragglerModel, step_validity_mask  # noqa: E402
+from repro.scenario.weights import WEIGHT_SCHEMES, aggregation_weights  # noqa: E402
+from repro.scenario.engine import ParticipationScenario  # noqa: E402
+
+__all__ = [
+    "STEP_MASK_KEY", "AGG_WEIGHTS_KEY",
+    "AlwaysOn", "Bernoulli", "Trace", "parse_availability",
+    "StragglerModel", "step_validity_mask",
+    "WEIGHT_SCHEMES", "aggregation_weights",
+    "ParticipationScenario",
+]

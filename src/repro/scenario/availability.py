@@ -1,0 +1,155 @@
+"""Client availability processes.
+
+An availability process answers one question per round: which of the N
+clients could participate this round? It returns a ``(num_clients,)``
+bool mask that the sampling strategy (``repro.data.sampler``) consumes.
+
+Determinism contract: ``mask(round_index)`` is a pure function of
+``(spec, seed, round_index)`` — every process derives its randomness from
+a per-round ``np.random.Generator`` seeded by ``(seed, round_index)``,
+NEVER from a shared stream. Eager, host-prefetched, and multi-round-fused
+execution therefore see identical availability no matter when (or on
+which thread) each round's batch is assembled, and the batch rng stream
+stays untouched, keeping the degenerate scenario bit-exact with the
+scenario-free engine.
+
+Spec strings (``FedConfig.availability`` / ``--availability``):
+
+``always_on``
+    Every client available every round (the idealized seed regime).
+``bernoulli<rate>[:<conc>]``
+    Independent per-client, per-round coin flips. Plain
+    ``bernoulli0.8`` gives every client the same 0.8 rate;
+    ``bernoulli0.8:2`` draws per-client rates once from
+    ``Beta(rate*conc, (1-rate)*conc)`` — small ``conc`` = heavily skewed
+    rates (some clients nearly always on, some nearly always off), large
+    ``conc`` = rates concentrated near the mean.
+``trace:<path.npy>``
+    Replay a recorded ``(rounds, num_clients)`` 0/1 schedule (cycled when
+    training runs longer than the trace).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import numpy as np
+
+# salts folded into per-purpose seed sequences so the rate draw, the
+# per-round coin flips, and the straggler draws never alias
+_RATE_SALT = 0xA11
+_FLIP_SALT = 0xB0B
+
+
+@dataclasses.dataclass(frozen=True)
+class AlwaysOn:
+    """Every client available every round."""
+
+    num_clients: int
+    name: str = "always_on"
+
+    def mask(self, round_index: int) -> np.ndarray:
+        return np.ones(self.num_clients, dtype=bool)
+
+
+class Bernoulli:
+    """Independent per-client availability coin flips.
+
+    ``rate`` is the mean availability; ``concentration`` (optional)
+    spreads per-client rates with a Beta distribution so availability is
+    *skewed* across the population rather than uniform — the regime where
+    availability-aware sampling and weighting matter.
+    """
+
+    def __init__(self, num_clients: int, rate: float,
+                 concentration: Optional[float] = None, seed: int = 0):
+        if not 0.0 < rate <= 1.0:
+            raise ValueError(
+                f"bernoulli availability rate must be in (0, 1], got {rate}")
+        if concentration is not None and concentration <= 0:
+            raise ValueError(
+                f"bernoulli concentration must be > 0, got {concentration}")
+        self.num_clients = num_clients
+        self.rate = float(rate)
+        self.concentration = concentration
+        self.seed = int(seed)
+        self.name = (f"bernoulli{rate:g}" if concentration is None
+                     else f"bernoulli{rate:g}:{concentration:g}")
+        if concentration is None:
+            self.rates = np.full(num_clients, self.rate)
+        else:
+            rng = np.random.default_rng([self.seed, _RATE_SALT])
+            a = max(rate * concentration, 1e-6)
+            b = max((1.0 - rate) * concentration, 1e-6)
+            self.rates = rng.beta(a, b, size=num_clients)
+
+    def mask(self, round_index: int) -> np.ndarray:
+        rng = np.random.default_rng([self.seed, _FLIP_SALT, int(round_index)])
+        return rng.random(self.num_clients) < self.rates
+
+
+class Trace:
+    """Replay a recorded ``(rounds, num_clients)`` availability schedule,
+    cycled when training outlives the trace."""
+
+    def __init__(self, trace: np.ndarray, num_clients: Optional[int] = None):
+        trace = np.asarray(trace)
+        if trace.ndim != 2:
+            raise ValueError(
+                f"availability trace must be (rounds, num_clients), "
+                f"got shape {trace.shape}")
+        if num_clients is not None and trace.shape[1] != num_clients:
+            raise ValueError(
+                f"availability trace covers {trace.shape[1]} clients but "
+                f"the run has num_clients={num_clients}")
+        if len(trace) == 0:
+            raise ValueError("availability trace has zero rounds")
+        self.trace = trace.astype(bool)
+        self.num_clients = trace.shape[1]
+        self.name = "trace"
+
+    def mask(self, round_index: int) -> np.ndarray:
+        return self.trace[int(round_index) % len(self.trace)]
+
+
+AvailabilityProcess = Union[AlwaysOn, Bernoulli, Trace]
+
+
+def parse_availability(spec: str, num_clients: int, *, seed: int = 0,
+                       trace: Optional[np.ndarray] = None
+                       ) -> AvailabilityProcess:
+    """Spec string -> availability process (see module docstring).
+
+    ``trace`` lets programmatic callers pass the schedule array directly
+    under the plain ``"trace"`` spec; ``"trace:<path.npy>"`` loads it.
+    """
+    if spec == "always_on":
+        return AlwaysOn(num_clients)
+    if spec.startswith("bernoulli"):
+        arg = spec[len("bernoulli"):]
+        if not arg:
+            raise ValueError(
+                "bernoulli availability needs a rate, e.g. 'bernoulli0.8' "
+                "or 'bernoulli0.8:2' (rate:concentration)")
+        rate_s, _, conc_s = arg.partition(":")
+        try:
+            rate = float(rate_s)
+            conc = float(conc_s) if conc_s else None
+        except ValueError:
+            raise ValueError(
+                f"bad bernoulli availability spec {spec!r}; expected "
+                "'bernoulli<rate>[:<concentration>]'") from None
+        return Bernoulli(num_clients, rate, conc, seed=seed)
+    if spec == "trace" or spec.startswith("trace:"):
+        if trace is None:
+            _, _, path = spec.partition(":")
+            if not path:
+                raise ValueError(
+                    "trace availability needs a schedule: pass "
+                    "'trace:<path.npy>' or supply the array via "
+                    "ParticipationScenario.from_fed(..., trace=...)")
+            trace = np.load(path)
+        return Trace(trace, num_clients)
+    raise ValueError(
+        f"unknown availability spec {spec!r}; known: 'always_on', "
+        "'bernoulli<rate>[:<conc>]', 'trace[:<path.npy>]'")

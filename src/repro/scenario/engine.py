@@ -1,0 +1,145 @@
+"""``ParticipationScenario``: one object per run tying together
+availability, sampling, stragglers, and aggregation weighting.
+
+The scenario runs entirely host-side, inside the batch producer
+(``repro.data.sampler.RoundBatchGenerator``), in three steps per round:
+
+1. ``availability.mask(r)`` — which of the N clients could show up;
+2. the sampling strategy (``repro.data.sampler`` registry) picks the S
+   participants, consuming the generator's shared rng stream exactly like
+   the seed engine's uniform sampler does;
+3. ``round_payload(r, cids)`` — the straggler step-validity mask and the
+   aggregation weights, attached to the round batch pytree under the
+   reserved keys (``repro.scenario.STEP_MASK_KEY`` /
+   ``AGG_WEIGHTS_KEY``) that ``repro.core.rounds`` pops at trace time.
+
+A degenerate scenario (``always_on`` + ``uniform`` sampling + no
+stragglers + ``uniform`` weighting) emits an EMPTY payload and makes
+byte-identical rng calls, so the jitted round program and the data stream
+are exactly the scenario-free engine's — bit-exactness by construction
+(asserted in tests/test_scenario.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.scenario import availability as _availability
+from repro.scenario.straggler import StragglerModel
+from repro.scenario.weights import WEIGHT_SCHEMES, aggregation_weights
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationScenario:
+    num_clients: int
+    clients_per_round: int
+    local_steps: int
+    availability: _availability.AvailabilityProcess
+    sampling: str = "uniform"
+    straggler: Optional[StragglerModel] = None
+    weighting: str = "uniform"
+    # per-client sample counts (len num_clients); required by the
+    # data-size weighted sampler / weighting scheme
+    data_sizes: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.weighting not in WEIGHT_SCHEMES:
+            raise ValueError(f"unknown agg_weighting {self.weighting!r}; "
+                             f"known: {WEIGHT_SCHEMES}")
+        # fail at construction, not mid-training
+        from repro.data.sampler import get_sampler
+        get_sampler(self.sampling)
+
+    # -- per-round host-side products ----------------------------------
+
+    @property
+    def is_degenerate(self) -> bool:
+        """True when the scenario reproduces the idealized seed regime
+        exactly (and the engine takes the scenario-free code path)."""
+        return (isinstance(self.availability, _availability.AlwaysOn)
+                and self.sampling == "uniform"
+                and self.straggler is None
+                and self.weighting == "uniform")
+
+    @property
+    def needs_payload(self) -> bool:
+        """True when rounds carry a step mask / weight vector on device."""
+        return self.straggler is not None or self.weighting != "uniform"
+
+    def availability_mask(self, round_index: int) -> np.ndarray:
+        return self.availability.mask(round_index)
+
+    def sample_round(self, round_index: int,
+                     rng: np.random.Generator) -> np.ndarray:
+        """Pick this round's S participants (consumes ``rng``)."""
+        from repro.data.sampler import get_sampler
+        return get_sampler(self.sampling)(
+            self.num_clients, self.clients_per_round, rng,
+            data_sizes=self.data_sizes,
+            available=self.availability_mask(round_index))
+
+    def local_steps_for(self, round_index: int,
+                        client_ids: np.ndarray) -> np.ndarray:
+        """Effective K_i of the sampled clients, ``(S,)`` int32."""
+        if self.straggler is None:
+            return np.full(len(client_ids), self.local_steps, np.int32)
+        return self.straggler.local_steps_for(round_index, client_ids)
+
+    def round_payload(self, round_index: int,
+                      client_ids: np.ndarray) -> Dict[str, np.ndarray]:
+        """Reserved-key entries to merge into the round batch pytree
+        (empty for scenarios that don't need one)."""
+        from repro.scenario import AGG_WEIGHTS_KEY, STEP_MASK_KEY
+        if not self.needs_payload:
+            return {}
+        k_i = self.local_steps_for(round_index, client_ids)
+        payload = {}
+        if self.weighting != "uniform":
+            # uniform weights are NOT emitted (even under stragglers):
+            # the engine's plain mean IS the uniform reduction, and
+            # keeping the key out preserves the mean->all-reduce lowering
+            # of the client_parallel layout
+            payload[AGG_WEIGHTS_KEY] = aggregation_weights(
+                self.weighting, client_ids, data_sizes=self.data_sizes,
+                local_steps_per_client=k_i)
+        if self.straggler is not None:
+            from repro.scenario.straggler import step_validity_mask
+            payload[STEP_MASK_KEY] = step_validity_mask(
+                k_i, self.local_steps)
+        return payload
+
+    # -- construction ---------------------------------------------------
+
+    @classmethod
+    def from_fed(cls, fed, *, data_sizes=None, task=None,
+                 seed: Optional[int] = None,
+                 trace: Optional[np.ndarray] = None
+                 ) -> "ParticipationScenario":
+        """Build the scenario a ``FedConfig`` describes.
+
+        ``task`` (a ``SyntheticTask``) supplies per-client data sizes when
+        ``data_sizes`` is not given; ``seed`` defaults to
+        ``fed.scenario_seed``; ``trace`` feeds the ``"trace"``
+        availability spec directly (otherwise ``trace:<path.npy>`` loads
+        from disk).
+        """
+        seed = fed.scenario_seed if seed is None else seed
+        if data_sizes is None and task is not None:
+            data_sizes = np.asarray(
+                [len(ix) for ix in task.client_indices], np.int64)
+        avail = _availability.parse_availability(
+            fed.availability, fed.num_clients, seed=seed, trace=trace)
+        straggler = None
+        if fed.straggler_frac > 0.0:
+            straggler = StragglerModel(
+                fed.num_clients, fed.local_steps, fed.straggler_frac,
+                min_steps=fed.straggler_min_steps, seed=seed)
+        return cls(
+            num_clients=fed.num_clients,
+            clients_per_round=fed.clients_per_round,
+            local_steps=fed.local_steps,
+            availability=avail, sampling=fed.sampling,
+            straggler=straggler, weighting=fed.agg_weighting,
+            data_sizes=data_sizes)

@@ -1,0 +1,78 @@
+"""Straggler simulation: per-(round, client) effective local steps.
+
+A straggler is a client that gets cut off before finishing its K local
+steps (slow hardware, dropped connection, deadline-based server). The
+model here:
+
+* A fixed cohort of ``round(frac * num_clients)`` straggler clients is
+  drawn once per scenario (seeded, independent of every other stream).
+* Each round, every straggler draws ``K_i ~ Uniform{min_steps, ..., K}``
+  from a per-round generator seeded by ``(seed, round_index)``; draws are
+  made for ALL clients so a client's K_i for a round does not depend on
+  which cohort was sampled. Non-stragglers always run all K steps.
+
+The jitted round program keeps its static ``(S, K)`` batch shape: a
+straggler's truncation is a ``(S, K)`` bool *step-validity mask*
+(:func:`step_validity_mask`) — step k of client s computes its gradient
+like every other step, but a masked step's parameter/optimizer-state
+update is discarded (``jnp.where`` carry-through in
+``repro.core.rounds.make_local_phase``) and its loss carries zero weight
+in the round metrics. The upload therefore reflects exactly the first
+K_i steps, at the cost of the masked steps' (wasted) gradient FLOPs —
+the price of a shape-static simulation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_COHORT_SALT = 0x57A6
+_STEPS_SALT = 0x57E9
+
+
+def step_validity_mask(local_steps_per_client: np.ndarray,
+                       local_steps: int) -> np.ndarray:
+    """``(S,)`` per-client step counts -> ``(S, K)`` bool mask with the
+    first ``K_i`` steps of row i valid."""
+    k_i = np.asarray(local_steps_per_client)
+    return np.arange(local_steps)[None, :] < k_i[:, None]
+
+
+class StragglerModel:
+    """Fixed straggler cohort + per-round effective step counts."""
+
+    def __init__(self, num_clients: int, local_steps: int, frac: float,
+                 min_steps: int = 1, seed: int = 0):
+        if not 0.0 <= frac <= 1.0:
+            raise ValueError(f"straggler_frac must be in [0, 1], got {frac}")
+        if not 1 <= min_steps <= local_steps:
+            raise ValueError(
+                f"straggler_min_steps must be in [1, local_steps="
+                f"{local_steps}], got {min_steps}")
+        self.num_clients = num_clients
+        self.local_steps = local_steps
+        self.frac = float(frac)
+        self.min_steps = int(min_steps)
+        self.seed = int(seed)
+        n_strag = int(round(frac * num_clients))
+        rng = np.random.default_rng([self.seed, _COHORT_SALT])
+        cohort = rng.choice(num_clients, size=n_strag, replace=False)
+        self.is_straggler = np.zeros(num_clients, dtype=bool)
+        self.is_straggler[cohort] = True
+
+    def local_steps_for(self, round_index: int,
+                        client_ids: np.ndarray) -> np.ndarray:
+        """Effective K_i for the sampled clients this round, ``(S,)`` int."""
+        cids = np.asarray(client_ids)
+        rng = np.random.default_rng([self.seed, _STEPS_SALT,
+                                     int(round_index)])
+        draws = rng.integers(self.min_steps, self.local_steps + 1,
+                             size=self.num_clients)
+        return np.where(self.is_straggler[cids], draws[cids],
+                        self.local_steps).astype(np.int32)
+
+    def step_mask(self, round_index: int,
+                  client_ids: np.ndarray) -> np.ndarray:
+        """``(S, K)`` bool step-validity mask for the sampled clients."""
+        return step_validity_mask(self.local_steps_for(round_index,
+                                                       client_ids),
+                                  self.local_steps)

@@ -1,0 +1,67 @@
+"""Aggregation weight schemes for the cross-client upload reduction.
+
+The round engine reduces the S sampled clients' uploads (delta, block-mean
+v, SCAFFOLD dc, ...) with weights w (sum 1); the seed engine's uniform
+mean is the special case w_i = 1/S. Schemes
+(``FedConfig.agg_weighting`` / ``--agg-weighting``):
+
+``uniform``
+    w_i = 1/S — paper Algorithms 1-3 as written (every aggregation is an
+    unweighted mean over the participating cohort).
+``data_size``
+    w_i ∝ n_i (the client's sample count) — FedAvg's original weighting;
+    the right estimator when client deltas should count in proportion to
+    the data that produced them (unequal Dirichlet shards).
+``inv_steps``
+    w_i ∝ 1/K_i (the client's *effective* local steps this round) —
+    FedNova-flavored straggler normalization: a client cut off after
+    K_i < K steps produced a delta roughly K_i/K as long, so inverse-step
+    weighting re-balances per-step contributions instead of letting slow
+    clients be double-penalized (fewer steps AND full averaging weight
+    over a shorter walk).
+
+Weights are computed host-side in float64, normalized to sum to 1, then
+cast to the f32 the device reduction consumes; they ride the round batch
+pytree under ``repro.scenario.AGG_WEIGHTS_KEY``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+WEIGHT_SCHEMES = ("uniform", "data_size", "inv_steps")
+
+
+def aggregation_weights(scheme: str, client_ids: np.ndarray, *,
+                        data_sizes: Optional[np.ndarray] = None,
+                        local_steps_per_client: Optional[np.ndarray] = None
+                        ) -> np.ndarray:
+    """``(S,)`` f32 weights for this round's sampled cohort; sums to 1."""
+    cids = np.asarray(client_ids)
+    s = len(cids)
+    if scheme == "uniform":
+        w = np.ones(s, dtype=np.float64)
+    elif scheme == "data_size":
+        if data_sizes is None:
+            raise ValueError(
+                "agg_weighting='data_size' needs per-client data sizes "
+                "(pass data_sizes= / build the scenario from a task)")
+        w = np.asarray(data_sizes, dtype=np.float64)[cids]
+        if (w <= 0).any():
+            raise ValueError("data_size weighting: every sampled client "
+                             "must own at least one sample")
+    elif scheme == "inv_steps":
+        if local_steps_per_client is None:
+            raise ValueError(
+                "agg_weighting='inv_steps' needs the round's effective "
+                "local steps K_i (enable the straggler model or pass "
+                "local_steps_per_client=)")
+        k_i = np.asarray(local_steps_per_client, dtype=np.float64)
+        if (k_i < 1).any():
+            raise ValueError("inv_steps weighting: K_i must be >= 1")
+        w = 1.0 / k_i
+    else:
+        raise ValueError(
+            f"unknown agg_weighting {scheme!r}; known: {WEIGHT_SCHEMES}")
+    return (w / w.sum()).astype(np.float32)

@@ -37,6 +37,25 @@ server state, traverses jit/scan/vmap, and checkpoints like everything
 else. :func:`table_pspecs` shards the leading client axis over the
 (``pod``, ``data``) mesh axes so the table is distributed instead of
 replicated (``sharding.specs.state_pspecs`` applies the same rule).
+
+Usage — a 4-client dense table over one weight leaf (runs under
+``python -m doctest``):
+
+>>> import jax.numpy as jnp
+>>> from repro.state.store import ClientStateStore, specs_like
+>>> template = {"w": jnp.zeros((3, 2))}
+>>> store = ClientStateStore(num_clients=4, policy="dense",
+...                          specs=specs_like(template))
+>>> table = store.init()             # lives inside server state
+>>> table["w"].shape                 # one row per client
+(4, 3, 2)
+>>> rows = store.gather(table, jnp.asarray([1, 3]))   # (S,) cids
+>>> rows["w"].shape                  # decoded dense rows, leading S axis
+(2, 3, 2)
+>>> table = store.scatter(table, jnp.asarray(1),      # scalar cid:
+...                       {"w": jnp.ones((3, 2))})    # sequential layout
+>>> [float(table["w"][c].sum()) for c in range(4)]
+[0.0, 6.0, 0.0, 0.0]
 """
 from __future__ import annotations
 

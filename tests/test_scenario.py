@@ -1,0 +1,419 @@
+"""Participation engine: availability processes, sampler registry,
+straggler masks, aggregation weights — and the degenerate-config
+bit-exactness guarantee vs the scenario-free engine.
+
+Set ``REPRO_LAYOUT=client_parallel|client_sequential`` to pin the layout
+matrix to one entry (the CI layout matrix does)."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import build_tiny
+from repro.config import FedConfig
+from repro.core import build_fed_state, make_local_phase
+from repro.core.fedadamw import get_algorithm
+from repro.data import RoundBatchGenerator, get_sampler, make_task
+from repro.launch.pipeline import HostPrefetcher, RoundEngine, plan_round_blocks
+from repro.metrics import MetricsSpool
+from repro.scenario import (AGG_WEIGHTS_KEY, STEP_MASK_KEY, AlwaysOn,
+                            Bernoulli, ParticipationScenario, Trace,
+                            aggregation_weights, parse_availability,
+                            step_validity_mask)
+from repro.scenario.straggler import StragglerModel
+
+_ENV_LAYOUT = os.environ.get("REPRO_LAYOUT")
+LAYOUTS = ([_ENV_LAYOUT] if _ENV_LAYOUT
+           else ["client_parallel", "client_sequential"])
+
+ROUNDS, EVERY = 6, 3
+
+
+def _task(cfg, num_clients=4, seed=0):
+    return make_task("class_lm", vocab_size=cfg.vocab_size, seq_len=16,
+                     num_samples=256, num_clients=num_clients,
+                     dirichlet_alpha=0.6, seed=seed)
+
+
+def _gen(task, fed, seed=7, batch_size=2, scenario=None):
+    return RoundBatchGenerator(
+        task, num_clients=fed.num_clients,
+        clients_per_round=fed.clients_per_round,
+        local_steps=fed.local_steps, batch_size=batch_size, rng=seed,
+        scenario=scenario)
+
+
+# ---------------------------------------------------------- availability
+
+def test_always_on_and_bernoulli_masks():
+    assert parse_availability("always_on", 5).mask(3).all()
+    b = Bernoulli(200, 0.7, seed=1)
+    m0, m0b, m1 = b.mask(0), b.mask(0), b.mask(1)
+    np.testing.assert_array_equal(m0, m0b)      # pure in round_index
+    assert (m0 != m1).any()                     # fresh flips per round
+    assert 0.5 < m0.mean() < 0.9                # ~rate
+
+
+def test_bernoulli_skewed_rates_spread_across_clients():
+    b = Bernoulli(64, 0.6, concentration=1.0, seed=0)
+    assert b.rates.std() > 0.15                 # heavily spread
+    assert b.rates.min() >= 0 and b.rates.max() <= 1
+    # same seed -> same per-client rates (frozen at construction)
+    np.testing.assert_array_equal(
+        b.rates, Bernoulli(64, 0.6, concentration=1.0, seed=0).rates)
+
+
+def test_trace_replays_and_cycles():
+    sched = np.array([[1, 0, 1], [0, 1, 0]], dtype=bool)
+    t = Trace(sched)
+    np.testing.assert_array_equal(t.mask(0), sched[0])
+    np.testing.assert_array_equal(t.mask(1), sched[1])
+    np.testing.assert_array_equal(t.mask(2), sched[0])  # cycled
+    with pytest.raises(ValueError, match="clients"):
+        Trace(sched, num_clients=5)
+
+
+def test_parse_availability_rejects_bad_specs():
+    for bad in ("bernoulli", "bernoulli-0.5", "bernoullix", "nope"):
+        with pytest.raises(ValueError):
+            parse_availability(bad, 4)
+    with pytest.raises(ValueError, match="schedule"):
+        parse_availability("trace", 4)
+
+
+# ------------------------------------------------------------- samplers
+
+def test_available_sampler_prefers_available_and_tops_up():
+    rng = np.random.default_rng(0)
+    avail = np.zeros(8, bool)
+    avail[[2, 5]] = True
+    # enough available: stays inside the available set
+    cids = get_sampler("available")(8, 2, rng, available=avail)
+    assert set(cids.tolist()) == {2, 5}
+    # not enough: all available + uniform top-up from the rest
+    cids = get_sampler("available")(8, 4, rng, available=avail)
+    assert {2, 5} <= set(cids.tolist())
+    assert len(set(cids.tolist())) == 4
+
+
+def test_weighted_sampler_follows_data_sizes():
+    sizes = np.array([1, 1, 1, 1000])
+    counts = np.zeros(4)
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        cids = get_sampler("weighted")(4, 2, rng, data_sizes=sizes)
+        counts[cids] += 1
+        assert len(set(cids.tolist())) == 2
+    assert counts[3] == 200                     # always picked
+    with pytest.raises(ValueError, match="data size"):
+        get_sampler("weighted")(4, 2, rng)
+
+
+def test_unknown_sampler_is_actionable():
+    with pytest.raises(ValueError, match="known:"):
+        get_sampler("stratified")
+
+
+# ------------------------------------------------- stragglers + weights
+
+def test_straggler_model_deterministic_and_bounded():
+    m = StragglerModel(16, 10, 0.5, min_steps=3, seed=2)
+    assert m.is_straggler.sum() == 8
+    cids = np.array([0, 3, 7, 12])
+    k1, k2 = m.local_steps_for(4, cids), m.local_steps_for(4, cids)
+    np.testing.assert_array_equal(k1, k2)       # pure in (round, cids)
+    assert ((k1 >= 3) & (k1 <= 10)).all()
+    # non-stragglers always run the full K
+    ns = np.flatnonzero(~m.is_straggler)[:2]
+    assert (m.local_steps_for(0, ns) == 10).all()
+    # subset-invariance: K_i doesn't depend on who else was sampled
+    np.testing.assert_array_equal(
+        m.local_steps_for(4, cids[:2]), k1[:2])
+
+
+def test_step_validity_mask_shape():
+    mask = step_validity_mask(np.array([1, 3, 2]), 3)
+    np.testing.assert_array_equal(
+        mask, [[1, 0, 0], [1, 1, 1], [1, 1, 0]])
+
+
+@pytest.mark.parametrize("scheme", ["uniform", "data_size", "inv_steps"])
+def test_aggregation_weights_sum_to_one_under_stragglers(scheme):
+    cids = np.array([0, 2, 5, 7])
+    w = aggregation_weights(
+        scheme, cids, data_sizes=np.array([10, 1, 5, 1, 1, 40, 1, 3]),
+        local_steps_per_client=np.array([1, 10, 4, 10]))
+    assert w.shape == (4,) and w.dtype == np.float32
+    assert np.isclose(w.sum(), 1.0, atol=1e-6)
+    if scheme == "inv_steps":                   # straggler upweighted
+        assert w[0] == w.max() and w[1] == w.min()
+    if scheme == "data_size":
+        assert w[2] == w.max()                  # client 5 owns most data
+
+
+def test_generator_payload_weights_sum_to_one_under_stragglers():
+    cfg, _, _ = build_tiny("dense")
+    task = _task(cfg, num_clients=8)
+    fed = FedConfig(num_clients=8, clients_per_round=4, local_steps=3,
+                    straggler_frac=0.75, agg_weighting="inv_steps")
+    gen = _gen(task, fed, scenario=ParticipationScenario.from_fed(
+        fed, task=task))
+    for _ in range(5):
+        b, cids = gen.next_round()
+        w, mask = b[AGG_WEIGHTS_KEY], b[STEP_MASK_KEY]
+        assert np.isclose(w.sum(), 1.0, atol=1e-6)
+        k_i = mask.sum(axis=1)
+        assert (k_i >= 1).all()
+        # inv_steps: weights are proportional to 1/K_i
+        np.testing.assert_allclose(w * k_i / (w * k_i)[0],
+                                   np.ones(4), rtol=1e-5)
+
+
+# ------------------------------------------ determinism across execution
+
+def test_availability_payload_deterministic_eager_vs_prefetched():
+    """The scenario's availability/straggler draws come from per-round
+    seeded generators, so eager (depth 0) and background-prefetched
+    (depth 2) assembly produce bit-identical cids, masks and weights."""
+    cfg, _, _ = build_tiny("dense")
+    task = _task(cfg, num_clients=8)
+    fed = FedConfig(num_clients=8, clients_per_round=3, local_steps=2,
+                    availability="bernoulli0.6:2", sampling="available",
+                    straggler_frac=0.5, agg_weighting="inv_steps")
+    blocks = plan_round_blocks(ROUNDS, EVERY, 1)
+    out = {}
+    for depth in (0, 2):
+        sc = ParticipationScenario.from_fed(fed, task=task)
+        items = list(HostPrefetcher(_gen(task, fed, scenario=sc), blocks,
+                                    depth=depth, to_device=False))
+        out[depth] = items
+    for (s0, z0, b0, c0), (s1, z1, b1, c1) in zip(out[0], out[2]):
+        assert jnp.array_equal(c0, c1)
+        for k in b0:
+            assert jnp.array_equal(b0[k], b1[k]), k
+
+
+# -------------------------------------------- local-phase mask semantics
+
+def test_masked_local_phase_equals_truncated_run():
+    """A client masked to K_i steps must upload exactly what it would
+    upload if its batch stack physically had K_i steps, and its metrics
+    must ignore the masked tail."""
+    cfg, model, params = build_tiny("dense")
+    fed = FedConfig(num_clients=4, clients_per_round=2, local_steps=3,
+                    lr=1e-3)
+    _, specs, alg, sstate = build_fed_state(model, fed, jax.random.key(0),
+                                            cfg=cfg)
+    task = _task(cfg)
+    gen = _gen(task, fed)
+    batches, cids = gen.next_round()
+    one = jax.tree.map(lambda x: jnp.asarray(x[0]), batches)  # (K, b, seq)
+    local_phase = make_local_phase(model.loss, alg, fed, specs)
+
+    k_i = 2
+    mask = jnp.asarray(np.arange(3) < k_i)
+    up_masked, m_masked = local_phase(params, sstate, one,
+                                      jnp.ones(()), None, mask)
+
+    fed_cut = dataclasses.replace(fed, local_steps=k_i)
+    phase_cut = make_local_phase(model.loss, get_algorithm(fed_cut),
+                                 fed_cut, specs)
+    cut = jax.tree.map(lambda x: x[:k_i], one)
+    up_cut, m_cut = phase_cut(params, sstate, cut, jnp.ones(()))
+
+    # the two jitted programs differ in scan length, so XLA may fuse the
+    # arithmetic differently — equality holds to last-ulp tolerance, not
+    # bitwise (bitwise parity is only guaranteed for IDENTICAL programs,
+    # which is what test_degenerate_scenario_bit_exact pins)
+    for a, b in zip(jax.tree.leaves(up_masked["delta"]),
+                    jax.tree.leaves(up_cut["delta"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-9)
+    assert float(m_masked["loss_mean"]) == pytest.approx(
+        float(m_cut["loss_mean"]), rel=1e-6)
+    assert float(m_masked["loss_last"]) == pytest.approx(
+        float(m_cut["loss_last"]), rel=1e-6)
+    # K_i = 1: first == last == mean (only step 0 counts)
+    up1, m1 = local_phase(params, sstate, one, jnp.ones(()), None,
+                          jnp.asarray([True, False, False]))
+    assert float(m1["loss_first"]) == float(m1["loss_last"]) \
+        == float(m1["loss_mean"])
+
+
+# ------------------------------------------------ engine-level behavior
+
+def _drive(engine, params, sstate, gen, blocks, depth):
+    pre = HostPrefetcher(gen, blocks, depth=depth, stacked=engine.stacked)
+    spool = MetricsSpool()
+    for start, size, batches, cids in pre:
+        params, sstate, m = engine.run_block(params, sstate, batches, cids,
+                                             start, size)
+        spool.append(start, m, size)
+    return [m["loss_mean"] for _, m in spool.flush()], params, sstate
+
+
+@pytest.mark.parametrize("algorithm", ["fedadamw", "scaffold"])
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_degenerate_scenario_bit_exact(algorithm, layout):
+    """The degenerate config (all available, uniform sampling/weights,
+    K_i = K) must be BIT-exact with the scenario-free engine — in both
+    layouts, prefetched and multi-round fused."""
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg)
+    base = FedConfig(algorithm=algorithm, num_clients=4, clients_per_round=2,
+                     local_steps=2, lr=1e-3, layout=layout,
+                     sequential_clients=2)
+    degen = ParticipationScenario.from_fed(base, task=task)
+    assert degen.is_degenerate and not degen.needs_payload
+    params, specs, alg, sstate = build_fed_state(
+        model, base, jax.random.key(0), cfg=cfg)
+    engine = RoundEngine(model, base, specs, alg=alg,
+                         cosine_total_rounds=ROUNDS, donate=False)
+    fused_fed = dataclasses.replace(base, rounds_per_call=3)
+    fused_engine = RoundEngine(model, fused_fed, specs, alg=alg,
+                               cosine_total_rounds=ROUNDS, donate=False)
+    single = plan_round_blocks(ROUNDS, EVERY, 1)
+    fused = plan_round_blocks(ROUNDS, EVERY, 3)
+
+    l_ref, p_ref, s_ref = _drive(
+        engine, params, sstate, _gen(task, base), single, depth=0)
+    l_sc, p_sc, s_sc = _drive(
+        engine, params, sstate, _gen(task, base, scenario=degen), single,
+        depth=2)
+    l_fu, p_fu, s_fu = _drive(
+        fused_engine, params, sstate, _gen(task, base, scenario=degen),
+        fused, depth=2)
+
+    assert l_ref == l_sc == l_fu, (l_ref, l_sc, l_fu)
+    for a, b, c in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_sc),
+                       jax.tree.leaves(p_fu)):
+        assert jnp.array_equal(a, b) and jnp.array_equal(a, c)
+    for a, b in zip(jax.tree.leaves(s_ref), jax.tree.leaves(s_fu)):
+        assert jnp.array_equal(a, b)
+
+
+@pytest.mark.parametrize("algorithm", ["fedadamw", "scaffold"])
+def test_active_scenario_layout_parity(algorithm):
+    """Stragglers + weighted aggregation must produce matching
+    trajectories under both placement layouts (same data, same masks)."""
+    if _ENV_LAYOUT:
+        pytest.skip("layout pinned by REPRO_LAYOUT")
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg)
+    results = {}
+    for layout in ("client_parallel", "client_sequential"):
+        fed = FedConfig(algorithm=algorithm, num_clients=4,
+                        clients_per_round=2, local_steps=3, lr=1e-3,
+                        layout=layout, sequential_clients=2,
+                        straggler_frac=0.5, agg_weighting="inv_steps")
+        sc = ParticipationScenario.from_fed(fed, task=task)
+        params, specs, alg, sstate = build_fed_state(
+            model, fed, jax.random.key(0), cfg=cfg)
+        engine = RoundEngine(model, fed, specs, alg=alg, donate=False)
+        blocks = plan_round_blocks(4, 4, 1)
+        results[layout] = _drive(engine, params, sstate,
+                                 _gen(task, fed, scenario=sc), blocks, 0)
+    l_p, p_p, _ = results["client_parallel"]
+    l_s, p_s, _ = results["client_sequential"]
+    np.testing.assert_allclose(l_p, l_s, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p_p), jax.tree.leaves(p_s)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_active_scenario_bit_exact_across_execution_modes(layout):
+    """Even an ACTIVE scenario (masks + weights) must be bit-exact
+    between eager and prefetched+fused execution — the weighted mean
+    uses a fixed association order so XLA cannot round the reduction
+    differently inside the fused scan body."""
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg, num_clients=8)
+    fed = FedConfig(num_clients=8, clients_per_round=4, local_steps=3,
+                    lr=1e-3, layout=layout, sequential_clients=4,
+                    availability="bernoulli0.7:2", sampling="available",
+                    straggler_frac=0.5, agg_weighting="inv_steps")
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    engine = RoundEngine(model, fed, specs, alg=alg,
+                         cosine_total_rounds=ROUNDS, donate=False)
+    fused_engine = RoundEngine(
+        model, dataclasses.replace(fed, rounds_per_call=3), specs, alg=alg,
+        cosine_total_rounds=ROUNDS, donate=False)
+    mk = lambda: _gen(task, fed,  # noqa: E731
+                      scenario=ParticipationScenario.from_fed(fed, task=task))
+    l_e, p_e, _ = _drive(engine, params, sstate, mk(),
+                         plan_round_blocks(ROUNDS, EVERY, 1), depth=0)
+    l_f, p_f, _ = _drive(fused_engine, params, sstate, mk(),
+                         plan_round_blocks(ROUNDS, EVERY, 3), depth=2)
+    assert l_e == l_f, (l_e, l_f)
+    for a, b in zip(jax.tree.leaves(p_e), jax.tree.leaves(p_f)):
+        assert jnp.array_equal(a, b)
+
+
+def test_straggler_scenario_changes_trajectory():
+    """An active straggler mask must actually change the trajectory (the
+    masked steps are dropped, not just re-weighted)."""
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg, num_clients=8)
+    base = FedConfig(num_clients=8, clients_per_round=4, local_steps=4,
+                     lr=1e-3)
+    strag = dataclasses.replace(base, straggler_frac=1.0,
+                                straggler_min_steps=1)
+    params, specs, alg, sstate = build_fed_state(
+        model, base, jax.random.key(0), cfg=cfg)
+    engine = RoundEngine(model, base, specs, alg=alg, donate=False)
+    blocks = plan_round_blocks(3, 3, 1)
+    l_ref, _, _ = _drive(engine, params, sstate, _gen(task, base), blocks, 0)
+    sc = ParticipationScenario.from_fed(strag, task=task)
+    l_sc, _, _ = _drive(engine, params, sstate,
+                        _gen(task, strag, scenario=sc), blocks, 0)
+    assert l_ref != l_sc
+
+
+# ------------------------------------------------------- validation fix
+
+def test_sample_clients_validation_is_actionable():
+    from repro.data import sample_clients
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="clients_per_round=9 exceeds"):
+        sample_clients(4, 9, rng)
+    with pytest.raises(ValueError, match="at least one participant"):
+        sample_clients(4, 0, rng)
+    with pytest.raises(ValueError, match="num_clients"):
+        sample_clients(0, 1, rng)
+
+
+def test_generator_validates_participation_at_construction():
+    cfg, _, _ = build_tiny("dense")
+    task = _task(cfg)
+    with pytest.raises(ValueError, match="exceeds"):
+        RoundBatchGenerator(task, num_clients=4, clients_per_round=9,
+                            local_steps=1, batch_size=1)
+
+
+def test_fedconfig_validates_participation_and_scenario_fields():
+    good = FedConfig(num_clients=4, clients_per_round=2)
+    good.validate()
+    cases = [
+        (dict(clients_per_round=9), "exceeds"),
+        (dict(clients_per_round=0), "at least one participant"),
+        (dict(local_steps=0), "local_steps"),
+        (dict(rounds=0), "rounds"),
+        (dict(availability="bernoulli"), "rate"),
+        (dict(availability="sometimes"), "unknown availability"),
+        (dict(sampling="stratified"), "known:"),
+        (dict(straggler_frac=1.5), "straggler_frac"),
+        (dict(straggler_min_steps=0), "straggler_min_steps"),
+        (dict(straggler_min_steps=99), "straggler_min_steps"),
+        (dict(agg_weighting="loudest"), "agg_weighting"),
+    ]
+    for overrides, match in cases:
+        kw = dict(num_clients=4, clients_per_round=2)
+        kw.update(overrides)
+        fed = FedConfig(**kw)
+        with pytest.raises(ValueError, match=match):
+            fed.validate()

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Markdown link checker: every relative link/anchor target must exist.
+
+Usage: python tools/check_links.py README.md CHANGES.md docs/*.md
+
+Checks inline ``[text](target)`` links in the given markdown files:
+
+* ``http(s)://`` / ``mailto:`` targets are skipped (no network in CI);
+* relative targets must resolve to an existing file or directory,
+  relative to the markdown file that references them;
+* ``#fragment``-only links are accepted (same-page anchors).
+
+Exit code 0 when every link resolves, 1 otherwise (one line per broken
+link). Used by the CI ``docs`` job and ``tests/test_docs.py`` so the
+docs can't rot silently.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+# inline links, skipping images' leading ! is harmless (same target rule)
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def iter_links(md_path: Path) -> List[Tuple[int, str]]:
+    """(line_number, target) for every inline link outside code fences."""
+    out: List[Tuple[int, str]] = []
+    in_fence = False
+    for i, line in enumerate(md_path.read_text().splitlines(), start=1):
+        if _CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK_RE.finditer(line):
+            out.append((i, m.group(1)))
+    return out
+
+
+def broken_links(md_path: Path) -> List[str]:
+    """Human-readable description of each broken link in one file."""
+    problems = []
+    for lineno, target in iter_links(md_path):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            continue  # same-page anchor
+        path_part = target.split("#", 1)[0]
+        resolved = (md_path.parent / path_part)
+        if not resolved.exists():
+            problems.append(
+                f"{md_path}:{lineno}: broken link -> {target}")
+    return problems
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: check_links.py <file.md> [...]", file=sys.stderr)
+        return 2
+    problems: List[str] = []
+    checked = 0
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            problems.append(f"{name}: file not found")
+            continue
+        checked += 1
+        problems.extend(broken_links(p))
+    for line in problems:
+        print(line, file=sys.stderr)
+    print(f"checked {checked} markdown file(s): "
+          f"{'OK' if not problems else f'{len(problems)} broken link(s)'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
