@@ -6,11 +6,18 @@ Builds the paper's ViT-Tiny analogue, partitions a synthetic
 classification task across 8 clients with Dirichlet(0.3) label skew, and
 runs FedAdamW (block-mean v aggregation + global-update correction +
 decoupled weight decay) for 10 communication rounds.
+
+``QUICKSTART_ROUNDS`` / ``QUICKSTART_STEPS`` shrink the run (the CI
+examples-smoke job executes this file at reduced size so the example
+cannot drift from the library).
 """
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROUNDS = int(os.environ.get("QUICKSTART_ROUNDS", "10"))
+LOCAL_STEPS = int(os.environ.get("QUICKSTART_STEPS", "8"))
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +35,7 @@ def main():
     cfg = reduced_variant(get_arch("vit-tiny-fl"))
     model = build_model(cfg, compute_dtype=jnp.float32)
     fed = FedConfig(algorithm="fedadamw", num_clients=8,
-                    clients_per_round=4, local_steps=8, lr=1e-3,
+                    clients_per_round=4, local_steps=LOCAL_STEPS, lr=1e-3,
                     weight_decay=0.01, alpha=0.5)
 
     task = make_task("class_lm", vocab_size=cfg.vocab_size, seq_len=32,
@@ -45,7 +52,7 @@ def main():
 
     round_fn = jax.jit(make_round_fn(model, fed, specs, alg=alg))
     rng = np.random.default_rng(1)
-    for r in range(10):
+    for r in range(ROUNDS):
         cids = sample_clients(fed.num_clients, fed.clients_per_round, rng)
         batches = round_batches(task, cids, fed.local_steps, 16, rng)
         batches = {k: jnp.asarray(v) for k, v in batches.items()}

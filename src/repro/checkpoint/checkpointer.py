@@ -4,6 +4,18 @@ Flattens any pytree (params + server state) into path-keyed arrays stored in
 one ``.npz`` plus a JSON manifest carrying round index, tree structure and
 the PartitionSpec of every leaf, so a restore onto a different mesh can
 re-shard with ``jax.device_put``. No external deps (container is offline).
+
+Writes are ATOMIC: the ``.npz``/``.json`` payloads land in temp files in
+the same directory and are ``os.replace``-d into place (payloads first,
+the ``latest`` pointer last), so a mid-write kill leaves either the
+previous complete checkpoint or the new complete checkpoint — never a
+truncated ``.npz`` that ``latest`` points at. Failed writes clean their
+temp files up.
+
+The training driver (``repro.launch.train``) wires this in via
+``--ckpt-dir/--ckpt-every/--resume``; resume replays the batch
+generator's rng stream for the completed rounds, so ``train R`` and
+``train R/2 + resume R/2`` are trajectory-identical (tests/test_checkpoint.py).
 """
 from __future__ import annotations
 
@@ -28,24 +40,43 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return out
 
 
+def _atomic_write(path: str, write_fn) -> None:
+    """Write via a same-directory temp file + ``os.replace`` (atomic on
+    POSIX), cleaning the temp up if the write itself dies."""
+    tmp = path + ".tmp"
+    try:
+        with open(tmp, "wb") as f:
+            write_fn(f)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
+
+
 def save_checkpoint(directory: str, step: int, *, params, server_state=None,
                     extra: Optional[Dict[str, Any]] = None) -> str:
+    """Atomically persist ``params`` (+ optional server state) as
+    ``ckpt_<step>.npz`` + ``.json`` and repoint ``latest``. The pointer
+    is replaced LAST, after both payloads are complete on disk."""
     os.makedirs(directory, exist_ok=True)
-    path = os.path.join(directory, f"ckpt_{step:08d}")
+    name = f"ckpt_{step:08d}"
+    path = os.path.join(directory, name)
     arrays = {}
     for prefix, tree in (("params", params), ("state", server_state)):
         if tree is None:
             continue
         for k, v in _flatten(tree).items():
             arrays[prefix + SEP + k] = v
-    np.savez(path + ".npz", **arrays)
     manifest = {"step": step, "extra": extra or {},
                 "keys": sorted(arrays.keys())}
-    with open(path + ".json", "w") as f:
-        json.dump(manifest, f)
-    # atomic-ish 'latest' pointer
-    with open(os.path.join(directory, "latest"), "w") as f:
-        f.write(f"ckpt_{step:08d}")
+    # np.savez appends ".npz" to bare paths but writes file objects
+    # verbatim, which is what lets the temp file carry the .tmp suffix
+    _atomic_write(path + ".npz", lambda f: np.savez(f, **arrays))
+    _atomic_write(path + ".json",
+                  lambda f: f.write(json.dumps(manifest).encode()))
+    _atomic_write(os.path.join(directory, "latest"),
+                  lambda f: f.write(name.encode()))
     return path
 
 

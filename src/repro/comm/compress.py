@@ -121,12 +121,31 @@ def compressed(alg: FedAlgorithm, codec: Codec, *,
     def upload(delta, cstate, specs, fed):
         up = dict(alg.upload(delta, _strip_comm(cstate), specs, fed))
         target = tree_add(delta, cstate[EF_KEY]) if ef else delta
+        if ef and fed.dp_clip > 0.0:
+            # client-level DP + error feedback: the residual must fold
+            # in BEFORE the clip — the codec then encodes a bounded
+            # target (sensitivity holds) and the new residual tracks
+            # exactly what went on the wire. (The incoming delta was
+            # already clipped in local_phase; this re-clip bounds the
+            # fold, it never enlarges anything.)
+            from repro.privacy import clip_tree_by_l2
+            target = clip_tree_by_l2(target, fed.dp_clip)
         key = (_encode_key(cstate.get(ROUND_KEY), cstate.get(CID_KEY),
                            target)
                if codec.stochastic else jax.random.PRNGKey(0))
         decoded = codec.decode(codec.encode(target, key))
         decoded = jax.tree.map(lambda d, x: d.astype(x.dtype),
                                decoded, delta)
+        if fed.dp_clip > 0.0:
+            # the server aggregates the DECODED values, and lossy
+            # codecs add per-coordinate quantization error AFTER the
+            # clip — ||decoded|| can exceed dp_clip by O(scale*sqrt(d)),
+            # which would silently break the sensitivity bound the DP
+            # noise is calibrated to. Re-clip what actually ships; with
+            # EF on, the clip error lands in the residual and is
+            # re-sent like any other compression error.
+            from repro.privacy import clip_tree_by_l2
+            decoded = clip_tree_by_l2(decoded, fed.dp_clip)
         up["delta"] = decoded
         if ef:
             up[EF_KEY] = tree_sub(target, decoded)

@@ -91,6 +91,23 @@ class FedConfig:
     agg_weighting: str = "uniform"     # uniform | data_size | inv_steps
     scenario_seed: int = 0             # availability/straggler rng seed
 
+    # --- client-level differential privacy (repro.privacy,
+    # docs/privacy.md): per-client L2 clipping of every aggregated upload
+    # entry (applied in core.rounds BEFORE codec compression, both
+    # layouts) plus seeded Gaussian noise on the post-aggregation mean,
+    # keyed on (dp_seed, round_index) so eager/prefetched/fused execution
+    # stay bit-identical. dp_clip == 0 disables DP entirely (statically
+    # gated: the traced program is the pre-privacy engine, bit-exact).
+    dp_clip: float = 0.0               # C: per-client L2 bound (0 = off)
+    dp_noise_multiplier: float = 0.0   # sigma: noise std = sigma*C on the sum
+    target_epsilon: float = 0.0        # invert into sigma at config time
+    #   (privacy.resolve_dp_noise; mutually exclusive with a nonzero
+    #   dp_noise_multiplier)
+    dp_delta: float = 1e-5             # delta of the (eps, delta) guarantee
+    dp_seed: int = 0                   # server noise seed
+    use_pallas_clipacc: bool = False   # fused clip+accumulate kernel for the
+    #   delta entry (client_parallel, codec-free DP runs)
+
     # gradient micro-batching inside each local step: the per-step batch is
     # split into this many chunks whose gradients are accumulated (identical
     # semantics — the mean of micro-gradients IS the batch gradient) so the
@@ -123,6 +140,70 @@ class FedConfig:
         if self.rounds_per_call < 1:
             raise ValueError("rounds_per_call must be >= 1")
         self._validate_participation()
+        self._validate_privacy(codec_spec)
+
+    def dp_enabled(self) -> bool:
+        """Client-level DP is on iff a finite clip norm is set."""
+        return self.dp_clip > 0.0
+
+    def _validate_privacy(self, codec_spec: str) -> None:
+        """DP fields and their interactions with the other subsystems,
+        with actionable messages (docs/privacy.md)."""
+        if self.dp_clip < 0.0:
+            raise ValueError(
+                f"dp_clip must be >= 0, got {self.dp_clip} "
+                "(0 disables DP; a positive value is the per-client "
+                "L2 bound)")
+        if self.dp_noise_multiplier < 0.0:
+            raise ValueError(
+                f"dp_noise_multiplier must be >= 0, got "
+                f"{self.dp_noise_multiplier}")
+        if self.target_epsilon < 0.0:
+            raise ValueError(
+                f"target_epsilon must be >= 0, got {self.target_epsilon}")
+        if not 0.0 < self.dp_delta < 1.0:
+            raise ValueError(
+                f"dp_delta must be in (0, 1), got {self.dp_delta} "
+                "(convention: well below 1/num_clients)")
+        wants_noise = (self.dp_noise_multiplier > 0.0
+                       or self.target_epsilon > 0.0)
+        if wants_noise and self.dp_clip == 0.0:
+            raise ValueError(
+                "DP noise is calibrated to the clip bound: "
+                "dp_noise_multiplier / target_epsilon require dp_clip > 0 "
+                "(set the per-client L2 clip norm)")
+        if self.dp_noise_multiplier > 0.0 and self.target_epsilon > 0.0:
+            raise ValueError(
+                "set EITHER dp_noise_multiplier (explicit sigma) OR "
+                "target_epsilon (inverted into sigma by "
+                "repro.privacy.resolve_dp_noise at launch), not both")
+        if self.dp_enabled() and self.agg_weighting != "uniform":
+            raise ValueError(
+                f"client-level DP calibrates noise to the UNIFORM mean's "
+                f"sensitivity dp_clip/S; agg_weighting="
+                f"{self.agg_weighting!r} gives individual clients larger "
+                "aggregation weight and breaks that bound. Set "
+                "agg_weighting='uniform' (stragglers/availability remain "
+                "fine).")
+        if self.use_pallas_clipacc:
+            if not self.dp_enabled():
+                raise ValueError(
+                    "use_pallas_clipacc fuses the DP clip into the "
+                    "aggregation: it requires dp_clip > 0")
+            if self.layout != "client_parallel":
+                raise ValueError(
+                    "use_pallas_clipacc operates on the stacked (S, ...) "
+                    "upload of the client_parallel layout; "
+                    "client_sequential aggregates one client at a time "
+                    "inside a scan — use the default jnp clip path there")
+            if codec_spec:
+                raise ValueError(
+                    f"use_pallas_clipacc is incompatible with upload "
+                    f"codec {codec_spec!r}: DP clipping must happen "
+                    "BEFORE codec compression (the codec must encode the "
+                    "bounded values), but the fused kernel clips at "
+                    "aggregation time, after decode. Drop the codec "
+                    "suffix or disable the kernel.")
 
     def _validate_participation(self) -> None:
         """Participation / scenario fields, with actionable messages (the

@@ -50,6 +50,24 @@ Key presence is part of the pytree *structure*, so a degenerate scenario
 scenario-free engine is structural, not numerical luck. Both layouts,
 donation, and ``rounds_per_call`` fusion handle the keys unchanged: the
 fused scan slices ``(M, S, K)`` masks per round like any other batch leaf.
+
+Client-level DP (``repro.privacy``, docs/privacy.md) hooks in at three
+points, in BOTH layouts, statically gated on ``fed.dp_clip > 0`` (the
+disabled config traces the exact pre-privacy program):
+
+* each client's raw ``delta`` is L2-clipped inside ``local_phase``
+  BEFORE ``alg.upload`` — i.e. before any upload codec encodes it — and
+  every other aggregated upload entry (block-mean v, SCAFFOLD
+  ``c_new_minus_c``) is clipped per client right after;
+* entries the ``commit`` hook introduces (SCAFFOLD ``dc``) are clipped
+  per client post-commit, pre-aggregation;
+* seeded Gaussian noise lands on the aggregated mean (server-side,
+  secure-agg-style), keyed on ``(dp_seed, round_index)`` so every
+  execution mode draws identical bits.
+
+``FedConfig.use_pallas_clipacc`` (client_parallel, codec-free) swaps the
+delta entry's clip + uniform mean for the fused
+``repro.kernels.clipacc`` pass over the (S, model-size) upload stack.
 """
 from __future__ import annotations
 
@@ -62,9 +80,25 @@ from repro.config import FedConfig, ModelConfig
 from repro.core import partition
 from repro.core.fedadamw import FedAlgorithm, get_algorithm
 from repro.core.tree_util import tree_sub
+from repro.privacy import add_round_noise, clip_tree_by_l2, clip_upload_aux
 from repro.scenario import AGG_WEIGHTS_KEY, STEP_MASK_KEY
 
 Array = jax.Array
+
+
+def _clip_commit_entries(upload, pre_commit_keys, clip: float, *,
+                         stacked: bool):
+    """Per-client L2 clip of the upload entries the ``commit`` hook
+    introduced (SCAFFOLD's ``dc``), pre-aggregation. ``stacked`` = the
+    entries carry a leading (S,) client axis (client_parallel); the
+    sequential scan clips one client's scalar entries per call."""
+    def clip_entry(v):
+        if stacked:
+            return jax.vmap(lambda t: clip_tree_by_l2(t, clip))(v)
+        return clip_tree_by_l2(v, clip)
+
+    return {k: (v if k in pre_commit_keys else clip_entry(v))
+            for k, v in upload.items()}
 
 
 def _pop_scenario(batches):
@@ -130,7 +164,16 @@ def make_local_phase(loss_fn: Callable, alg: FedAlgorithm, fed: FedConfig,
     axis. ``step_valid`` (optional, (K,) bool) is the straggler
     step-validity mask: invalid steps keep the batch shape (their
     gradient is computed and discarded) but apply no update, so the
-    upload reflects exactly the client's first K_i steps."""
+    upload reflects exactly the client's first K_i steps.
+
+    With client-level DP on (``fed.dp_clip > 0``) the raw delta is
+    L2-clipped HERE, before ``alg.upload`` — so an upload codec encodes
+    the bounded values (wire bytes unchanged) — and the auxiliary upload
+    entries are clipped per client right after. The fused clipacc kernel
+    (client_parallel, codec-free) instead clips the delta at aggregation
+    time, which is the same math with no codec in between."""
+    dp_on = fed.dp_clip > 0.0
+    clip_delta_here = dp_on and not fed.use_pallas_clipacc
 
     def local_phase(gparams, sstate, batches, lr_scale, client_id=None,
                     step_valid=None):
@@ -216,7 +259,11 @@ def make_local_phase(loss_fn: Callable, alg: FedAlgorithm, fed: FedConfig,
             metrics = {"loss_first": losses[0], "loss_last": losses[last],
                        "loss_mean": (losses * v).sum() / n_valid}
         delta = tree_sub(params_k, gparams)
+        if clip_delta_here:
+            delta = clip_tree_by_l2(delta, fed.dp_clip)
         up = alg.upload(delta, cstate_k, specs, fed)
+        if dp_on:
+            up = clip_upload_aux(up, fed.dp_clip)
         return up, metrics
 
     return local_phase
@@ -237,6 +284,8 @@ def make_round_fn(model, fed: FedConfig, specs, *,
     alg = alg or get_algorithm(fed)
     loss_fn = loss_fn or model.loss
     local_phase = make_local_phase(loss_fn, alg, fed, specs)
+    dp_on = fed.dp_clip > 0.0
+    dp_noise_on = dp_on and fed.dp_noise_multiplier > 0.0
 
     def _lr_scale(round_index):
         if cosine_total_rounds:
@@ -261,9 +310,32 @@ def make_round_fn(model, fed: FedConfig, specs, *,
             if alg.commit is not None:
                 # write the sampled clients' per-client server state rows
                 # (control variates, EF residuals) before aggregation
+                pre_commit_keys = set(uploads)
                 sstate, uploads = alg.commit(sstate, uploads, client_ids,
                                              specs, fed)
-            mean_up = _weighted_mean(uploads, agg_w)
+                if dp_on:
+                    # entries commit introduced (SCAFFOLD dc) are clipped
+                    # per client pre-aggregation like everything else
+                    uploads = _clip_commit_entries(
+                        uploads, pre_commit_keys, fed.dp_clip,
+                        stacked=True)
+            if dp_on and fed.use_pallas_clipacc:
+                # fused per-client clip + uniform accumulate for the
+                # delta entry (one pass over the S x model-size stack;
+                # validation pins agg_weighting=uniform, so agg_w is
+                # None here)
+                from repro.kernels.clipacc import tree_clip_accumulate
+                s = jax.tree.leaves(uploads["delta"])[0].shape[0]
+                mean_delta, _ = tree_clip_accumulate(
+                    uploads["delta"], clip=fed.dp_clip,
+                    weights=jnp.full((s,), 1.0 / s, jnp.float32))
+                rest = {k: v for k, v in uploads.items() if k != "delta"}
+                mean_up = dict(_weighted_mean(rest, agg_w))
+                mean_up["delta"] = mean_delta
+            else:
+                mean_up = _weighted_mean(uploads, agg_w)
+            if dp_noise_on:
+                mean_up = add_round_noise(mean_up, fed, round_index)
             new_params, new_state = alg.server_update(
                 gparams, sstate, mean_up, specs, fed)
             out_metrics = jax.tree.map(lambda m: m.mean(axis=0), metrics)
@@ -290,7 +362,12 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                     up, m = local_phase(gparams, sst, per_client_batches,
                                         lr_scale, cid, step_valid)
                 if alg.commit is not None:
+                    pre_commit_keys = set(up)
                     sst, up = alg.commit(sst, up, cid, specs, fed)
+                    if dp_on:
+                        up = _clip_commit_entries(
+                            up, pre_commit_keys, fed.dp_clip,
+                            stacked=False)
                 return sst, up, m
 
             def contrib(up, w):
@@ -331,6 +408,8 @@ def make_round_fn(model, fed: FedConfig, specs, *,
             inv = 1.0 / jnp.maximum(n, 1.0)
             mean_up = (sum_up if weighted
                        else jax.tree.map(lambda u: u * inv, sum_up))
+            if dp_noise_on:
+                mean_up = add_round_noise(mean_up, fed, round_index)
             out_metrics = jax.tree.map(lambda m: m * inv, sum_m)
             new_params, new_state = alg.server_update(
                 gparams, sstate_k, mean_up, specs, fed)

@@ -9,6 +9,9 @@ per round over every parameter (DESIGN.md §5):
                  second-moment upload (paper Eq. 4)
 ``quantpack``    fused per-tensor scale + int8/int4 quantize-pack for the
                  upload codecs (repro.comm)
+``clipacc``      fused per-client L2 clip + weighted accumulate over the
+                 (S, model-size) upload stack for client-level DP
+                 (repro.privacy)
 
 Each kernel ships ``ops.py`` (jit'd wrapper) and ``ref.py`` (pure-jnp
 oracle); tests sweep shapes/dtypes with assert_allclose. Kernels target

@@ -1,0 +1,12 @@
+"""Fused per-client L2 clip + weighted accumulate for the DP hot path
+(repro.privacy, FedConfig.use_pallas_clipacc)."""
+from repro.kernels.clipacc.clipacc import (
+    BLOCK_ROWS,
+    LANES,
+    NORM_FLOOR,
+    clip_accumulate_3d,
+)
+from repro.kernels.clipacc.ops import tree_clip_accumulate
+
+__all__ = ["BLOCK_ROWS", "LANES", "NORM_FLOOR", "clip_accumulate_3d",
+           "tree_clip_accumulate"]

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: fused per-client L2 clip + weighted accumulate.
+
+The DP hot path of the round engine needs, per round:
+
+    norm_s  = ||x_s||_2                            (one pass over S x d)
+    out     = sum_s w_s * min(1, C/norm_s) * x_s   (a second pass)
+
+Unfused that is two full passes over the (S, model-size) upload stack
+plus a materialized scaled copy. This kernel does both in one
+pallas_call with a two-phase sequential grid — the quantpack absmax
+idiom with the accumulator widened to one SMEM row per client:
+
+* phase 0 walks the row-block tiles, each carrying ALL S clients'
+  (BLOCK_ROWS, LANES) slices, accumulating every client's sum of
+  squares into an SMEM-resident (S, 1) accumulator (pinned by its index
+  map, initialized on the first tile);
+* phase 1 converts the accumulator to the per-client clip factors and
+  writes each output tile as ONE cross-client weighted reduction
+  ``sum_s (w_s * factor_s) * x_s`` — no tile is ever revisited, so no
+  read-modify-write accumulation whose multiply-add fusion could round
+  differently from the reference.
+
+HBM traffic: 2 reads of x + 1 write of the d-sized accumulate; the
+scaled per-client copy never exists. The (S, 1) accumulator doubles as
+the second output: after the last phase-1 tile it holds each client's
+clip factor (1.0 = not clipped), which the caller can log as the
+clipped fraction.
+
+Tiles are (S, BLOCK_ROWS, LANES): BLOCK_ROWS is 8 (one f32 sublane
+group) so VMEM stays ~32 KiB x S per operand — comfortable to S ~ 256
+clients per round.
+
+Bit-exactness vs ``ref.py``: the oracle replicates the kernel's exact
+operation sequence — per-tile ``jnp.sum(x*x, axis=(1, 2))`` chained
+left-to-right over row blocks, the factor formula, and the same
+single-reduction weighted accumulate per tile — because f32 sum
+reductions are order-sensitive (unlike quantpack's max).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 1024          # last-dim tile (multiple of 128)
+BLOCK_ROWS = 8        # rows per grid step (f32 sublane group)
+NORM_FLOOR = 1e-12    # guards all-zero client updates
+
+
+# NOTE: every pl.program_id call is hoisted to the top of the kernel
+# body — calling it inside a pl.when branch breaks interpret mode (the
+# cond branch is lowered outside the grid axis environment).
+
+def _kernel(s_ref, w_ref, x_ref, acc_ref, f_ref, *, n_row_blocks: int):
+    phase = pl.program_id(0)
+    blk = pl.program_id(1)
+    is_first = (phase == 0) & (blk == 0)
+    is_last = (phase == 1) & (blk == n_row_blocks - 1)
+    clip = s_ref[0]
+    x = x_ref[...]                    # (S, BLOCK_ROWS, LANES)
+    s_n = x.shape[0]
+
+    @pl.when(is_first)
+    def _init_sumsq():
+        f_ref[...] = jnp.zeros_like(f_ref)
+
+    @pl.when(phase == 0)
+    def _phase0():
+        f_ref[...] += jnp.sum(x * x, axis=(1, 2)).reshape(s_n, 1)
+        # outputs must be written every visit; phase 1 overwrites
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(phase == 1)
+    def _phase1():
+        norm = jnp.sqrt(f_ref[...])                          # (S, 1)
+        factor = jnp.minimum(1.0, clip / jnp.maximum(norm, NORM_FLOOR))
+        coef = w_ref[...] * factor[:, 0]                     # (S,)
+        acc_ref[...] = jnp.sum(coef[:, None, None] * x, axis=0)
+
+        @pl.when(is_last)
+        def _store_factors():
+            f_ref[...] = factor
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def clip_accumulate_3d(x: jax.Array, w: jax.Array, clip: jax.Array, *,
+                       interpret: bool = True
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """x: (S, R, LANES) f32 stacked per-client updates, R % BLOCK_ROWS
+    == 0; w: (S,) f32 aggregation weights; clip: scalar f32 L2 bound.
+
+    Returns ``(acc (R, LANES) f32, factors (S, 1) f32)`` with
+    ``acc = sum_s w[s] * min(1, clip/||x[s]||) * x[s]``.
+    """
+    s_n, r, c = x.shape
+    assert c == LANES and r % BLOCK_ROWS == 0, (s_n, r, c)
+    assert w.shape == (s_n,), (w.shape, s_n)
+    grid = (2, r // BLOCK_ROWS)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_row_blocks=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # clip scalar
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # weights (S,)
+            pl.BlockSpec((s_n, BLOCK_ROWS, LANES),
+                         lambda p, i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda p, i: (i, 0)),
+            pl.BlockSpec((s_n, 1), lambda p, i: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.float32),
+                   jax.ShapeDtypeStruct((s_n, 1), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(clip, jnp.float32).reshape(1),
+      w.astype(jnp.float32), x.astype(jnp.float32))

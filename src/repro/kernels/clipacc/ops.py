@@ -1,0 +1,53 @@
+"""jit'd wrapper: run a stacked (S, ...) upload pytree through the fused
+clip-accumulate kernel (per-client flatten + concat -> pad to (R, LANES)
+tiles -> kernel -> slice + unflatten the accumulated mean).
+
+Zero padding is norm- and output-correct by construction: pads add
+nothing to a client's squared norm, accumulate to zeros, and are sliced
+off before the tree is rebuilt.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.clipacc.clipacc import (BLOCK_ROWS, LANES,
+                                           clip_accumulate_3d)
+
+TILE = BLOCK_ROWS * LANES
+Tree = Any
+
+
+def tree_clip_accumulate(stacked: Tree, *, clip, weights: jax.Array,
+                         interpret: bool = True) -> Tuple[Tree, jax.Array]:
+    """``stacked``: pytree whose leaves carry a leading (S,) client axis;
+    ``weights``: (S,) f32 (uniform DP aggregation passes ``1/S``).
+
+    Returns ``(mean_tree, factors (S, 1))`` where ``mean_tree`` has the
+    per-leaf structure/dtype of one client's upload entry and equals
+    ``sum_s w_s * min(1, clip/||upload_s||) * upload_s`` with the JOINT
+    L2 norm taken across ALL leaves of client s.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    s_n = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [leaf.astype(jnp.float32).reshape(s_n, -1) for leaf in leaves],
+        axis=1)
+    total = flat.shape[1]
+    pad = (-total) % TILE
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((s_n, pad), jnp.float32)], axis=1)
+    x3d = flat.reshape(s_n, -1, LANES)
+    acc, factors = clip_accumulate_3d(x3d, weights, clip,
+                                      interpret=interpret)
+    acc = acc.reshape(-1)[:total]
+    out, offset = [], 0
+    for leaf in leaves:
+        size = leaf[0].size
+        out.append(acc[offset:offset + size]
+                   .reshape(leaf.shape[1:]).astype(leaf.dtype))
+        offset += size
+    return jax.tree_util.tree_unflatten(treedef, out), factors

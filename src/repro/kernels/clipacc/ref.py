@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused clip-accumulate kernel.
+
+Replicates the kernel's operation sequence exactly — per-tile
+``jnp.sum(x * x, axis=(1, 2))`` squared sums chained left-to-right over
+row blocks, the factor formula, and the identical single-reduction
+weighted accumulate per tile — because f32 sum reductions are
+order-sensitive (unlike quantpack's max): parity is bit-exact only for
+the identical operation sequence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.clipacc.clipacc import BLOCK_ROWS, NORM_FLOOR
+
+
+def clip_accumulate_ref(x: jax.Array, w: jax.Array, clip
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """x: (S, R, LANES) f32, w: (S,) f32 -> (acc (R, LANES), factors
+    (S, 1)) — same contract as ``clip_accumulate_3d``."""
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    clip = jnp.asarray(clip, jnp.float32)
+    s_n, r, _ = x.shape
+    n_blocks = r // BLOCK_ROWS
+
+    def block(i):
+        return x[:, i * BLOCK_ROWS:(i + 1) * BLOCK_ROWS, :]
+
+    sumsq = jnp.zeros((s_n, 1), jnp.float32)
+    for i in range(n_blocks):
+        xb = block(i)
+        sumsq = sumsq + jnp.sum(xb * xb, axis=(1, 2)).reshape(s_n, 1)
+    norm = jnp.sqrt(sumsq)
+    factor = jnp.minimum(1.0, clip / jnp.maximum(norm, NORM_FLOOR))
+    coef = w * factor[:, 0]
+    tiles = [jnp.sum(coef[:, None, None] * block(i), axis=0)
+             for i in range(n_blocks)]
+    return jnp.concatenate(tiles, axis=0), factor

@@ -20,6 +20,18 @@ after K_i < K local steps, ``--agg-weighting data_size|inv_steps`` swaps
 the uniform upload mean for a weighted reduction. The defaults are the
 degenerate scenario — bit-exact with the pre-scenario engine.
 
+Client-level DP (``repro.privacy``, docs/privacy.md): ``--dp-clip 1.0
+--dp-noise-multiplier 1.0`` clips every client upload and noises the
+aggregate; ``--target-epsilon 8`` instead derives the noise multiplier
+from the privacy budget at launch. The RDP accountant consumes the
+ACTUAL per-round cohorts and reports cumulative ``(eps, delta)`` into
+the history / CSV at every eval round.
+
+Long (DP) sweeps survive preemption via ``--ckpt-dir out/ckpt
+--ckpt-every 50``; ``--resume`` restores the latest checkpoint and
+replays the data stream's rng for the completed rounds, so a resumed
+run is trajectory-identical to an uninterrupted one.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch vit-tiny-fl \
       --algorithm fedadamw --rounds 30 --clients 16 --sample 8 \
@@ -29,6 +41,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from typing import Callable, Dict, Optional
 
@@ -36,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.comm import codec_for, upload_wire_bytes
 from repro.config import FedConfig, get_arch
 from repro.config.model_config import reduced_variant
@@ -45,6 +59,8 @@ from repro.launch.pipeline import (HostPrefetcher, RoundEngine,
                                    eval_boundaries, plan_round_blocks)
 from repro.metrics import CSVLogger, Meter, MetricsSpool
 from repro.models import build_model
+from repro.privacy import (RDPAccountant, released_entry_count,
+                           resolve_dp_noise)
 from repro.scenario import ParticipationScenario
 
 
@@ -118,7 +134,13 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                  straggler_frac: float = 0.0, straggler_min_steps: int = 1,
                  agg_weighting: str = "uniform",
                  scenario_seed: Optional[int] = None,
-                 availability_trace=None) -> Dict[str, list]:
+                 availability_trace=None,
+                 dp_clip: float = 0.0, dp_noise_multiplier: float = 0.0,
+                 target_epsilon: float = 0.0, dp_delta: float = 1e-5,
+                 dp_seed: Optional[int] = None,
+                 use_pallas_clipacc: bool = False,
+                 ckpt_dir: str = "", ckpt_every: int = 0,
+                 resume: bool = False) -> Dict[str, list]:
     cfg = get_arch(arch)
     if reduce_model:
         cfg = reduced_variant(cfg)
@@ -140,7 +162,11 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         straggler_frac=straggler_frac,
         straggler_min_steps=straggler_min_steps,
         agg_weighting=agg_weighting,
-        scenario_seed=seed if scenario_seed is None else scenario_seed)
+        scenario_seed=seed if scenario_seed is None else scenario_seed,
+        dp_clip=dp_clip, dp_noise_multiplier=dp_noise_multiplier,
+        target_epsilon=target_epsilon, dp_delta=dp_delta,
+        dp_seed=seed if dp_seed is None else dp_seed,
+        use_pallas_clipacc=use_pallas_clipacc)
     model = build_model(cfg, compute_dtype=jnp.float32)
     task = make_task(task_kind, vocab_size=cfg.vocab_size, seq_len=seq_len,
                      num_samples=max(2048, 64 * num_clients),
@@ -149,6 +175,20 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
 
     params, specs, alg, sstate = build_fed_state(
         model, fed, jax.random.key(seed))
+    upload_spec = upload_shape_spec(alg, params, sstate, specs, fed)
+
+    # client-level DP (repro.privacy, docs/privacy.md): resolve a
+    # --target-epsilon budget into the noise multiplier at launch (at
+    # this run's own q = S/N, R, delta, and number of separately noised
+    # aggregates), then track the cumulative (eps, delta) spend over the
+    # ACTUAL per-round cohorts
+    accountant = None
+    if fed.dp_enabled():
+        entries = released_entry_count(upload_spec)
+        fed = resolve_dp_noise(fed, released_entries=entries)
+        accountant = RDPAccountant(
+            fed.dp_noise_multiplier, fed.num_clients, delta=fed.dp_delta,
+            released_entries=entries)
     engine = RoundEngine(model, fed, specs, alg=alg,
                          cosine_total_rounds=rounds if cosine else 0,
                          donate=donate)
@@ -164,15 +204,57 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         rng=np.random.default_rng(seed + 1), scenario=scenario)
     blocks = plan_round_blocks(rounds, eval_every, fed.rounds_per_call)
     eval_rounds = set(eval_boundaries(rounds, eval_every))
+    if ckpt_dir and ckpt_every:
+        # checkpoints can only be written where a block ends; a
+        # ckpt_every that never lands on one would silently write
+        # nothing for the whole sweep — fail at launch instead
+        ends = {s + z for s, z in blocks}
+        missed = [r for r in range(ckpt_every, rounds + 1, ckpt_every)
+                  if r not in ends]
+        if missed:
+            raise ValueError(
+                f"ckpt_every={ckpt_every} does not land on block "
+                f"boundaries (first miss: round {missed[0]}; block ends "
+                f"are set by eval_every={eval_every} and "
+                f"rounds_per_call={fed.rounds_per_call}). Use a "
+                "multiple of eval_every, or adjust rounds_per_call so "
+                "blocks end on the checkpoint rounds.")
+
+    # --- checkpoint restore (repro.checkpoint): long sweeps survive
+    # preemption. Resume replays the generator's rng stream for the
+    # completed rounds, so the data of round r is identical whether or
+    # not the run was interrupted — trajectory parity by construction.
+    start_round = 0
+    if ckpt_dir and resume and os.path.exists(
+            os.path.join(ckpt_dir, "latest")):
+        restored_params, restored_state, start_round = restore_checkpoint(
+            ckpt_dir, params_template=params, state_template=sstate)
+        params = jax.device_put(restored_params)
+        sstate = jax.device_put(restored_state)
+        for _ in range(start_round):
+            gen.next_round()                    # burn the rng stream
+        if accountant is not None:
+            # completed rounds already spent budget (cohorts are the
+            # static S — the top-up sampler keeps every round full)
+            accountant.step(fed.clients_per_round, rounds=start_round)
+        if start_round < rounds and not any(
+                s == start_round for s, _ in blocks):
+            raise ValueError(
+                f"checkpoint at round {start_round} does not align with "
+                f"the block plan (eval_every={eval_every}, "
+                f"rounds_per_call={fed.rounds_per_call}): resume with "
+                "the settings the checkpoint was written under "
+                "(checkpoints land on block boundaries)")
+        blocks = [(s, z) for s, z in blocks if s >= start_round]
     prefetcher = HostPrefetcher(gen, blocks, depth=prefetch_depth,
                                 stacked=engine.stacked)
     spool = MetricsSpool()
 
     # declare the eval-only columns up front so every CSV carries them
     # even before the first eval round lands
-    logger = CSVLogger(log_path, fieldnames=[
-        "round", "train_loss", "upload_mbytes", "test_loss", "test_acc",
-    ]) if log_path else None
+    fieldnames = ["round", "train_loss", "upload_mbytes", "test_loss",
+                  "test_acc"] + (["epsilon"] if accountant else [])
+    logger = CSVLogger(log_path, fieldnames=fieldnames) if log_path else None
     meter = Meter()
     eval_fn = make_eval_fn(model)
     # stage the full test split on device ONCE — every eval round scans
@@ -180,6 +262,8 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
     eval_stacked = jax.device_put(task.test_split_batches(256))
     history = {"round": [], "train_loss": [], "test_acc": [],
                "test_loss": [], "upload_mbytes": []}
+    if accountant is not None:
+        history["epsilon"] = []
 
     # per-client wire bytes (paper Table 7 accounting, codec-aware): the
     # delta entry is costed through the codec's packed payload, not its
@@ -187,8 +271,7 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
     # cost nothing. Payload sizes are shape-static, so one abstract
     # evaluation prices every round.
     codec = codec_for(fed.algorithm)
-    comm_bytes = upload_wire_bytes(
-        upload_shape_spec(alg, params, sstate, specs, fed), codec)
+    comm_bytes = upload_wire_bytes(upload_spec, codec)
     t0 = time.perf_counter()
     try:
         for start, size, batches, cids in prefetcher:
@@ -196,12 +279,22 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                 params, sstate, batches, cids, start, size)
             spool.append(start, metrics, size)
             r_end = start + size - 1
+            if accountant is not None:
+                # charge the rounds of this block at the cohort size the
+                # participation engine ACTUALLY produced
+                accountant.step(int(np.shape(cids)[-1]), rounds=size)
+            if ckpt_dir and ckpt_every and (r_end + 1) % ckpt_every == 0:
+                save_checkpoint(ckpt_dir, r_end + 1, params=params,
+                                server_state=sstate,
+                                extra={"algorithm": fed.algorithm})
             if r_end not in eval_rounds:
                 continue
             # eval boundary: one blocking fetch of everything spooled,
             # then the exact full-split eval on the current params
             eval_rec = evaluate(model, params, task, eval_fn=eval_fn,
                                 stacked=eval_stacked)
+            if accountant is not None:
+                eval_rec["epsilon"] = accountant.epsilon()
             for r, m in spool.flush():
                 loss = m["loss_mean"]
                 meter.update(loss)
@@ -214,6 +307,8 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                     history["test_acc"].append(rec["test_acc"])
                     history["test_loss"].append(rec["test_loss"])
                     history["upload_mbytes"].append(rec["upload_mbytes"])
+                    if accountant is not None:
+                        history["epsilon"].append(rec["epsilon"])
                 if logger:
                     logger.log(rec)
     finally:
@@ -236,7 +331,15 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         "prefetch_depth": prefetch_depth,
         "rounds_per_call": fed.rounds_per_call, "donate": donate,
         "host_wait_s": prefetcher.wait_s, "produce_s": prefetcher.produce_s,
+        "start_round": start_round,
     }
+    if fed.dp_enabled():
+        history["engine"]["dp"] = {
+            "clip": fed.dp_clip,
+            "noise_multiplier": fed.dp_noise_multiplier,
+            "delta": fed.dp_delta,
+            "released_entries": accountant.released_entries,
+        }
     return history
 
 
@@ -295,6 +398,33 @@ def main() -> None:
     ap.add_argument("--scenario-seed", type=int, default=None,
                     help="availability/straggler process seed "
                          "(defaults to --seed)")
+    ap.add_argument("--dp-clip", type=float, default=0.0,
+                    help="client-level DP: per-client L2 clip norm of "
+                         "every aggregated upload entry (0 = DP off)")
+    ap.add_argument("--dp-noise-multiplier", type=float, default=0.0,
+                    help="Gaussian noise multiplier sigma (noise std "
+                         "sigma*clip on the clipped sum)")
+    ap.add_argument("--target-epsilon", type=float, default=0.0,
+                    help="derive the noise multiplier from this privacy "
+                         "budget at launch (mutually exclusive with "
+                         "--dp-noise-multiplier)")
+    ap.add_argument("--dp-delta", type=float, default=1e-5,
+                    help="delta of the (eps, delta) guarantee")
+    ap.add_argument("--dp-seed", type=int, default=None,
+                    help="server noise seed (defaults to --seed)")
+    ap.add_argument("--pallas-clipacc", action="store_true",
+                    help="route the DP clip + aggregation of the delta "
+                         "entry through the fused clip-accumulate kernel "
+                         "(client_parallel, codec-free)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="checkpoint directory (empty = no checkpoints)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every N rounds (block-aligned; "
+                         "0 = never)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint in --ckpt-dir "
+                         "and continue; trajectory-identical to an "
+                         "uninterrupted run")
     args = ap.parse_args()
     t0 = time.time()
     hist = run_training(
@@ -315,13 +445,29 @@ def main() -> None:
         straggler_frac=args.straggler_frac,
         straggler_min_steps=args.straggler_min_steps,
         agg_weighting=args.agg_weighting,
-        scenario_seed=args.scenario_seed)
-    print(json.dumps({
-        "final_train_loss": hist["train_loss"][-1],
-        "final_test_acc": hist["test_acc"][-1],
-        "upload_mbytes_per_client_round": hist["upload_mbytes"][-1],
-        "wall_s": round(time.time() - t0, 1),
-    }, indent=1))
+        scenario_seed=args.scenario_seed,
+        dp_clip=args.dp_clip,
+        dp_noise_multiplier=args.dp_noise_multiplier,
+        target_epsilon=args.target_epsilon, dp_delta=args.dp_delta,
+        dp_seed=args.dp_seed, use_pallas_clipacc=args.pallas_clipacc,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        resume=args.resume)
+    out = {"wall_s": round(time.time() - t0, 1)}
+    if hist["train_loss"]:
+        out.update(
+            final_train_loss=hist["train_loss"][-1],
+            final_test_acc=hist["test_acc"][-1],
+            upload_mbytes_per_client_round=hist["upload_mbytes"][-1])
+    else:
+        # --resume found the run already complete (start_round ==
+        # rounds): a supervisor re-running the same command until it
+        # succeeds must see a clean exit, not an IndexError
+        out["note"] = (f"nothing to do: checkpoint already at round "
+                       f"{hist['engine']['start_round']}")
+    if hist.get("epsilon"):
+        out["epsilon"] = hist["epsilon"][-1]
+        out["dp"] = hist["engine"]["dp"]
+    print(json.dumps(out, indent=1))
 
 
 if __name__ == "__main__":

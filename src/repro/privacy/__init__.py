@@ -1,0 +1,52 @@
+"""Differential privacy for federated training (docs/privacy.md).
+
+Client-level DP for every registered algorithm, composed with the four
+existing subsystems (comm codecs, client-state store, pipelined rounds,
+participation engine) rather than forked from them:
+
+``dp``          jittable mechanism — per-client L2 clipping of every
+                aggregated upload entry (inside ``core.rounds``, both
+                placement layouts, BEFORE codec compression) and seeded
+                Gaussian noise on the post-aggregation mean, keyed on
+                ``(dp_seed, round_index)`` so eager / prefetched /
+                ``rounds_per_call``-fused execution stay bit-identical
+``accountant``  dependency-free RDP/moments accountant: composes the
+                ACTUAL per-round cohort sizes into (eps, delta), and
+                inverts a ``target_epsilon`` into a noise multiplier at
+                config time
+
+The DP hot path has an opt-in fused Pallas kernel
+(``repro.kernels.clipacc``, ``FedConfig.use_pallas_clipacc``) that folds
+the per-client norm + scale + cross-client accumulate into one pass over
+the (S, model-size) upload stack.
+
+The disabled config (``dp_clip == 0``) is statically gated and traces
+the exact pre-privacy round program — bit-exact by construction.
+"""
+from repro.privacy.accountant import (
+    DEFAULT_ORDERS,
+    RDPAccountant,
+    calibrate_noise_multiplier,
+    epsilon,
+    gaussian_epsilon_closed_form,
+)
+from repro.privacy.dp import (
+    NONNEG_ENTRIES,
+    NORM_FLOOR,
+    add_round_noise,
+    clip_tree_by_l2,
+    clip_upload_aux,
+    dp_enabled,
+    l2_clip_factor,
+    l2_sq_norm,
+    released_entry_count,
+    resolve_dp_noise,
+)
+
+__all__ = [
+    "DEFAULT_ORDERS", "RDPAccountant", "calibrate_noise_multiplier",
+    "epsilon", "gaussian_epsilon_closed_form",
+    "NONNEG_ENTRIES", "NORM_FLOOR", "add_round_noise", "clip_tree_by_l2",
+    "clip_upload_aux", "dp_enabled", "l2_clip_factor", "l2_sq_norm",
+    "released_entry_count", "resolve_dp_noise",
+]

@@ -1,0 +1,227 @@
+"""Dependency-free RDP (moments) accountant for client-level DP training.
+
+Tracks the cumulative privacy loss of R federated rounds, each of which
+releases the noised aggregate of S clipped client uploads out of N
+clients — the subsampled Gaussian mechanism with sampling rate
+``q = S / N`` and noise multiplier ``sigma`` (noise std ``sigma * C`` on
+the clipped-to-``C`` sum, i.e. ``sigma * C / S`` on the mean the server
+actually applies).
+
+Renyi-DP composition (Mironov 2017; subsampled bound of Mironov, Talwar
+& Zhang 2019 / Wang, Balle & Kasiviswanathan 2019, integer orders):
+
+* one round of the plain Gaussian mechanism (``q = 1``) has
+  ``RDP(alpha) = alpha / (2 sigma^2)``;
+* one Poisson-subsampled round at rate ``q < 1`` has, for integer
+  ``alpha >= 2``,
+
+  ``RDP(alpha) = log( sum_k C(alpha,k) (1-q)^(alpha-k) q^k
+  exp(k (k-1) / (2 sigma^2)) ) / (alpha - 1)``;
+
+* rounds compose by ADDING their RDP at each order, which is what lets
+  the accountant consume the ACTUAL per-round cohort sizes the
+  participation engine produced instead of assuming a constant rate;
+* the (eps, delta) conversion is ``eps = min_alpha RDP(alpha) +
+  log(1/delta) / (alpha - 1)``.
+
+CAVEAT (sampling-scheme mismatch, docs/privacy.md): the amplification
+bound above is a theorem for POISSON sampling, while the engine's
+samplers draw fixed-size cohorts without replacement. Applying the
+Poisson bound at ``q = S/N`` is the standard practice of the DP-FL
+tooling ecosystem (Opacus / TF-Privacy account exactly this way for
+fixed-size batches) but is an approximation, not a theorem, for this
+sampler; fixed-size without-replacement RDP bounds (Wang, Balle &
+Kasiviswanathan 2019) differ and can be larger. Treat reported eps
+accordingly, or deploy with Poisson cohort sampling.
+
+When one round releases E separately clipped-and-noised aggregates
+(FedAdamW ships ``delta`` AND the block-mean ``v``; SCAFFOLD ships
+``delta`` and ``dc``), the joint release is a single Gaussian mechanism
+on the concatenated vector with sensitivity ``sqrt(E) * C`` but
+per-block noise ``sigma * C`` — equivalent to one release at effective
+multiplier ``sigma / sqrt(E)`` (``released_entries``; docs/privacy.md).
+
+Usage (runs under ``python -m doctest``):
+
+>>> acc = RDPAccountant(noise_multiplier=1.0, num_clients=100,
+...                     delta=1e-5)
+>>> for _ in range(10):
+...     acc.step(cohort_size=10)            # the ACTUAL per-round S_r
+>>> 0.0 < acc.epsilon() < epsilon(1.0, q=1.0, rounds=10, delta=1e-5)
+True
+>>> epsilon(2.0, q=0.1, rounds=10) < epsilon(1.0, q=0.1, rounds=10)
+True
+>>> sigma = calibrate_noise_multiplier(2.0, q=0.1, rounds=50)
+>>> epsilon(sigma, q=0.1, rounds=50) <= 2.0
+True
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Optional, Sequence, Tuple
+
+# Integer Renyi orders: dense where the optimum usually lands, sparse
+# tail for very small eps / very large sigma.
+DEFAULT_ORDERS: Tuple[int, ...] = tuple(range(2, 65)) + (
+    80, 96, 128, 192, 256, 384, 512, 1024)
+
+
+def _log_comb(n: int, k: int) -> float:
+    return (math.lgamma(n + 1) - math.lgamma(k + 1)
+            - math.lgamma(n - k + 1))
+
+
+def _logsumexp(xs: Iterable[float]) -> float:
+    xs = list(xs)
+    m = max(xs)
+    if m == -math.inf:
+        return -math.inf
+    return m + math.log(sum(math.exp(x - m) for x in xs))
+
+
+def _rdp_round(q: float, sigma: float, orders: Sequence[int]
+               ) -> Tuple[float, ...]:
+    """RDP cost of ONE subsampled-Gaussian round at every order."""
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"sampling rate q must be in [0, 1], got {q}")
+    if sigma < 0.0:
+        raise ValueError(f"noise multiplier must be >= 0, got {sigma}")
+    if q == 0.0:
+        return tuple(0.0 for _ in orders)
+    if sigma == 0.0:
+        return tuple(math.inf for _ in orders)
+    if q == 1.0:
+        return tuple(a / (2.0 * sigma * sigma) for a in orders)
+    log_q, log_1mq = math.log(q), math.log1p(-q)
+    out = []
+    for a in orders:
+        terms = (_log_comb(a, k) + k * log_q + (a - k) * log_1mq
+                 + k * (k - 1) / (2.0 * sigma * sigma)
+                 for k in range(a + 1))
+        out.append(_logsumexp(terms) / (a - 1))
+    return tuple(out)
+
+
+def _rdp_to_epsilon(rdp: Sequence[float], orders: Sequence[int],
+                    delta: float) -> float:
+    if not 0.0 < delta < 1.0:
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
+    log_inv_delta = math.log(1.0 / delta)
+    return min(r + log_inv_delta / (a - 1) for r, a in zip(rdp, orders))
+
+
+class RDPAccountant:
+    """Cumulative (eps, delta) tracker over heterogeneous rounds.
+
+    ``step(cohort_size)`` charges one round at the rate that round
+    ACTUALLY ran (``cohort_size / num_clients``); ``epsilon()`` converts
+    the composed RDP curve at ``delta``. ``released_entries`` folds the
+    E-separately-noised-aggregates release into an effective noise
+    multiplier ``sigma / sqrt(E)`` (module docstring).
+    """
+
+    def __init__(self, noise_multiplier: float, num_clients: int, *,
+                 delta: float = 1e-5, released_entries: int = 1,
+                 orders: Sequence[int] = DEFAULT_ORDERS):
+        if num_clients < 1:
+            raise ValueError(f"num_clients must be >= 1, got {num_clients}")
+        if released_entries < 1:
+            raise ValueError(
+                f"released_entries must be >= 1, got {released_entries}")
+        if noise_multiplier < 0.0:
+            raise ValueError(
+                f"noise multiplier must be >= 0, got {noise_multiplier}")
+        self.noise_multiplier = float(noise_multiplier)
+        self.num_clients = int(num_clients)
+        self.delta = float(delta)
+        self.released_entries = int(released_entries)
+        self.orders = tuple(orders)
+        self.rounds = 0
+        self._rdp = [0.0 for _ in self.orders]
+        self._sigma_eff = (self.noise_multiplier
+                          / math.sqrt(self.released_entries))
+
+    def step(self, cohort_size: int, *, rounds: int = 1) -> None:
+        """Charge ``rounds`` rounds that each sampled ``cohort_size``
+        distinct clients."""
+        if not 0 <= cohort_size <= self.num_clients:
+            raise ValueError(
+                f"cohort_size must be in [0, num_clients="
+                f"{self.num_clients}], got {cohort_size}")
+        q = cohort_size / self.num_clients
+        per_round = _rdp_round(q, self._sigma_eff, self.orders)
+        self._rdp = [r + rounds * p for r, p in zip(self._rdp, per_round)]
+        self.rounds += rounds
+
+    def epsilon(self, delta: Optional[float] = None) -> float:
+        """eps spent so far at ``delta`` (defaults to the constructor's).
+        ``inf`` before any noised round, or when sigma == 0."""
+        if self.rounds == 0 and all(r == 0.0 for r in self._rdp):
+            return 0.0
+        return _rdp_to_epsilon(self._rdp, self.orders,
+                               self.delta if delta is None else delta)
+
+
+def epsilon(noise_multiplier: float, *, q: float, rounds: int,
+            delta: float = 1e-5, released_entries: int = 1,
+            orders: Sequence[int] = DEFAULT_ORDERS) -> float:
+    """eps of ``rounds`` homogeneous subsampled-Gaussian rounds."""
+    sigma = noise_multiplier / math.sqrt(released_entries)
+    if sigma == 0.0:
+        return math.inf
+    rdp = [rounds * r for r in _rdp_round(q, sigma, orders)]
+    return _rdp_to_epsilon(rdp, orders, delta)
+
+
+def gaussian_epsilon_closed_form(noise_multiplier: float,
+                                 delta: float = 1e-5) -> float:
+    """Closed-form (continuous-order) conversion for ONE plain Gaussian
+    mechanism (``q = 1``, one round): minimizing ``alpha/(2 sigma^2) +
+    log(1/delta)/(alpha-1)`` over real alpha gives
+
+        eps = 1 / (2 sigma^2) + sqrt(2 log(1/delta)) / sigma
+
+    The integer-order accountant must match this within the order-grid
+    discretization (test fixture).
+    """
+    s = float(noise_multiplier)
+    if s <= 0.0:
+        return math.inf
+    return 1.0 / (2.0 * s * s) + math.sqrt(2.0 * math.log(1.0 / delta)) / s
+
+
+def calibrate_noise_multiplier(target_epsilon: float, *, q: float,
+                               rounds: int, delta: float = 1e-5,
+                               released_entries: int = 1,
+                               tol: float = 1e-3,
+                               sigma_max: float = 1e4) -> float:
+    """Smallest noise multiplier whose eps is <= ``target_epsilon``.
+
+    Bisection on the (monotonically decreasing) ``epsilon(sigma)`` curve;
+    raises if even ``sigma_max`` cannot reach the target.
+    """
+    if target_epsilon <= 0.0:
+        raise ValueError(
+            f"target_epsilon must be > 0, got {target_epsilon}")
+
+    def eps_at(sigma: float) -> float:
+        return epsilon(sigma, q=q, rounds=rounds, delta=delta,
+                       released_entries=released_entries)
+
+    lo, hi = 1e-3, sigma_max
+    if eps_at(hi) > target_epsilon:
+        raise ValueError(
+            f"target_epsilon={target_epsilon} unreachable with noise "
+            f"multiplier <= {sigma_max} at q={q}, rounds={rounds}, "
+            f"delta={delta}: even that much noise leaks "
+            f"eps={eps_at(hi):.3g}. Raise target_epsilon, lower the "
+            "sampling rate, or train fewer rounds.")
+    if eps_at(lo) <= target_epsilon:
+        return lo
+    while hi - lo > tol * hi:
+        mid = 0.5 * (lo + hi)
+        if eps_at(mid) <= target_epsilon:
+            hi = mid
+        else:
+            lo = mid
+    return hi

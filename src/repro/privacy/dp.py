@@ -1,0 +1,144 @@
+"""Client-level DP mechanism: per-client L2 clipping + seeded Gaussian
+noise on the aggregated uploads (docs/privacy.md).
+
+The round engine (:mod:`repro.core.rounds`) drives three jittable hooks,
+in BOTH placement layouts:
+
+* :func:`clip_tree_by_l2` — each client's raw ``delta`` is clipped to
+  ``FedConfig.dp_clip`` inside ``local_phase`` BEFORE ``alg.upload``
+  runs, i.e. before any upload codec encodes it (wire bytes unchanged,
+  and the codec quantizes exactly the bounded values);
+* :func:`clip_upload_aux` — every other aggregated upload entry
+  (FedAdamW's block-mean ``v``, SCAFFOLD's ``c_new_minus_c`` and the
+  post-``commit`` ``dc``) is clipped per client to the same bound;
+  client-resident comm state (error-feedback residuals) is never
+  aggregated and passes through unclipped;
+* :func:`add_round_noise` — Gaussian noise with std ``sigma * C / S``
+  is added to each entry of the aggregated mean AFTER the cross-client
+  reduction (server-side, secure-agg-style: only the aggregate is ever
+  noised). The noise key is ``fold_in(PRNGKey(dp_seed), round_index)``
+  plus a per-leaf counter — a pure function of ``(dp_seed, round
+  index, leaf position)``, never of trace structure, so eager,
+  host-prefetched, and ``rounds_per_call``-fused execution draw
+  BIT-identical noise (the scenario-engine seeding pattern).
+
+Everything is statically gated on ``fed.dp_clip > 0``: the disabled
+config traces the exact pre-privacy program (bit-exactness is
+structural, as with the degenerate participation scenario).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+NORM_FLOOR = 1e-12      # guards all-zero updates in the clip factor
+# aggregated entries that are second-moment estimates: noise can push
+# them negative, which would NaN the sqrt in the next round's update —
+# clamping at zero is post-processing of the released value (DP holds)
+NONNEG_ENTRIES = ("v_mean", "v_full")
+
+
+def dp_enabled(fed) -> bool:
+    return fed.dp_clip > 0.0
+
+
+def l2_sq_norm(tree: Tree) -> jax.Array:
+    """Squared global L2 norm, accumulated left-to-right over the leaves
+    in a FIXED association order (one leaf at a time) so the reduction
+    lowers identically inside the single-round program and the fused
+    multi-round scan body — the ``_weighted_mean`` determinism idiom."""
+    leaves = jax.tree.leaves(tree)
+    acc = jnp.sum(jnp.square(leaves[0].astype(jnp.float32)))
+    for leaf in leaves[1:]:
+        acc = acc + jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+    return acc
+
+
+def l2_clip_factor(tree: Tree, clip: float) -> jax.Array:
+    """``min(1, clip / ||tree||_2)`` — 1.0 exactly when within bound."""
+    norm = jnp.sqrt(l2_sq_norm(tree))
+    return jnp.minimum(1.0, clip / jnp.maximum(norm, NORM_FLOOR))
+
+
+def clip_tree_by_l2(tree: Tree, clip: float) -> Tree:
+    """Scale the whole pytree so its JOINT L2 norm is <= ``clip``."""
+    factor = l2_clip_factor(tree, clip)
+    return jax.tree.map(
+        lambda x: (x.astype(jnp.float32) * factor).astype(x.dtype), tree)
+
+
+def clip_upload_aux(upload: Dict[str, Tree], clip: float) -> Dict[str, Tree]:
+    """Clip every aggregated upload entry EXCEPT ``delta`` (already
+    clipped pre-codec in ``local_phase``) and the client-resident comm
+    state keys, each independently to ``clip``."""
+    from repro.comm.error_feedback import COMM_STATE_KEYS
+    return {k: (v if k == "delta" or k in COMM_STATE_KEYS
+                else clip_tree_by_l2(v, clip))
+            for k, v in upload.items()}
+
+
+def released_entry_count(upload: Dict[str, Any]) -> int:
+    """Number of separately noised aggregates one round releases (the
+    accountant's ``released_entries``): the upload's top-level entries
+    minus client-resident comm state."""
+    from repro.comm.error_feedback import COMM_STATE_KEYS
+    return len([k for k in upload if k not in COMM_STATE_KEYS])
+
+
+def add_round_noise(mean_up: Dict[str, Tree], fed, round_index) -> Dict[str, Tree]:
+    """Server-side Gaussian noise on the aggregated mean, one
+    independent draw per leaf, std ``dp_noise_multiplier * dp_clip / S``
+    (the clipped SUM takes ``sigma * C``; the engine aggregates the
+    uniform mean, so the mean takes ``sigma * C / S``).
+
+    Keys depend only on ``(dp_seed, round_index, leaf counter)`` with a
+    fixed (sorted-entry, flatten-order) leaf numbering, so every
+    execution mode and both placement layouts draw the same bits.
+    """
+    from repro.comm.error_feedback import COMM_STATE_KEYS
+    std = fed.dp_noise_multiplier * fed.dp_clip / fed.clients_per_round
+    rkey = jax.random.fold_in(jax.random.PRNGKey(fed.dp_seed),
+                              round_index)
+    out: Dict[str, Tree] = {}
+    counter = 0
+    for name in sorted(mean_up):
+        entry = mean_up[name]
+        if name in COMM_STATE_KEYS:
+            out[name] = entry
+            continue
+        leaves, treedef = jax.tree_util.tree_flatten(entry)
+        noised = []
+        for leaf in leaves:
+            key = jax.random.fold_in(rkey, counter)
+            counter += 1
+            noise = std * jax.random.normal(key, leaf.shape, jnp.float32)
+            noised.append(
+                (leaf.astype(jnp.float32) + noise).astype(leaf.dtype))
+        entry = jax.tree_util.tree_unflatten(treedef, noised)
+        if name in NONNEG_ENTRIES:
+            entry = jax.tree.map(lambda x: jnp.maximum(x, 0.0), entry)
+        out[name] = entry
+    return out
+
+
+def resolve_dp_noise(fed, *, released_entries: int = 1):
+    """Turn ``FedConfig.target_epsilon`` into a concrete
+    ``dp_noise_multiplier`` at config time (bisection on the accountant,
+    at the run's own ``q = S/N``, R, delta and entry count). Returns the
+    config unchanged when DP is off or the multiplier is already set.
+    """
+    if not dp_enabled(fed) or fed.target_epsilon <= 0.0:
+        return fed
+    from repro.privacy.accountant import calibrate_noise_multiplier
+    sigma = calibrate_noise_multiplier(
+        fed.target_epsilon,
+        q=fed.clients_per_round / fed.num_clients,
+        rounds=fed.rounds, delta=fed.dp_delta,
+        released_entries=released_entries)
+    return dataclasses.replace(fed, dp_noise_multiplier=sigma,
+                               target_epsilon=0.0)

@@ -1,0 +1,197 @@
+"""Checkpointer: atomic writes, crash-safety of the ``latest`` pointer,
+and driver-level resume parity (train R == train R/2 + resume R/2,
+pipelined engine, both layouts).
+
+Set ``REPRO_LAYOUT=client_parallel|client_sequential`` to pin the layout
+matrix to one entry (the CI layout matrix does)."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.checkpoint import checkpointer as _ckpt
+
+_ENV_LAYOUT = os.environ.get("REPRO_LAYOUT")
+LAYOUTS = ([_ENV_LAYOUT] if _ENV_LAYOUT
+           else ["client_parallel", "client_sequential"])
+
+
+def _tree(scale=1.0):
+    return {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3) * scale,
+            "b": jnp.ones((4,), jnp.float32) * scale}
+
+
+# ------------------------------------------------------------- atomicity
+
+def test_save_restore_roundtrip_and_no_temp_files(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 3, params=_tree(), server_state={"t": jnp.zeros(())})
+    params, state, step = restore_checkpoint(
+        d, params_template=_tree(), state_template={"t": jnp.zeros(())})
+    assert step == 3
+    for a, b in zip(np.asarray(params["w"]).ravel(),
+                    np.asarray(_tree()["w"]).ravel()):
+        assert a == b
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")], \
+        "temp files must not survive a successful save"
+
+
+def test_mid_write_failure_preserves_previous_checkpoint(tmp_path,
+                                                         monkeypatch):
+    """A kill mid-.npz-write must leave the PREVIOUS complete checkpoint
+    in place with ``latest`` still pointing at it — no truncated payload
+    behind the pointer, no lingering temp files."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, params=_tree(1.0))
+
+    real_savez = np.savez
+
+    def dying_savez(f, **arrays):
+        f.write(b"partial garbage")          # half-written payload
+        raise KeyboardInterrupt("preempted")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(KeyboardInterrupt):
+        save_checkpoint(d, 2, params=_tree(2.0))
+    monkeypatch.setattr(np, "savez", real_savez)
+
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+    assert not os.path.exists(os.path.join(d, "ckpt_00000002.npz"))
+    with open(os.path.join(d, "latest")) as f:
+        assert f.read().strip() == "ckpt_00000001"
+    params, _, step = restore_checkpoint(d, params_template=_tree())
+    assert step == 1 and float(params["w"][1, 2]) == 5.0
+
+
+def test_latest_pointer_replaced_after_payload(tmp_path, monkeypatch):
+    """If the manifest write dies, ``latest`` must still name the old
+    complete checkpoint (pointer is replaced LAST)."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, params=_tree(1.0))
+    original = _ckpt._atomic_write
+    calls = {"n": 0}
+
+    def dying_on_json(path, write_fn):
+        if path.endswith(".json"):
+            calls["n"] += 1
+            raise RuntimeError("disk full")
+        return original(path, write_fn)
+
+    monkeypatch.setattr(_ckpt, "_atomic_write", dying_on_json)
+    with pytest.raises(RuntimeError, match="disk full"):
+        save_checkpoint(d, 2, params=_tree(2.0))
+    assert calls["n"] == 1
+    with open(os.path.join(d, "latest")) as f:
+        assert f.read().strip() == "ckpt_00000001"
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, params=_tree())
+    bad = {"w": jnp.zeros((3, 3)), "b": jnp.zeros((4,))}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_checkpoint(d, params_template=bad)
+
+
+# --------------------------------------------------------- driver resume
+
+def _preempt_at(src_dir, dst_dir, step):
+    """Copy a finished run's checkpoint dir, then trim it back to the
+    ``step`` checkpoint — exactly what a run killed right after saving
+    round ``step`` would have left behind (later payloads gone, ``latest``
+    pointing at the survivor)."""
+    import shutil
+    shutil.copytree(src_dir, dst_dir)
+    for f in os.listdir(dst_dir):
+        if f.startswith("ckpt_") and f not in (
+                f"ckpt_{step:08d}.npz", f"ckpt_{step:08d}.json"):
+            os.remove(os.path.join(dst_dir, f))
+    with open(os.path.join(dst_dir, "latest"), "w") as f:
+        f.write(f"ckpt_{step:08d}")
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_resume_parity_pipelined(layout, tmp_path):
+    """train 6r must equal train 3r + resume 3r — same per-round losses,
+    same final eval metrics, BIT-identical final checkpoint — through
+    the pipelined engine (prefetch + multi-round fusion). Preemption is
+    simulated by trimming the finished run's checkpoint dir back to the
+    round-3 save (the interrupted run's cosine horizon and data stream
+    are those of the FULL run, which a fresh rounds=3 run would not
+    reproduce)."""
+    from repro.launch.train import run_training
+    kw = dict(arch="vit-tiny-fl", algorithm="fedadamw", rounds=6,
+              num_clients=4, clients_per_round=2, local_steps=2,
+              batch_size=4, eval_every=3, seed=3, layout=layout,
+              prefetch_depth=2, rounds_per_call=3, ckpt_every=3)
+    d_full, d_res = str(tmp_path / "full"), str(tmp_path / "resumed")
+
+    h_full = run_training(**kw, ckpt_dir=d_full)
+    _preempt_at(d_full, d_res, step=3)
+    h_res = run_training(**kw, ckpt_dir=d_res, resume=True)
+
+    assert h_res["engine"]["start_round"] == 3
+    assert h_res["train_loss"] == h_full["train_loss"][3:]
+    assert h_res["test_acc"][-1] == h_full["test_acc"][-1]
+    assert h_res["test_loss"][-1] == h_full["test_loss"][-1]
+
+    a = dict(np.load(os.path.join(d_full, "ckpt_00000006.npz")))
+    b = dict(np.load(os.path.join(d_res, "ckpt_00000006.npz")))
+    assert a.keys() == b.keys()
+    for k in a:
+        assert a[k].tobytes() == b[k].tobytes(), k
+
+
+def test_resume_misaligned_block_plan_is_actionable(tmp_path):
+    from repro.launch.train import run_training
+    kw = dict(arch="vit-tiny-fl", algorithm="fedadamw", num_clients=4,
+              clients_per_round=2, local_steps=2, batch_size=4, seed=3)
+    d = str(tmp_path)
+    run_training(**kw, rounds=2, eval_every=2, ckpt_dir=d, ckpt_every=2)
+    with pytest.raises(ValueError, match="block plan"):
+        run_training(**kw, rounds=6, eval_every=5, ckpt_dir=d,
+                     resume=True, rounds_per_call=5)
+
+
+def test_resume_of_completed_run_is_a_clean_noop(tmp_path):
+    """Re-running the finished command with --resume (the supervisor
+    retry-until-success pattern) must return an empty-but-well-formed
+    history, not crash."""
+    from repro.launch.train import run_training
+    kw = dict(arch="vit-tiny-fl", algorithm="fedadamw", rounds=1,
+              num_clients=4, clients_per_round=2, local_steps=1,
+              batch_size=4, eval_every=1, seed=3, ckpt_dir=str(tmp_path),
+              ckpt_every=1)
+    run_training(**kw)
+    h = run_training(**kw, resume=True)
+    assert h["engine"]["start_round"] == 1
+    assert h["train_loss"] == [] and h["test_acc"] == []
+
+
+def test_unreachable_ckpt_every_is_actionable(tmp_path):
+    """A ckpt_every that never lands on a block boundary would silently
+    write no checkpoints for the whole sweep — it must fail at launch."""
+    from repro.launch.train import run_training
+    with pytest.raises(ValueError, match="block boundaries"):
+        run_training(arch="vit-tiny-fl", rounds=6, num_clients=4,
+                     clients_per_round=2, local_steps=1, batch_size=4,
+                     eval_every=5, rounds_per_call=5,
+                     ckpt_dir=str(tmp_path), ckpt_every=3)
+
+
+def test_resume_with_dp_continues_the_budget(tmp_path):
+    """A resumed DP run charges the completed rounds to the accountant:
+    its final epsilon equals the uninterrupted run's."""
+    from repro.launch.train import run_training
+    kw = dict(arch="vit-tiny-fl", algorithm="fedadamw", rounds=4,
+              num_clients=4, clients_per_round=2, local_steps=2,
+              batch_size=4, eval_every=2, seed=3, ckpt_every=2,
+              dp_clip=0.5, dp_noise_multiplier=1.0)
+    d_full, d_res = str(tmp_path / "a"), str(tmp_path / "b")
+    h_full = run_training(**kw, ckpt_dir=d_full)
+    _preempt_at(d_full, d_res, step=2)
+    h_res = run_training(**kw, ckpt_dir=d_res, resume=True)
+    assert h_res["epsilon"][-1] == h_full["epsilon"][-1]
+    assert h_res["train_loss"] == h_full["train_loss"][2:]

@@ -22,6 +22,7 @@ DOCTEST_MODULES = [
     "repro.launch.pipeline",
     "repro.metrics.deferred",
     "repro.data.sampler",
+    "repro.privacy.accountant",
 ]
 
 
@@ -48,8 +49,10 @@ def test_markdown_links_resolve():
 
 
 def test_docs_cover_required_pages():
-    for page in ("architecture.md", "paper_map.md", "scenarios.md"):
+    for page in ("architecture.md", "paper_map.md", "scenarios.md",
+                 "privacy.md"):
         assert (REPO / "docs" / page).exists(), f"docs/{page} missing"
-    # the README §Scenarios section must link into docs/
+    # the README §Scenarios / §Privacy sections must link into docs/
     readme = (REPO / "README.md").read_text()
     assert "docs/scenarios.md" in readme
+    assert "docs/privacy.md" in readme

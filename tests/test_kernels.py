@@ -160,3 +160,60 @@ def test_quantpack_leaf_int4_wire_size_and_bound():
     dec = _int4_decode_leaf(payload, leaf.shape, jnp.float32)
     err = float(jnp.max(jnp.abs(dec - leaf)))
     assert err <= float(payload["scale"]) + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# clipacc: fused per-client L2 clip + weighted accumulate (DP hot path)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.clipacc import clip_accumulate_3d, tree_clip_accumulate
+from repro.kernels.clipacc.clipacc import BLOCK_ROWS as CA_ROWS
+from repro.kernels.clipacc.clipacc import LANES as CA_LANES
+from repro.kernels.clipacc.ref import clip_accumulate_ref
+
+
+@pytest.mark.parametrize("s_n,tiles", [(1, 1), (2, 1), (3, 2), (4, 5)])
+def test_clipacc_matches_ref_bit_exact(s_n, tiles):
+    rng = np.random.default_rng(10 * s_n + tiles)
+    x = jnp.asarray(rng.normal(size=(s_n, tiles * CA_ROWS, CA_LANES)),
+                    jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, size=(s_n,)), jnp.float32)
+    for clip in (0.5, 1e3):  # biting and non-biting bounds
+        acc, f = clip_accumulate_3d(x, w, clip)
+        acc_r, f_r = clip_accumulate_ref(x, w, clip)
+        assert np.asarray(acc).tobytes() == np.asarray(acc_r).tobytes()
+        assert np.asarray(f).tobytes() == np.asarray(f_r).tobytes()
+
+
+def test_clipacc_factors_and_norm_semantics():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, CA_ROWS, CA_LANES)), jnp.float32)
+    clip = 0.25 * float(jnp.linalg.norm(x[0].ravel()))
+    w = jnp.asarray([1.0, 1.0], jnp.float32)
+    _, f = clip_accumulate_3d(x, w, clip)
+    norms = [float(jnp.linalg.norm(x[s].ravel())) for s in range(2)]
+    for s in range(2):
+        want = min(1.0, clip / norms[s])
+        assert float(f[s, 0]) == pytest.approx(want, rel=1e-5)
+    # huge bound: factors exactly 1, accumulate is the plain weighted sum
+    _, f1 = clip_accumulate_3d(x, w, 1e9)
+    np.testing.assert_array_equal(np.asarray(f1), np.ones((2, 1)))
+
+
+def test_tree_clip_accumulate_matches_jnp_clip_mean():
+    """The tree wrapper (arbitrary leaf shapes, zero padding) must equal
+    per-client joint-norm clipping followed by the uniform mean."""
+    from repro.privacy import clip_tree_by_l2
+    rng = np.random.default_rng(3)
+    s_n = 3
+    tree = {"a": jnp.asarray(rng.normal(size=(s_n, 37, 19)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(s_n, 130)), jnp.float32)}
+    w = jnp.full((s_n,), 1.0 / s_n, jnp.float32)
+    mean, factors = tree_clip_accumulate(tree, clip=0.5, weights=w)
+    clipped = jax.vmap(lambda t: clip_tree_by_l2(t, 0.5))(tree)
+    want = jax.tree.map(lambda u: u.mean(axis=0), clipped)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(mean[k]),
+                                   np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-7)
+    assert factors.shape == (s_n, 1) and float(factors.max()) < 1.0
