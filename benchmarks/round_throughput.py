@@ -41,6 +41,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import telemetry  # noqa: E402
 from repro.config import FedConfig, get_arch  # noqa: E402
 from repro.config.model_config import reduced_variant  # noqa: E402
 from repro.core import build_fed_state  # noqa: E402
@@ -108,26 +109,32 @@ class Bench:
         def one_pass():
             params, sstate = _copy(params0), _copy(sstate0)
             gen = self._gen()
-            pre = HostPrefetcher(gen, blocks, depth=depth,
-                                 stacked=engine.stacked)
-            pending = []
-            t0 = time.perf_counter()
-            if mode == "eager":
-                # faithful seed loop: blocking scalar fetch every round
-                for start, size, batches, cids in pre:
-                    params, sstate, m = engine.run_block(
-                        params, sstate, batches, cids, start, size)
-                    pending.append(float(m["loss_mean"]))
-            else:
-                for start, size, batches, cids in pre:
-                    params, sstate, m = engine.run_block(
-                        params, sstate, batches, cids, start, size)
-                    pending.append(m["loss_mean"])
-                jax.block_until_ready(pending)
-            wall = time.perf_counter() - t0
+            # per-pass telemetry session: the prefetcher's wait/produce
+            # counters register in it, and the report reads the SAME
+            # "prefetch/wait_s" accumulator run_training logs — one
+            # source of truth instead of a bench-local stopwatch
+            with telemetry.session() as tele:
+                pre = HostPrefetcher(gen, blocks, depth=depth,
+                                     stacked=engine.stacked)
+                pending = []
+                t0 = time.perf_counter()
+                if mode == "eager":
+                    # faithful seed loop: blocking scalar fetch per round
+                    for start, size, batches, cids in pre:
+                        params, sstate, m = engine.run_block(
+                            params, sstate, batches, cids, start, size)
+                        pending.append(float(m["loss_mean"]))
+                else:
+                    for start, size, batches, cids in pre:
+                        params, sstate, m = engine.run_block(
+                            params, sstate, batches, cids, start, size)
+                        pending.append(m["loss_mean"])
+                    jax.block_until_ready(pending)
+                wall = time.perf_counter() - t0
+                wait_s = tele.counters.value("prefetch/wait_s")
             losses = np.concatenate(
                 [np.atleast_1d(np.asarray(x)) for x in pending]).tolist()
-            return wall, pre.wait_s, losses, params
+            return wall, wait_s, losses, params
 
         meta = {"rounds_per_call": rpc, "prefetch_depth": depth,
                 "donate": donate}

@@ -108,6 +108,16 @@ class FedConfig:
     use_pallas_clipacc: bool = False   # fused clip+accumulate kernel for the
     #   delta entry (client_parallel, codec-free DP runs)
 
+    # --- telemetry (repro.telemetry, docs/observability.md): opt-in
+    # device-side diagnostics — per-round client-drift RMS and v̄
+    # cross-client variance (the paper's Figure-2 quantities) computed
+    # from scalar accumulators inside the round program and drained via
+    # the normal metrics path. Off (default) is statically gated: no
+    # metric keys are added and the traced program is byte-identical to
+    # the pre-telemetry engine. Host-side tracing/counters are NOT
+    # controlled here — they live outside the jitted program entirely.
+    telemetry_diagnostics: bool = False
+
     # gradient micro-batching inside each local step: the per-step batch is
     # split into this many chunks whose gradients are accumulated (identical
     # semantics — the mean of micro-gradients IS the batch gradient) so the

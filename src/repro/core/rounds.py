@@ -76,12 +76,15 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.config import FedConfig, ModelConfig
 from repro.core import partition
 from repro.core.fedadamw import FedAlgorithm, get_algorithm
 from repro.core.tree_util import tree_sub
 from repro.privacy import add_round_noise, clip_tree_by_l2, clip_upload_aux
 from repro.scenario import AGG_WEIGHTS_KEY, STEP_MASK_KEY
+from repro.telemetry.diagnostics import (attach_round_diagnostics,
+                                         local_diagnostics)
 
 Array = jax.Array
 
@@ -174,6 +177,7 @@ def make_local_phase(loss_fn: Callable, alg: FedAlgorithm, fed: FedConfig,
     time, which is the same math with no codec in between."""
     dp_on = fed.dp_clip > 0.0
     clip_delta_here = dp_on and not fed.use_pallas_clipacc
+    diag_on = fed.telemetry_diagnostics
 
     def local_phase(gparams, sstate, batches, lr_scale, client_id=None,
                     step_valid=None):
@@ -264,6 +268,13 @@ def make_local_phase(loss_fn: Callable, alg: FedAlgorithm, fed: FedConfig,
         up = alg.upload(delta, cstate_k, specs, fed)
         if dp_on:
             up = clip_upload_aux(up, fed.dp_clip)
+        if diag_on:
+            # per-client scalar accumulators for the Figure-2 gauges
+            # (repro.telemetry.diagnostics); measured on the upload's
+            # delta entry when present (post-codec, post-clip — i.e. the
+            # values actually aggregated), else the raw local delta
+            metrics = {**metrics,
+                       **local_diagnostics(up.get("delta", delta), up)}
         return up, metrics
 
     return local_phase
@@ -286,6 +297,7 @@ def make_round_fn(model, fed: FedConfig, specs, *,
     local_phase = make_local_phase(loss_fn, alg, fed, specs)
     dp_on = fed.dp_clip > 0.0
     dp_noise_on = dp_on and fed.dp_noise_multiplier > 0.0
+    diag_on = fed.telemetry_diagnostics
 
     def _lr_scale(round_index):
         if cosine_total_rounds:
@@ -297,48 +309,62 @@ def make_round_fn(model, fed: FedConfig, specs, *,
         def round_fn(gparams, sstate, batches, client_ids, round_index):
             batches, step_mask, agg_w = _pop_scenario(batches)
             lr_scale = _lr_scale(round_index)
-            if step_mask is None:
-                uploads, metrics = jax.vmap(
-                    local_phase, in_axes=(None, None, 0, None, 0),
-                    out_axes=0)(gparams, sstate, batches, lr_scale,
-                                client_ids)
-            else:
-                uploads, metrics = jax.vmap(
-                    local_phase, in_axes=(None, None, 0, None, 0, 0),
-                    out_axes=0)(gparams, sstate, batches, lr_scale,
-                                client_ids, step_mask)
+            # "trace/*" spans time PROGRAM CONSTRUCTION (this body runs
+            # on the host only while jit traces it) — they never touch
+            # the traced XLA program, so telemetry-off is structurally
+            # bit-exact
+            with telemetry.span("trace/local_phase", "trace"):
+                if step_mask is None:
+                    uploads, metrics = jax.vmap(
+                        local_phase, in_axes=(None, None, 0, None, 0),
+                        out_axes=0)(gparams, sstate, batches, lr_scale,
+                                    client_ids)
+                else:
+                    uploads, metrics = jax.vmap(
+                        local_phase, in_axes=(None, None, 0, None, 0, 0),
+                        out_axes=0)(gparams, sstate, batches, lr_scale,
+                                    client_ids, step_mask)
             if alg.commit is not None:
                 # write the sampled clients' per-client server state rows
                 # (control variates, EF residuals) before aggregation
-                pre_commit_keys = set(uploads)
-                sstate, uploads = alg.commit(sstate, uploads, client_ids,
-                                             specs, fed)
-                if dp_on:
-                    # entries commit introduced (SCAFFOLD dc) are clipped
-                    # per client pre-aggregation like everything else
-                    uploads = _clip_commit_entries(
-                        uploads, pre_commit_keys, fed.dp_clip,
-                        stacked=True)
-            if dp_on and fed.use_pallas_clipacc:
-                # fused per-client clip + uniform accumulate for the
-                # delta entry (one pass over the S x model-size stack;
-                # validation pins agg_weighting=uniform, so agg_w is
-                # None here)
-                from repro.kernels.clipacc import tree_clip_accumulate
-                s = jax.tree.leaves(uploads["delta"])[0].shape[0]
-                mean_delta, _ = tree_clip_accumulate(
-                    uploads["delta"], clip=fed.dp_clip,
-                    weights=jnp.full((s,), 1.0 / s, jnp.float32))
-                rest = {k: v for k, v in uploads.items() if k != "delta"}
-                mean_up = dict(_weighted_mean(rest, agg_w))
-                mean_up["delta"] = mean_delta
-            else:
-                mean_up = _weighted_mean(uploads, agg_w)
-            if dp_noise_on:
-                mean_up = add_round_noise(mean_up, fed, round_index)
-            new_params, new_state = alg.server_update(
-                gparams, sstate, mean_up, specs, fed)
+                with telemetry.span("trace/commit", "trace"):
+                    pre_commit_keys = set(uploads)
+                    sstate, uploads = alg.commit(sstate, uploads,
+                                                 client_ids, specs, fed)
+                    if dp_on:
+                        # entries commit introduced (SCAFFOLD dc) are
+                        # clipped per client pre-aggregation like
+                        # everything else
+                        uploads = _clip_commit_entries(
+                            uploads, pre_commit_keys, fed.dp_clip,
+                            stacked=True)
+            with telemetry.span("trace/aggregate", "trace"):
+                if dp_on and fed.use_pallas_clipacc:
+                    # fused per-client clip + uniform accumulate for the
+                    # delta entry (one pass over the S x model-size
+                    # stack; validation pins agg_weighting=uniform, so
+                    # agg_w is None here)
+                    from repro.kernels.clipacc import tree_clip_accumulate
+                    s = jax.tree.leaves(uploads["delta"])[0].shape[0]
+                    mean_delta, _ = tree_clip_accumulate(
+                        uploads["delta"], clip=fed.dp_clip,
+                        weights=jnp.full((s,), 1.0 / s, jnp.float32))
+                    rest = {k: v for k, v in uploads.items()
+                            if k != "delta"}
+                    mean_up = dict(_weighted_mean(rest, agg_w))
+                    mean_up["delta"] = mean_delta
+                else:
+                    mean_up = _weighted_mean(uploads, agg_w)
+                clean_up = mean_up  # pre-noise mean, for diagnostics
+                if dp_noise_on:
+                    mean_up = add_round_noise(mean_up, fed, round_index)
+            with telemetry.span("trace/server_update", "trace"):
+                new_params, new_state = alg.server_update(
+                    gparams, sstate, mean_up, specs, fed)
             out_metrics = jax.tree.map(lambda m: m.mean(axis=0), metrics)
+            if diag_on:
+                out_metrics = attach_round_diagnostics(out_metrics,
+                                                       clean_up)
             return new_params, new_state, out_metrics
 
     else:  # client_sequential
@@ -402,17 +428,27 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                                        jax.tree.map(lambda x: x[0], xs))
             acc0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                 acc_shape)
-            (sum_up, sum_m, n, sstate_k), _ = jax.lax.scan(
-                scan_client,
-                (acc0[0], acc0[1], jnp.zeros((), jnp.float32), sstate), xs)
-            inv = 1.0 / jnp.maximum(n, 1.0)
-            mean_up = (sum_up if weighted
-                       else jax.tree.map(lambda u: u * inv, sum_up))
-            if dp_noise_on:
-                mean_up = add_round_noise(mean_up, fed, round_index)
+            # trace-time span (see client_parallel): host cost of
+            # constructing the scanned client program, not device time
+            with telemetry.span("trace/local_phase", "trace"):
+                (sum_up, sum_m, n, sstate_k), _ = jax.lax.scan(
+                    scan_client,
+                    (acc0[0], acc0[1], jnp.zeros((), jnp.float32), sstate),
+                    xs)
+            with telemetry.span("trace/aggregate", "trace"):
+                inv = 1.0 / jnp.maximum(n, 1.0)
+                mean_up = (sum_up if weighted
+                           else jax.tree.map(lambda u: u * inv, sum_up))
+                clean_up = mean_up  # pre-noise mean, for diagnostics
+                if dp_noise_on:
+                    mean_up = add_round_noise(mean_up, fed, round_index)
             out_metrics = jax.tree.map(lambda m: m * inv, sum_m)
-            new_params, new_state = alg.server_update(
-                gparams, sstate_k, mean_up, specs, fed)
+            if diag_on:
+                out_metrics = attach_round_diagnostics(out_metrics,
+                                                       clean_up)
+            with telemetry.span("trace/server_update", "trace"):
+                new_params, new_state = alg.server_update(
+                    gparams, sstate_k, mean_up, specs, fed)
             return new_params, new_state, out_metrics
 
     return round_fn

@@ -31,6 +31,7 @@ from typing import Callable, Dict, Optional, Tuple, Union
 
 import numpy as np
 
+from repro import telemetry
 from repro.data.synthetic import SyntheticTask
 from repro.scenario import ParticipationScenario
 
@@ -190,11 +191,13 @@ class RoundBatchGenerator:
         """One round's ``({tokens, labels[, _step_mask, _agg_weights]}:
         (S, K, b, seq)}, cids: (S,))``."""
         r = self.rounds_produced
-        if self.scenario is None:
-            cids = sample_clients(self.num_clients, self.clients_per_round,
-                                  self.rng)
-        else:
-            cids = self.scenario.sample_round(r, self.rng)
+        with telemetry.span("sample"):
+            if self.scenario is None:
+                cids = sample_clients(self.num_clients,
+                                      self.clients_per_round, self.rng)
+            else:
+                cids = self.scenario.sample_round(r, self.rng)
+        telemetry.set_gauge("round/cohort_size", len(cids))
         batches = round_batches(self.task, cids, self.local_steps,
                                 self.batch_size, self.rng)
         if self.scenario is not None:

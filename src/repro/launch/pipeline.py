@@ -62,9 +62,12 @@ from typing import Callable, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import telemetry
 from repro.config import FedConfig
 from repro.core import make_multi_round_fn, make_round_fn
+from repro.scenario import STEP_MASK_KEY
 
 
 def eval_boundaries(rounds: int, eval_every: int) -> List[int]:
@@ -108,10 +111,13 @@ class HostPrefetcher:
     stacked:  produce (M, S, K, ...) stacks for the multi-round engine
               instead of (S, K, ...) single-round batches.
 
-    Attributes ``wait_s`` (time the consumer spent blocked obtaining the
+    Properties ``wait_s`` (time the consumer spent blocked obtaining the
     next block — the host-blocked critical path) and ``produce_s``
-    (total assembly + staging time wherever it ran) feed the
-    round-throughput benchmark.
+    (total assembly + staging time wherever it ran) are backed by the
+    ``prefetch/wait_s`` / ``prefetch/produce_s`` telemetry counters —
+    registered with the active :mod:`repro.telemetry` session when one
+    is installed — so the training driver, the round-throughput
+    benchmark, and the run-summary report all read ONE accumulator.
     """
 
     _SENTINEL = object()
@@ -123,26 +129,44 @@ class HostPrefetcher:
         self.depth = depth
         self.stacked = stacked
         self.to_device = to_device
-        self.wait_s = 0.0
-        self.produce_s = 0.0
+        # session-registered when a telemetry session is active at
+        # construction time, free-floating (still functional) otherwise
+        self._wait = telemetry.counter("prefetch/wait_s")
+        self._produce_c = telemetry.counter("prefetch/produce_s")
         self._stop = threading.Event()
         self._queue: Optional[queue.Queue] = None
         self._thread: Optional[threading.Thread] = None
 
+    @property
+    def wait_s(self) -> float:
+        return self._wait.value
+
+    @property
+    def produce_s(self) -> float:
+        return self._produce_c.value
+
     def _produce(self, start: int, size: int):
         t0 = time.perf_counter()
-        if self.stacked:
-            batches, cids = self.gen.next_rounds(size)
-        else:
-            assert size == 1, "single-round engine got a fused block"
-            batches, cids = self.gen.next_round()
-        if self.to_device:
-            batches = jax.device_put(batches)
-            cids = jax.device_put(cids)
-        else:
-            batches = {k: jnp.asarray(v) for k, v in batches.items()}
-            cids = jnp.asarray(cids)
-        self.produce_s += time.perf_counter() - t0
+        with telemetry.span("assemble"):
+            if self.stacked:
+                batches, cids = self.gen.next_rounds(size)
+            else:
+                assert size == 1, "single-round engine got a fused block"
+                batches, cids = self.gen.next_round()
+        if telemetry.active() is not None and isinstance(batches, dict) \
+                and STEP_MASK_KEY in batches:
+            # straggler step-validity fraction, measured on the host
+            # numpy mask BEFORE staging (no device sync)
+            telemetry.set_gauge("scenario/valid_step_frac",
+                                float(np.mean(batches[STEP_MASK_KEY])))
+        with telemetry.span("stage"):
+            if self.to_device:
+                batches = jax.device_put(batches)
+                cids = jax.device_put(cids)
+            else:
+                batches = {k: jnp.asarray(v) for k, v in batches.items()}
+                cids = jnp.asarray(cids)
+        self._produce_c.add(time.perf_counter() - t0)
         return start, size, batches, cids
 
     # -- background producer --------------------------------------------
@@ -155,6 +179,8 @@ class HostPrefetcher:
                 while not self._stop.is_set():
                     try:
                         self._queue.put(item, timeout=0.1)
+                        telemetry.set_gauge("prefetch/queue_depth",
+                                            self._queue.qsize())
                         break
                     except queue.Full:
                         continue
@@ -167,7 +193,7 @@ class HostPrefetcher:
             for start, size in self.blocks:
                 t0 = time.perf_counter()
                 item = self._produce(start, size)
-                self.wait_s += time.perf_counter() - t0
+                self._wait.add(time.perf_counter() - t0)
                 yield item
             return
         self._queue = queue.Queue(maxsize=self.depth)
@@ -178,7 +204,7 @@ class HostPrefetcher:
             while True:
                 t0 = time.perf_counter()
                 item = self._queue.get()
-                self.wait_s += time.perf_counter() - t0
+                self._wait.add(time.perf_counter() - t0)
                 if item is self._SENTINEL:
                     return
                 if isinstance(item, BaseException):
@@ -232,8 +258,10 @@ class RoundEngine:
         metric leaves are (size,)-stacked when the engine is fused,
         scalars otherwise. The inputs' params/sstate buffers are donated
         (consumed) when donation is on."""
-        if self.stacked:
-            return self.multi_round_fn(params, sstate, batches, client_ids,
-                                       jnp.asarray(start))
-        return self.round_fn(params, sstate, batches, client_ids,
-                             jnp.asarray(start))
+        with telemetry.span("dispatch"):
+            telemetry.add("rounds/completed", size)
+            if self.stacked:
+                return self.multi_round_fn(params, sstate, batches,
+                                           client_ids, jnp.asarray(start))
+            return self.round_fn(params, sstate, batches, client_ids,
+                                 jnp.asarray(start))

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.comm import codec_for, upload_wire_bytes
 from repro.config import FedConfig, get_arch
@@ -140,7 +141,9 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                  dp_seed: Optional[int] = None,
                  use_pallas_clipacc: bool = False,
                  ckpt_dir: str = "", ckpt_every: int = 0,
-                 resume: bool = False) -> Dict[str, list]:
+                 resume: bool = False,
+                 trace_dir: str = "",
+                 telemetry_diagnostics: bool = False) -> Dict[str, list]:
     cfg = get_arch(arch)
     if reduce_model:
         cfg = reduced_variant(cfg)
@@ -166,7 +169,8 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         dp_clip=dp_clip, dp_noise_multiplier=dp_noise_multiplier,
         target_epsilon=target_epsilon, dp_delta=dp_delta,
         dp_seed=seed if dp_seed is None else dp_seed,
-        use_pallas_clipacc=use_pallas_clipacc)
+        use_pallas_clipacc=use_pallas_clipacc,
+        telemetry_diagnostics=telemetry_diagnostics)
     model = build_model(cfg, compute_dtype=jnp.float32)
     task = make_task(task_kind, vocab_size=cfg.vocab_size, seq_len=seq_len,
                      num_samples=max(2048, 64 * num_clients),
@@ -246,14 +250,16 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                 "the settings the checkpoint was written under "
                 "(checkpoints land on block boundaries)")
         blocks = [(s, z) for s, z in blocks if s >= start_round]
-    prefetcher = HostPrefetcher(gen, blocks, depth=prefetch_depth,
-                                stacked=engine.stacked)
-    spool = MetricsSpool()
 
     # declare the eval-only columns up front so every CSV carries them
     # even before the first eval round lands
     fieldnames = ["round", "train_loss", "upload_mbytes", "test_loss",
                   "test_acc"] + (["epsilon"] if accountant else [])
+    if fed.telemetry_diagnostics:
+        fieldnames.append("client_drift_rms")
+        if any(k in upload_spec for k in ("v_mean", "v_full")):
+            fieldnames.append("v_bar_variance")
+    fieldnames.append("host_blocked_frac")  # eval rounds only
     logger = CSVLogger(log_path, fieldnames=fieldnames) if log_path else None
     meter = Meter()
     eval_fn = make_eval_fn(model)
@@ -261,7 +267,8 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
     # the same arrays
     eval_stacked = jax.device_put(task.test_split_batches(256))
     history = {"round": [], "train_loss": [], "test_acc": [],
-               "test_loss": [], "upload_mbytes": []}
+               "test_loss": [], "upload_mbytes": [],
+               "host_blocked_frac": []}
     if accountant is not None:
         history["epsilon"] = []
 
@@ -272,6 +279,20 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
     # evaluation prices every round.
     codec = codec_for(fed.algorithm)
     comm_bytes = upload_wire_bytes(upload_spec, codec)
+
+    # telemetry session (repro.telemetry, docs/observability.md): when a
+    # --trace-dir is given, install the session BEFORE the prefetcher is
+    # built so its wait/produce counters register in the session's
+    # registry and the producer thread's assemble/stage spans record.
+    # Without one, span() is a shared no-op and every counter below is a
+    # free-floating accumulator — host behavior is otherwise identical,
+    # and the device program never depends on the session at all.
+    tele = telemetry.session(trace_dir) if trace_dir else None
+    if tele is not None:
+        telemetry.install(tele)
+    prefetcher = HostPrefetcher(gen, blocks, depth=prefetch_depth,
+                                stacked=engine.stacked)
+    spool = MetricsSpool()
     t0 = time.perf_counter()
     try:
         for start, size, batches, cids in prefetcher:
@@ -279,28 +300,45 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                 params, sstate, batches, cids, start, size)
             spool.append(start, metrics, size)
             r_end = start + size - 1
+            telemetry.add("comm/wire_bytes_total",
+                          comm_bytes * int(np.shape(cids)[-1]) * size)
             if accountant is not None:
                 # charge the rounds of this block at the cohort size the
                 # participation engine ACTUALLY produced
                 accountant.step(int(np.shape(cids)[-1]), rounds=size)
             if ckpt_dir and ckpt_every and (r_end + 1) % ckpt_every == 0:
-                save_checkpoint(ckpt_dir, r_end + 1, params=params,
-                                server_state=sstate,
-                                extra={"algorithm": fed.algorithm})
+                with telemetry.span("commit"):
+                    save_checkpoint(ckpt_dir, r_end + 1, params=params,
+                                    server_state=sstate,
+                                    extra={"algorithm": fed.algorithm})
             if r_end not in eval_rounds:
                 continue
             # eval boundary: one blocking fetch of everything spooled,
             # then the exact full-split eval on the current params
-            eval_rec = evaluate(model, params, task, eval_fn=eval_fn,
-                                stacked=eval_stacked)
+            with telemetry.span("eval"):
+                eval_rec = evaluate(model, params, task, eval_fn=eval_fn,
+                                    stacked=eval_stacked)
             if accountant is not None:
                 eval_rec["epsilon"] = accountant.epsilon()
-            for r, m in spool.flush():
+                telemetry.set_gauge("dp/epsilon", eval_rec["epsilon"])
+            # fraction of wall time the consumer spent blocked on host
+            # batch assembly/staging — same counter the prefetcher and
+            # the round-throughput benchmark read
+            hbf = prefetcher.wait_s / max(time.perf_counter() - t0, 1e-9)
+            eval_rec["host_blocked_frac"] = hbf
+            history["host_blocked_frac"].append(hbf)
+            with telemetry.span("flush"):
+                flushed = spool.flush()
+            for r, m in flushed:
                 loss = m["loss_mean"]
                 meter.update(loss)
                 history["train_loss"].append(loss)  # EVERY round
                 rec = {"round": r, "train_loss": loss,
                        "upload_mbytes": comm_bytes / 1e6}
+                for k in ("client_drift_rms", "v_bar_variance"):
+                    if k in m:
+                        rec[k] = m[k]
+                        history.setdefault(k, []).append(m[k])
                 if r == r_end:
                     rec.update(eval_rec)
                     history["round"].append(r)
@@ -326,12 +364,18 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
             pass  # never mask the original in-flight exception
         if logger:
             logger.close()
+        if tele is not None:
+            # export even on a crashed run: the partial trace is often
+            # exactly what you need to debug the crash
+            telemetry.uninstall(tele)
+            tele.export()
     history["engine"] = {
         "rounds": rounds, "wall_s": time.perf_counter() - t0,
         "prefetch_depth": prefetch_depth,
         "rounds_per_call": fed.rounds_per_call, "donate": donate,
         "host_wait_s": prefetcher.wait_s, "produce_s": prefetcher.produce_s,
         "start_round": start_round,
+        "trace_dir": trace_dir,
     }
     if fed.dp_enabled():
         history["engine"]["dp"] = {
@@ -425,6 +469,14 @@ def main() -> None:
                     help="restore the latest checkpoint in --ckpt-dir "
                          "and continue; trajectory-identical to an "
                          "uninterrupted run")
+    ap.add_argument("--trace-dir", default="",
+                    help="write a Chrome-trace/Perfetto trace.json plus "
+                         "counters.json of the run here (empty = no "
+                         "tracing; see docs/observability.md)")
+    ap.add_argument("--diagnostics", action="store_true",
+                    help="compute per-round client-drift RMS and v-bar "
+                         "cross-client variance on device (the paper's "
+                         "Figure-2 quantities) and log them per round")
     args = ap.parse_args()
     t0 = time.time()
     hist = run_training(
@@ -451,7 +503,9 @@ def main() -> None:
         target_epsilon=args.target_epsilon, dp_delta=args.dp_delta,
         dp_seed=args.dp_seed, use_pallas_clipacc=args.pallas_clipacc,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-        resume=args.resume)
+        resume=args.resume,
+        trace_dir=args.trace_dir,
+        telemetry_diagnostics=args.diagnostics)
     out = {"wall_s": round(time.time() - t0, 1)}
     if hist["train_loss"]:
         out.update(

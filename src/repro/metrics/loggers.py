@@ -15,7 +15,11 @@ class CSVLogger:
     superset up front, or let a later row introduce new keys — the file
     is rewritten with the extended header so no column is silently
     dropped (training loops log eval-only keys like ``test_acc`` on a
-    subset of rounds)."""
+    subset of rounds).
+
+    Usable as a context manager; ``close()`` is idempotent and every
+    ``log()`` flushes, so a crashed run leaves at worst a complete,
+    parseable file missing only post-crash rows."""
 
     @staticmethod
     def _writer(fh):
@@ -69,19 +73,38 @@ class CSVLogger:
             self._fh.close()
             self._fh = None
 
+    def __enter__(self) -> "CSVLogger":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
 
 class JSONLLogger:
+    """Line-delimited JSON logger; context manager, idempotent close,
+    flushed per record (same crash guarantees as :class:`CSVLogger`)."""
+
     def __init__(self, path: str):
         self.path = path
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self._fh = open(path, "w")
 
     def log(self, record: Dict[str, Any]) -> None:
+        if self._fh is None:
+            raise ValueError(f"JSONLLogger {self.path!r} is closed")
         self._fh.write(json.dumps(record) + "\n")
         self._fh.flush()
 
     def close(self) -> None:
-        self._fh.close()
+        if self._fh:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "JSONLLogger":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
 
 
 class Meter:

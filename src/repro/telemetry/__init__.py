@@ -1,0 +1,126 @@
+"""Telemetry: round-lifecycle tracing, counters/gauges, diagnostics.
+
+One module-level **session** holds a :class:`Tracer` plus a
+:class:`Registry`.  It is installed with::
+
+    with telemetry.session(trace_dir="out/run1") as tele:
+        ...   # spans + counters record; exported on exit
+
+or left uninstalled, in which case every ``span()`` returns a shared
+no-op and ``counter()``/``gauge()`` hand out *free-floating* metrics
+(still usable by the caller that holds the reference, just not
+aggregated or exported).  A plain module-level global — not a
+contextvar — is deliberate: the ``HostPrefetcher`` producer *thread*
+must see the same session as the training loop, and contextvars do not
+propagate to already-running threads.
+
+Device-side diagnostics (the paper's Figure-2 quantities) live in
+:mod:`repro.telemetry.diagnostics` and are gated statically by
+``FedConfig.telemetry_diagnostics`` — off means the traced XLA program
+is byte-identical to an engine built before this subsystem existed.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Optional
+
+from repro.telemetry.registry import Counter, Gauge, Registry
+from repro.telemetry.trace import NULL_SPAN, Tracer, aggregate_spans
+
+__all__ = [
+    "Counter", "Gauge", "Registry", "Tracer", "aggregate_spans",
+    "Session", "session", "install", "uninstall", "active",
+    "span", "counter", "gauge", "add", "set_gauge",
+    "TRACE_FILE", "COUNTERS_FILE",
+]
+
+TRACE_FILE = "trace.json"
+COUNTERS_FILE = "counters.json"
+
+
+class Session:
+    """A tracer + registry pair with optional on-exit export."""
+
+    def __init__(self, trace_dir: Optional[str] = None):
+        self.trace_dir = trace_dir
+        self.tracer = Tracer()
+        self.counters = Registry()
+
+    # -- context manager: install as the active session, export on exit
+    def __enter__(self) -> "Session":
+        install(self)
+        return self
+
+    def __exit__(self, *exc: object) -> bool:
+        uninstall(self)
+        self.export()
+        return False
+
+    def export(self) -> Optional[str]:
+        """Write trace.json + counters.json to ``trace_dir`` (if set)."""
+        if not self.trace_dir:
+            return None
+        os.makedirs(self.trace_dir, exist_ok=True)
+        self.tracer.export(os.path.join(self.trace_dir, TRACE_FILE))
+        self.counters.export(os.path.join(self.trace_dir, COUNTERS_FILE))
+        return self.trace_dir
+
+
+_LOCK = threading.Lock()
+_ACTIVE: Optional[Session] = None
+
+
+def session(trace_dir: Optional[str] = None) -> Session:
+    """New session; use as ``with telemetry.session(...) as tele:``."""
+    return Session(trace_dir)
+
+
+def install(sess: Session) -> None:
+    global _ACTIVE
+    with _LOCK:
+        _ACTIVE = sess
+
+
+def uninstall(sess: Session) -> None:
+    """Deactivate ``sess`` if it is the active session (idempotent)."""
+    global _ACTIVE
+    with _LOCK:
+        if _ACTIVE is sess:
+            _ACTIVE = None
+
+
+def active() -> Optional[Session]:
+    return _ACTIVE
+
+
+def span(name: str, cat: str = "host"):
+    """Span against the active session, or a shared no-op when none."""
+    sess = _ACTIVE
+    return NULL_SPAN if sess is None else sess.tracer.span(name, cat)
+
+
+def counter(name: str) -> Counter:
+    """Named counter from the active session, else free-floating."""
+    sess = _ACTIVE
+    return Counter(name) if sess is None else sess.counters.counter(name)
+
+
+def gauge(name: str) -> Gauge:
+    """Named gauge from the active session, else free-floating."""
+    sess = _ACTIVE
+    return Gauge(name) if sess is None else sess.counters.gauge(name)
+
+
+def add(name: str, x: float) -> None:
+    """Add to a session counter; no-op when no session is active."""
+    sess = _ACTIVE
+    if sess is not None:
+        sess.counters.counter(name).add(x)
+
+
+def set_gauge(name: str, x: float) -> None:
+    """Set a session gauge; no-op when no session is active."""
+    sess = _ACTIVE
+    if sess is not None:
+        sess.counters.gauge(name).set(x)

@@ -1,0 +1,108 @@
+"""Live model-quality diagnostics: the paper's Figure-2 quantities.
+
+FedAdamW's analysis (Theorem 1) bounds client drift ``||Δᵢ − Δ̄||`` and
+its Figure 2 plots (a) the cross-client variance of the second-moment
+mean v̄ and (b) the client-drift norm over rounds.  The repo could only
+measure them post-hoc (``benchmarks/fig2_variance_drift.py`` re-runs
+local phases outside the engine); these helpers compute per-round
+equivalents *inside* the jitted round program from scalar accumulators,
+so they ride the existing metrics path (``MetricsSpool`` — no extra
+host syncs) in both client layouts.
+
+Per-client scalars added by ``make_local_phase`` when
+``fed.telemetry_diagnostics`` is on:
+
+* ``diag_delta_sqnorm`` — ``||Δᵢ||²`` of the client's raw local delta;
+* ``diag_v_sqnorm``     — ``||vᵢ||²`` of the client's uploaded second
+  moment (``v_mean`` block means or ``v_full``), when the algorithm
+  uploads one.
+
+Both layouts reduce metrics with the *uniform client mean* (vmap+mean
+in ``client_parallel``, online sum x 1/S in ``client_sequential``), so
+after reduction the metrics hold ``E_i[||xᵢ||²]``.  The round function
+then calls :func:`attach_round_diagnostics` with the **pre-noise**
+aggregated upload and the identity ``E‖x − x̄‖² = E‖x‖² − ‖x̄‖²``
+(uniform mean) turns the scalars into:
+
+* ``client_drift_rms``  = sqrt(max(0, E_i‖Δᵢ‖² − ‖Δ̄‖²))
+  — the RMS of Figure 2(b)'s drift ‖Δᵢ − Δ̄‖;
+* ``v_bar_variance``    = max(0, E_i‖vᵢ‖² − ‖v̄‖²) / numel(v)
+  — per-element cross-client variance of the v-upload, Figure 2(a).
+
+The ``max(0, ·)`` clamp guards float cancellation and the two engine
+paths where the decomposition is approximate by design: upload codecs
+(Δ̄ averages *decoded* deltas while ‖Δᵢ‖² measures the raw ones) and the
+fused clipacc kernel (Δ̄ is clipped, the per-client scalars are not).
+Weighted aggregation scenarios reuse the uniform-mean identity as an
+approximation — the gauges are diagnostics, not training inputs.
+
+Everything here is statically gated: with ``telemetry_diagnostics``
+off (the default) no key is added and the traced program is exactly
+the pre-telemetry engine's.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+# upload entries that carry the second-moment payload, by algorithm:
+# fedadamw uploads "v_mean" (block means) or "v_full"; fedlada "v_full"
+V_ENTRY_KEYS = ("v_mean", "v_full")
+
+DELTA_SQNORM_KEY = "diag_delta_sqnorm"
+V_SQNORM_KEY = "diag_v_sqnorm"
+
+# metric keys attach_round_diagnostics emits (train.py logs these)
+DIAGNOSTIC_KEYS = ("client_drift_rms", "v_bar_variance")
+
+
+def tree_sqnorm(tree) -> jax.Array:
+    """Scalar f32 squared L2 norm over every leaf of a pytree."""
+    leaves = jax.tree.leaves(tree)
+    total = jnp.zeros((), jnp.float32)
+    for leaf in leaves:
+        x = leaf.astype(jnp.float32)
+        total = total + jnp.sum(x * x)
+    return total
+
+
+def tree_numel(tree) -> int:
+    """Static total element count over a pytree's leaves."""
+    return sum(leaf.size for leaf in jax.tree.leaves(tree))
+
+
+def v_entry_key(upload) -> str:
+    """Name of the second-moment entry in an upload dict ('' if none).
+    Key presence is pytree structure, so this is a static decision."""
+    for k in V_ENTRY_KEYS:
+        if k in upload:
+            return k
+    return ""
+
+
+def local_diagnostics(delta, upload) -> Dict[str, jax.Array]:
+    """Per-client scalar accumulators added to the metrics dict."""
+    out = {DELTA_SQNORM_KEY: tree_sqnorm(delta)}
+    vk = v_entry_key(upload)
+    if vk:
+        out[V_SQNORM_KEY] = tree_sqnorm(upload[vk])
+    return out
+
+
+def attach_round_diagnostics(metrics: Dict[str, jax.Array], mean_up
+                             ) -> Dict[str, jax.Array]:
+    """Replace the client-meaned sqnorm accumulators with the round
+    gauges, using the PRE-noise aggregated upload ``mean_up``."""
+    out = dict(metrics)
+    mean_sq = out.pop(DELTA_SQNORM_KEY)
+    drift_var = jnp.maximum(mean_sq - tree_sqnorm(mean_up["delta"]), 0.0)
+    out["client_drift_rms"] = jnp.sqrt(drift_var)
+    mean_vsq = out.pop(V_SQNORM_KEY, None)
+    if mean_vsq is not None:
+        vk = v_entry_key(mean_up)
+        vbar = mean_up[vk]
+        var = jnp.maximum(mean_vsq - tree_sqnorm(vbar), 0.0)
+        out["v_bar_variance"] = var / tree_numel(vbar)
+    return out

@@ -1,0 +1,119 @@
+"""Counters/gauges registry unifying the repo's scattered run metrics.
+
+``Counter`` is a monotonically-added float (thread-safe: the prefetcher
+producer thread adds to it); ``Gauge`` is a last-value float.  A
+``Registry`` names them; asking for an existing name returns the same
+object (prometheus-style), so two components that agree on a name share
+one accumulator — that is the "one source of truth" contract between
+``HostPrefetcher.wait_s`` and ``benchmarks/round_throughput.py``.
+
+Canonical names (see docs/observability.md for the full catalog):
+
+====================================  =======  ==========================
+name                                  kind     meaning
+====================================  =======  ==========================
+``prefetch/wait_s``                   counter  consumer blocked on queue
+``prefetch/produce_s``                counter  producer assemble+stage
+``prefetch/queue_depth``              gauge    queue fill after last put
+``scenario/valid_step_frac``          gauge    straggler-valid step frac
+``round/cohort_size``                 gauge    sampled clients last round
+``rounds/completed``                  counter  rounds dispatched
+``comm/wire_bytes_total``             counter  uploaded wire bytes
+``dp/epsilon``                        gauge    RDP ε at last eval round
+====================================  =======  ==========================
+
+Usage::
+
+    >>> from repro.telemetry.registry import Registry
+    >>> reg = Registry()
+    >>> reg.counter("prefetch/wait_s").add(0.25)
+    >>> reg.counter("prefetch/wait_s") is reg.counter("prefetch/wait_s")
+    True
+    >>> reg.gauge("round/cohort_size").set(8)
+    >>> reg.snapshot()
+    {'prefetch/wait_s': 0.25, 'round/cohort_size': 8.0}
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Union
+
+
+class Counter:
+    """Thread-safe monotonically-increasing float."""
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def add(self, x: float) -> None:
+        with self._lock:
+            self._value += float(x)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Gauge:
+    """Last-written float value."""
+    __slots__ = ("name", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0.0
+
+    def set(self, x: float) -> None:
+        self._value = float(x)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Registry:
+    """Named counters and gauges; name collisions return the same
+    object so independent components can share an accumulator."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._metrics: Dict[str, Union[Counter, Gauge]] = {}
+
+    def _get(self, name: str, cls):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"telemetry metric {name!r} already registered as "
+                    f"{type(m).__name__}, requested {cls.__name__}")
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def value(self, name: str, default: float = 0.0) -> float:
+        m = self._metrics.get(name)
+        return default if m is None else m.value
+
+    def snapshot(self) -> Dict[str, float]:
+        """{name: value} for every registered counter/gauge."""
+        with self._lock:
+            return {k: v.value for k, v in sorted(self._metrics.items())}
+
+    def export(self, path: str) -> str:
+        """Write the snapshot to ``path`` as JSON; returns path."""
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(self.snapshot(), fh, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+        return path

@@ -1,0 +1,126 @@
+"""Chrome-trace span recording for the round lifecycle.
+
+Zero-dependency (stdlib only) tracer producing Chrome-trace / Perfetto
+JSON.  Spans are *host-side* timers: ``with span("dispatch"): ...``
+records one complete ("X") event with microsecond ``ts``/``dur``
+against the calling thread's id, so producer-thread work from
+``HostPrefetcher`` shows up on its own track in the viewer.
+
+Spans never touch the traced XLA program.  Inside jitted code bodies
+(``core/rounds.py``) spans fire only while jax *traces* the function —
+they time program construction, not device execution — and are emitted
+under the ``trace`` category so the viewer groups them separately.
+
+When no session is installed (`install()` not called), ``span()``
+returns a shared no-op context manager: tracing fully off costs one
+global read per call site and records nothing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+
+class _NullSpan:
+    """Shared no-op context manager returned when tracing is off."""
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc: Any) -> bool:
+        return False
+
+
+NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """One open span; records an "X" complete event on exit."""
+    __slots__ = ("_tracer", "_name", "_cat", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str):
+        self._tracer = tracer
+        self._name = name
+        self._cat = cat
+
+    def __enter__(self) -> "_Span":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc: Any) -> bool:
+        self._tracer._record(self._name, self._cat, self._t0,
+                             time.perf_counter())
+        return False
+
+
+class Tracer:
+    """Collects spans from any thread; exports Chrome-trace JSON."""
+
+    def __init__(self) -> None:
+        self.pid = os.getpid()
+        self._t0 = time.perf_counter()
+        self._lock = threading.Lock()
+        self._events: List[Dict[str, Any]] = []
+        self._threads_seen: Dict[int, str] = {}
+
+    def span(self, name: str, cat: str = "host") -> _Span:
+        return _Span(self, name, cat)
+
+    def _record(self, name: str, cat: str, t0: float, t1: float) -> None:
+        thread = threading.current_thread()
+        tid = thread.ident or 0
+        ev = {
+            "name": name, "cat": cat, "ph": "X",
+            "ts": (t0 - self._t0) * 1e6, "dur": (t1 - t0) * 1e6,
+            "pid": self.pid, "tid": tid,
+        }
+        with self._lock:
+            if tid not in self._threads_seen:
+                self._threads_seen[tid] = thread.name
+            self._events.append(ev)
+
+    def events(self) -> List[Dict[str, Any]]:
+        """Snapshot of recorded span events (no metadata events)."""
+        with self._lock:
+            return list(self._events)
+
+    def trace_json(self) -> Dict[str, Any]:
+        """Chrome-trace document: metadata events + complete events."""
+        with self._lock:
+            meta = [{
+                "name": "thread_name", "ph": "M", "pid": self.pid,
+                "tid": tid, "args": {"name": tname},
+            } for tid, tname in sorted(self._threads_seen.items())]
+            return {"traceEvents": meta + list(self._events),
+                    "displayTimeUnit": "ms"}
+
+    def export(self, path: str) -> str:
+        """Write the trace document to ``path`` (JSON); returns path."""
+        doc = self.trace_json()
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(doc, fh)
+        os.replace(tmp, path)
+        return path
+
+
+def aggregate_spans(events: List[Dict[str, Any]]
+                    ) -> Dict[str, Dict[str, float]]:
+    """Per-span-name stats {name: {count, total_ms, mean_ms, max_ms}}."""
+    agg: Dict[str, Dict[str, float]] = {}
+    for ev in events:
+        if ev.get("ph") != "X":
+            continue
+        st = agg.setdefault(ev["name"],
+                            {"count": 0.0, "total_ms": 0.0, "max_ms": 0.0})
+        dur_ms = ev["dur"] / 1e3
+        st["count"] += 1
+        st["total_ms"] += dur_ms
+        st["max_ms"] = max(st["max_ms"], dur_ms)
+    for st in agg.values():
+        st["mean_ms"] = st["total_ms"] / st["count"]
+    return agg

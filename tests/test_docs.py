@@ -23,6 +23,7 @@ DOCTEST_MODULES = [
     "repro.metrics.deferred",
     "repro.data.sampler",
     "repro.privacy.accountant",
+    "repro.telemetry.registry",
 ]
 
 
@@ -50,9 +51,11 @@ def test_markdown_links_resolve():
 
 def test_docs_cover_required_pages():
     for page in ("architecture.md", "paper_map.md", "scenarios.md",
-                 "privacy.md"):
+                 "privacy.md", "observability.md"):
         assert (REPO / "docs" / page).exists(), f"docs/{page} missing"
-    # the README §Scenarios / §Privacy sections must link into docs/
+    # the README §Scenarios / §Privacy / §Observability sections must
+    # link into docs/
     readme = (REPO / "README.md").read_text()
     assert "docs/scenarios.md" in readme
     assert "docs/privacy.md" in readme
+    assert "docs/observability.md" in readme

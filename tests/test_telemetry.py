@@ -1,0 +1,431 @@
+"""Telemetry subsystem: trace-export schema, counter registry
+semantics, telemetry-off bit-exactness in both layouts (pipelined +
+fused), diagnostics correctness against a direct recomputation, logger
+lifecycle hardening, and the enabled-telemetry overhead bound."""
+import csv
+import dataclasses
+import json
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import build_tiny
+from repro import telemetry
+from repro.config import FedConfig
+from repro.core import build_fed_state
+from repro.core.rounds import make_local_phase
+from repro.data import RoundBatchGenerator, make_task
+from repro.launch.pipeline import (HostPrefetcher, RoundEngine,
+                                   plan_round_blocks)
+from repro.metrics import CSVLogger, JSONLLogger, MetricsSpool
+
+# honor the CI layout matrix (same pattern as test_scenario.py)
+_ENV_LAYOUT = os.environ.get("REPRO_LAYOUT", "")
+LAYOUTS = ([_ENV_LAYOUT] if _ENV_LAYOUT
+           else ["client_parallel", "client_sequential"])
+
+ROUNDS, EVERY = 6, 3
+
+
+def _task(cfg, num_clients=4, seq_len=16, num_samples=256, seed=0):
+    return make_task("class_lm", vocab_size=cfg.vocab_size, seq_len=seq_len,
+                     num_samples=num_samples, num_clients=num_clients,
+                     dirichlet_alpha=0.6, seed=seed)
+
+
+def _gen(task, seed=7, local_steps=2, batch_size=2):
+    return RoundBatchGenerator(task, num_clients=task.num_clients,
+                               clients_per_round=2, local_steps=local_steps,
+                               batch_size=batch_size, rng=seed)
+
+
+def _drive(engine, params, sstate, gen, blocks, depth):
+    pre = HostPrefetcher(gen, blocks, depth=depth, stacked=engine.stacked)
+    spool = MetricsSpool()
+    for start, size, batches, cids in pre:
+        params, sstate, m = engine.run_block(params, sstate, batches, cids,
+                                             start, size)
+        spool.append(start, m, size)
+    return spool.flush(), params
+
+
+# ------------------------------------------------------- tracer / registry
+
+def test_tracer_records_matched_complete_events():
+    tr = telemetry.Tracer()
+    with tr.span("outer"):
+        with tr.span("inner", "trace"):
+            pass
+    with pytest.raises(RuntimeError):
+        with tr.span("raising"):
+            raise RuntimeError("boom")
+    evs = tr.events()
+    # every span produced exactly one complete event — begin/end matched
+    # by construction, including through the exception path
+    assert [e["name"] for e in evs] == ["inner", "outer", "raising"]
+    for e in evs:
+        assert e["ph"] == "X"
+        assert e["dur"] >= 0 and e["ts"] >= 0
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+    # nesting: inner lies within outer on the same tid
+    inner, outer = evs[0], evs[1]
+    assert inner["tid"] == outer["tid"]
+    assert inner["ts"] >= outer["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-6
+
+
+def test_tracer_thread_metadata_and_export(tmp_path):
+    tr = telemetry.Tracer()
+
+    def worker():
+        with tr.span("producer-work"):
+            time.sleep(0.001)
+
+    t = threading.Thread(target=worker, name="my-producer")
+    with tr.span("main-work"):
+        t.start()
+        t.join()
+    path = tr.export(str(tmp_path / "trace.json"))
+    doc = json.load(open(path))
+    evs = doc["traceEvents"]
+    spans = [e for e in evs if e["ph"] == "X"]
+    metas = [e for e in evs if e["ph"] == "M"]
+    assert len({e["tid"] for e in spans}) == 2
+    names = {m["args"]["name"] for m in metas}
+    assert "my-producer" in names
+
+
+def test_registry_shares_and_snapshots():
+    reg = telemetry.Registry()
+    a = reg.counter("x")
+    assert reg.counter("x") is a  # collision -> same accumulator
+    a.add(1.5)
+    reg.counter("x").add(1.0)
+    reg.gauge("g").set(3.0)
+    assert reg.snapshot() == {"x": 2.5, "g": 3.0}
+    assert reg.value("missing", default=-1.0) == -1.0
+    with pytest.raises(TypeError):
+        reg.gauge("x")  # name already bound to a Counter
+
+
+def test_session_module_functions_noop_without_session():
+    assert telemetry.active() is None
+    # shared no-op span, free-floating counters: no crash, no state
+    with telemetry.span("nothing"):
+        pass
+    telemetry.add("c", 1.0)
+    telemetry.set_gauge("g", 2.0)
+    c = telemetry.counter("free")
+    c.add(4.0)
+    assert c.value == 4.0
+    with telemetry.session() as tele:
+        assert telemetry.active() is tele
+        telemetry.add("c", 1.0)
+        assert tele.counters.value("c") == 1.0
+    assert telemetry.active() is None
+
+
+# ------------------------------------------- bit-exactness, both layouts
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_disabled_telemetry_bit_exact(layout):
+    """A live tracing session (host spans + counters) and the default
+    no-session path must produce BIT-identical trajectories — pipelined
+    and rounds_per_call-fused. The device program never depends on host
+    telemetry; this guards that statically gated claim at runtime."""
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg)
+    fed = FedConfig(algorithm="fedadamw", num_clients=4,
+                    clients_per_round=2, local_steps=2, lr=1e-3,
+                    layout=layout, sequential_clients=2)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    engine = RoundEngine(model, fed, specs, alg=alg,
+                         cosine_total_rounds=ROUNDS, donate=False)
+    fused_fed = dataclasses.replace(fed, rounds_per_call=3)
+    fused = RoundEngine(model, fused_fed, specs, alg=alg,
+                        cosine_total_rounds=ROUNDS, donate=False)
+    blocks1 = plan_round_blocks(ROUNDS, EVERY, 1)
+    blocks3 = plan_round_blocks(ROUNDS, EVERY, 3)
+
+    base, p_base = _drive(engine, params, sstate, _gen(task), blocks1, 2)
+    with telemetry.session():
+        traced, p_traced = _drive(engine, params, sstate, _gen(task),
+                                  blocks1, 2)
+        traced_f, p_traced_f = _drive(fused, params, sstate, _gen(task),
+                                      blocks3, 2)
+    base_f, p_base_f = _drive(fused, params, sstate, _gen(task), blocks3, 2)
+
+    assert [m for _, m in base] == [m for _, m in traced]
+    assert [m for _, m in base_f] == [m for _, m in traced_f]
+    for a, b in zip(jax.tree.leaves(p_base), jax.tree.leaves(p_traced)):
+        assert jnp.array_equal(a, b)
+    for a, b in zip(jax.tree.leaves(p_base_f), jax.tree.leaves(p_traced_f)):
+        assert jnp.array_equal(a, b)
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_diagnostics_do_not_perturb_training(layout):
+    """telemetry_diagnostics adds metric outputs but must leave the
+    params/loss trajectory bit-identical: the gauges only READ the
+    uploads, never feed back into the update."""
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg)
+    fed = FedConfig(algorithm="fedadamw", num_clients=4,
+                    clients_per_round=2, local_steps=2, lr=1e-3,
+                    layout=layout, sequential_clients=2)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    diag_fed = dataclasses.replace(fed, telemetry_diagnostics=True)
+    plain = RoundEngine(model, fed, specs, alg=alg, donate=False)
+    diag = RoundEngine(model, diag_fed, specs, alg=alg, donate=False)
+    blocks = plan_round_blocks(4, 4, 1)
+
+    rows_p, p_plain = _drive(plain, params, sstate, _gen(task), blocks, 0)
+    rows_d, p_diag = _drive(diag, params, sstate, _gen(task), blocks, 0)
+    assert [m["loss_mean"] for _, m in rows_p] == \
+        [m["loss_mean"] for _, m in rows_d]
+    for a, b in zip(jax.tree.leaves(p_plain), jax.tree.leaves(p_diag)):
+        assert jnp.array_equal(a, b)
+    for _, m in rows_d:
+        assert "client_drift_rms" in m and "v_bar_variance" in m
+        assert np.isfinite(m["client_drift_rms"])
+        assert m["v_bar_variance"] >= 0.0
+
+
+def test_diagnostics_layout_parity():
+    """Both layouts compute the SAME gauges (vmap+mean vs online sum)."""
+    if _ENV_LAYOUT:
+        pytest.skip("layout matrix pins a single layout")
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg)
+    rows = {}
+    for layout in ("client_parallel", "client_sequential"):
+        fed = FedConfig(algorithm="fedadamw", num_clients=4,
+                        clients_per_round=2, local_steps=2, lr=1e-3,
+                        layout=layout, sequential_clients=2,
+                        telemetry_diagnostics=True)
+        params, specs, alg, sstate = build_fed_state(
+            model, fed, jax.random.key(0), cfg=cfg)
+        engine = RoundEngine(model, fed, specs, alg=alg, donate=False)
+        rows[layout], _ = _drive(engine, params, sstate, _gen(task),
+                                 plan_round_blocks(3, 3, 1), 0)
+    for (_, mp), (_, ms) in zip(rows["client_parallel"],
+                                rows["client_sequential"]):
+        assert mp["client_drift_rms"] == pytest.approx(
+            ms["client_drift_rms"], rel=1e-4, abs=1e-7)
+        assert mp["v_bar_variance"] == pytest.approx(
+            ms["v_bar_variance"], rel=1e-4, abs=1e-12)
+
+
+def test_diagnostics_match_direct_recomputation():
+    """client_drift_rms from the round program equals the drift computed
+    directly from the per-client uploads (E-decomposition identity)."""
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg)
+    fed = FedConfig(algorithm="fedadamw", num_clients=4,
+                    clients_per_round=2, local_steps=2, lr=1e-3,
+                    telemetry_diagnostics=True)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    engine = RoundEngine(model, fed, specs, alg=alg, donate=False)
+    gen = _gen(task)
+    batches, cids = gen.next_round()
+    batches = {k: jnp.asarray(v) for k, v in batches.items()}
+    cids = jnp.asarray(cids)
+    _, _, m = engine.run_block(params, sstate, batches, cids, 0, 1)
+
+    # recompute from the SAME per-client uploads, straight vmap
+    local = make_local_phase(model.loss, alg, fed, specs)
+    uploads, _ = jax.vmap(local, in_axes=(None, None, 0, None, 0))(
+        params, sstate, batches, jnp.ones((), jnp.float32), cids)
+    deltas = [np.concatenate([np.ravel(leaf[i]) for leaf in
+                              jax.tree.leaves(uploads["delta"])])
+              for i in range(2)]
+    dbar = np.mean(deltas, axis=0)
+    drift_sq = np.mean([np.sum((d - dbar) ** 2) for d in deltas])
+    assert float(m["client_drift_rms"]) == pytest.approx(
+        np.sqrt(drift_sq), rel=1e-4)
+    vs = [np.concatenate([np.ravel(leaf[i]) for leaf in
+                          jax.tree.leaves(uploads["v_mean"])])
+          for i in range(2)]
+    vvar = np.mean((np.stack(vs) - np.mean(vs, axis=0)) ** 2)
+    assert float(m["v_bar_variance"]) == pytest.approx(vvar, rel=1e-3,
+                                                       abs=1e-15)
+
+
+# --------------------------------------------------- end-to-end trace file
+
+def test_run_training_trace_export_schema(tmp_path):
+    """--trace-dir must yield valid Chrome-trace JSON: >= 6 distinct span
+    types, every event complete with pid/tid, and producer-thread spans
+    on their own tid named round-prefetcher."""
+    from repro.launch.train import run_training
+    td = str(tmp_path / "trace")
+    h = run_training(arch="vit-tiny-fl", algorithm="fedadamw", rounds=4,
+                     num_clients=4, clients_per_round=2, local_steps=2,
+                     batch_size=4, eval_every=2, seed=3, prefetch_depth=2,
+                     rounds_per_call=2, trace_dir=td,
+                     telemetry_diagnostics=True,
+                     log_path=str(tmp_path / "m.csv"))
+    doc = json.load(open(os.path.join(td, "trace.json")))
+    evs = doc["traceEvents"]
+    spans = [e for e in evs if e.get("ph") == "X"]
+    for e in spans:
+        assert set(e) >= {"name", "cat", "ph", "ts", "dur", "pid", "tid"}
+        assert e["dur"] >= 0
+    names = {e["name"] for e in spans}
+    assert len(names) >= 6, names
+    assert {"sample", "assemble", "stage", "dispatch", "eval",
+            "flush"} <= names
+    # producer-thread spans are distinguishable by tid + metadata
+    tids = {e["tid"] for e in spans}
+    assert len(tids) >= 2
+    meta_names = {e["args"]["name"] for e in evs if e.get("ph") == "M"}
+    assert "round-prefetcher" in meta_names
+    producer_tid = next(e["tid"] for e in evs if e.get("ph") == "M"
+                        and e["args"]["name"] == "round-prefetcher")
+    assert {e["name"] for e in spans if e["tid"] == producer_tid} \
+        >= {"assemble", "stage"}
+
+    counters = json.load(open(os.path.join(td, "counters.json")))
+    assert counters["rounds/completed"] == 4.0
+    assert counters["prefetch/produce_s"] > 0.0
+    assert counters["comm/wire_bytes_total"] > 0.0
+    assert counters["round/cohort_size"] == 2.0
+    # history carries the derived gauge rows
+    assert len(h["host_blocked_frac"]) == 2      # one per eval round
+    assert len(h["client_drift_rms"]) == 4       # every round
+    assert all(v >= 0 for v in h["v_bar_variance"])
+
+    # the CSV carries the new columns
+    rows = list(csv.DictReader(open(tmp_path / "m.csv")))
+    assert "host_blocked_frac" in rows[0]
+    assert all(r["client_drift_rms"] != "" for r in rows)
+
+    # tools/report_run.py renders the artifacts without jax
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "report_run", os.path.join(os.path.dirname(__file__), "..",
+                                   "tools", "report_run.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    text = mod.report(td, str(tmp_path / "m.csv"))
+    assert "## counters" in text and "## spans" in text
+    assert "dispatch" in text
+
+
+def test_run_training_without_trace_dir_leaves_no_session(tmp_path):
+    from repro.launch.train import run_training
+    run_training(arch="vit-tiny-fl", algorithm="fedadamw", rounds=2,
+                 num_clients=4, clients_per_round=2, local_steps=1,
+                 batch_size=4, eval_every=2, seed=3)
+    assert telemetry.active() is None
+    assert not (tmp_path / "trace.json").exists()
+
+
+def test_run_training_crash_exports_and_closes(tmp_path, monkeypatch):
+    """A crash mid-run must still leave a flushed, closed CSV and the
+    partial trace/counters export (the try/finally hardening)."""
+    import repro.launch.train as train_mod
+
+    def boom(*a, **k):
+        raise RuntimeError("eval exploded")
+
+    monkeypatch.setattr(train_mod, "evaluate", boom)
+    td = str(tmp_path / "trace")
+    csv_path = str(tmp_path / "m.csv")
+    with pytest.raises(RuntimeError, match="eval exploded"):
+        train_mod.run_training(
+            arch="vit-tiny-fl", algorithm="fedadamw", rounds=4,
+            num_clients=4, clients_per_round=2, local_steps=1,
+            batch_size=4, eval_every=2, seed=3, trace_dir=td,
+            log_path=csv_path)
+    assert telemetry.active() is None            # session uninstalled
+    assert os.path.exists(os.path.join(td, "trace.json"))
+    assert os.path.exists(os.path.join(td, "counters.json"))
+    rows = list(csv.DictReader(open(csv_path)))   # parseable, flushed
+    assert len(rows) >= 1                        # salvaged train rows
+    assert all(r["train_loss"] != "" for r in rows)
+
+
+# ------------------------------------------------------------- loggers
+
+def test_csv_logger_context_manager_idempotent_close(tmp_path):
+    path = str(tmp_path / "x.csv")
+    with CSVLogger(path, fieldnames=["a"]) as lg:
+        lg.log({"a": 1})
+    lg.close()  # second close is a no-op
+    lg.close()
+    assert list(csv.DictReader(open(path))) == [{"a": "1"}]
+
+
+def test_jsonl_logger_context_manager_idempotent_close(tmp_path):
+    path = str(tmp_path / "x.jsonl")
+    with JSONLLogger(path) as lg:
+        lg.log({"a": 1})
+    lg.close()
+    lg.close()
+    with pytest.raises(ValueError, match="closed"):
+        lg.log({"b": 2})
+    assert [json.loads(s) for s in open(path)] == [{"a": 1}]
+
+
+# ------------------------------------------------------------- overhead
+
+def test_enabled_telemetry_overhead_under_5_percent():
+    """Live tracing+counters must cost < 5% rounds/s on the
+    round_throughput bench config (1-layer d32, fused dispatch)."""
+    from repro.config import get_arch
+    from repro.config.model_config import reduced_variant
+    from repro.models import build_model
+    cfg = reduced_variant(get_arch("vit-tiny-fl"), num_layers=1,
+                          d_model=32)
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    task = make_task("class_lm", vocab_size=cfg.vocab_size, seq_len=8,
+                     num_samples=512, num_clients=8, dirichlet_alpha=0.6,
+                     seed=0)
+    fed = FedConfig(algorithm="fedadamw", num_clients=8,
+                    clients_per_round=2, local_steps=1, lr=3e-4,
+                    rounds_per_call=8)
+    params, specs, alg, sstate = build_fed_state(model, fed,
+                                                 jax.random.key(0))
+    engine = RoundEngine(model, fed, specs, alg=alg, donate=False)
+    rounds = 48
+    blocks = plan_round_blocks(rounds, rounds + 1, 8)
+
+    def one_pass(traced: bool):
+        gen = RoundBatchGenerator(task, num_clients=8, clients_per_round=2,
+                                  local_steps=1, batch_size=2, rng=1)
+        ctx = telemetry.session() if traced else None
+        if ctx is not None:
+            telemetry.install(ctx)
+        try:
+            pre = HostPrefetcher(gen, blocks, depth=2, stacked=True)
+            p, s = params, sstate
+            pending = []
+            t0 = time.perf_counter()
+            for start, size, batches, cids in pre:
+                p, s, m = engine.run_block(p, s, batches, cids, start, size)
+                pending.append(m["loss_mean"])
+            jax.block_until_ready(pending)
+            return time.perf_counter() - t0
+        finally:
+            if ctx is not None:
+                telemetry.uninstall(ctx)
+
+    one_pass(False), one_pass(True)  # compile + warm both paths
+    best = {False: float("inf"), True: float("inf")}
+    # interleaved min-of-reps: both variants sample the same noise
+    for _ in range(5):
+        for traced in (False, True):
+            best[traced] = min(best[traced], one_pass(traced))
+    overhead = best[True] / best[False] - 1.0
+    assert overhead < 0.05, (
+        f"enabled telemetry costs {overhead:.1%} rounds/s "
+        f"(off={best[False]:.4f}s on={best[True]:.4f}s)")

@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Run-summary report from a telemetry trace directory.
+
+Usage: python tools/report_run.py <trace_dir> [--csv metrics.csv]
+
+Reads the ``trace.json`` + ``counters.json`` a ``--trace-dir`` run of
+``repro.launch.train`` exported (docs/observability.md) and prints:
+
+* the counter/gauge snapshot (wire bytes, cohort size, DP epsilon, ...);
+* per-span aggregates (count / total / mean / max ms) from the trace,
+  host spans and trace-time ("trace/...") spans separated;
+* derived ratios: ``host_blocked_frac`` (consumer wait over traced
+  wall) and producer utilization;
+* optionally, the final rows of the run's metrics CSV.
+
+Stdlib only — usable on any box that has the artifacts, no jax needed.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+
+def _fmt(x: float) -> str:
+    if x == 0:
+        return "0"
+    if abs(x) >= 1e6 or 0 < abs(x) < 1e-3:
+        return f"{x:.3e}"
+    return f"{x:,.3f}".rstrip("0").rstrip(".")
+
+
+def _table(rows: List[List[str]], headers: List[str]) -> str:
+    widths = [max(len(str(r[i])) for r in rows + [headers])
+              for i in range(len(headers))]
+    def line(vals):  # noqa: E306
+        return "  ".join(str(v).ljust(w) for v, w in zip(vals, widths))
+    sep = "  ".join("-" * w for w in widths)
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])
+
+
+def span_aggregates(events: List[Dict[str, Any]]) -> Dict[str, Dict]:
+    agg: Dict[str, Dict[str, float]] = {}
+    for ev in events:
+        if ev.get("ph") != "X":
+            continue
+        st = agg.setdefault(ev["name"],
+                            {"count": 0, "total_ms": 0.0, "max_ms": 0.0})
+        d = ev.get("dur", 0.0) / 1e3
+        st["count"] += 1
+        st["total_ms"] += d
+        st["max_ms"] = max(st["max_ms"], d)
+    return agg
+
+
+def report(trace_dir: str, csv_path: str = "") -> str:
+    out: List[str] = [f"# run report: {trace_dir}", ""]
+    counters_path = os.path.join(trace_dir, "counters.json")
+    trace_path = os.path.join(trace_dir, "trace.json")
+
+    counters: Dict[str, float] = {}
+    if os.path.exists(counters_path):
+        with open(counters_path) as fh:
+            counters = json.load(fh)
+        out.append("## counters")
+        out.append(_table([[k, _fmt(v)] for k, v in sorted(counters.items())],
+                          ["name", "value"]))
+        out.append("")
+
+    if os.path.exists(trace_path):
+        with open(trace_path) as fh:
+            doc = json.load(fh)
+        events = doc.get("traceEvents", [])
+        spans = [e for e in events if e.get("ph") == "X"]
+        agg = span_aggregates(spans)
+        rows = [[name, int(st["count"]), _fmt(st["total_ms"]),
+                 _fmt(st["total_ms"] / st["count"]), _fmt(st["max_ms"])]
+                for name, st in sorted(
+                    agg.items(), key=lambda kv: -kv[1]["total_ms"])]
+        out.append("## spans")
+        out.append(_table(rows, ["span", "count", "total_ms", "mean_ms",
+                                 "max_ms"]))
+        out.append("")
+        if spans:
+            wall_ms = max(e["ts"] + e.get("dur", 0) for e in spans) / 1e3
+            wait_ms = counters.get("prefetch/wait_s", 0.0) * 1e3
+            produce_ms = counters.get("prefetch/produce_s", 0.0) * 1e3
+            out.append("## derived")
+            out.append(_table([
+                ["traced_wall_ms", _fmt(wall_ms)],
+                ["host_blocked_frac", _fmt(wait_ms / max(wall_ms, 1e-9))],
+                ["producer_util", _fmt(produce_ms / max(wall_ms, 1e-9))],
+            ], ["quantity", "value"]))
+            out.append("")
+        out.append(f"open {trace_path} in https://ui.perfetto.dev "
+                   "or chrome://tracing")
+        out.append("")
+
+    if csv_path and os.path.exists(csv_path):
+        with open(csv_path, newline="") as fh:
+            rows = list(csv.reader(fh))
+        if len(rows) > 1:
+            out.append("## metrics csv (last 5 rows)")
+            out.append(_table(rows[-5:], rows[0]))
+            out.append("")
+    return "\n".join(out)
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace_dir", help="directory a --trace-dir run wrote")
+    ap.add_argument("--csv", default="", help="run metrics CSV to append")
+    args = ap.parse_args(argv)
+    if not os.path.isdir(args.trace_dir):
+        print(f"not a directory: {args.trace_dir}", file=sys.stderr)
+        return 2
+    print(report(args.trace_dir, args.csv))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
