@@ -5,7 +5,6 @@ the global average than Local SGD, and the alpha-correction reduces drift.
 
 Measured directly on the round engine by instrumenting per-client local
 phases (no jit barrier needed at this scale)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,7 @@ import numpy as np
 from benchmarks.common import Rows, budget, print_table
 from repro.config import FedConfig, get_arch
 from repro.config.model_config import reduced_variant
-from repro.core import build_fed_state, make_local_phase
+from repro.core import build_fed_state
 from repro.core.tree_util import global_norm, tree_sub
 from repro.data import make_task, round_batches, sample_clients
 from repro.models import build_model

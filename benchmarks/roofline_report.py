@@ -134,7 +134,8 @@ def _kernel_cases(smoke: bool):
     s_n = 4 if smoke else 8
     key = jax.random.key(0)
     x2d = jax.random.normal(key, (r, c), jnp.float32)
-    x3d = jax.random.normal(key, (s_n, r, 128), jnp.float32)
+    x3d = jax.random.normal(jax.random.fold_in(key, 1), (s_n, r, 128),
+                            jnp.float32)
     w = jnp.full((s_n,), 1.0 / s_n, jnp.float32)
     five = [jax.random.normal(jax.random.fold_in(key, i), (r, c),
                               jnp.float32) for i in range(5)]

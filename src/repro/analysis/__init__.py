@@ -1,0 +1,29 @@
+"""Static analysis for the repro stack: AST lint + jaxpr program audit.
+
+Two levels, one CLI (``tools/analyze.py``), one CI job:
+
+* **Level 1 — AST lint** (``repro.analysis.lint``): repo-specific source
+  rules RA101–RA106 (RNG fold-in discipline, reserved scenario keys,
+  telemetry metric catalog, jit-feeding nondeterminism, unused imports).
+  Stdlib ``ast`` only.
+* **Level 2 — jaxpr audit** (``repro.analysis.jaxpr_audit``): traces the
+  round program abstractly under a config matrix and checks RA201–RA204
+  (gate-parity, dtype, host-callbacks-in-scan, donation aliasing).
+
+Findings, exit codes, inline ``# ra: allow[RAxxx]`` suppressions and the
+checked-in baseline live in ``repro.analysis.findings``; the rule
+catalog is documented in docs/analysis.md.
+"""
+from repro.analysis.findings import (DEFAULT_BASELINE, EXIT_CODES,
+                                     Finding, exit_code_for, load_baseline,
+                                     save_baseline, split_baselined)
+from repro.analysis.jaxpr_audit import (AuditCase, audit_matrix, run_audit,
+                                        trace_case)
+from repro.analysis.lint import LINT_RULES, lint_file, run_lint
+
+__all__ = [
+    "Finding", "EXIT_CODES", "exit_code_for", "DEFAULT_BASELINE",
+    "load_baseline", "save_baseline", "split_baselined",
+    "LINT_RULES", "lint_file", "run_lint",
+    "AuditCase", "audit_matrix", "run_audit", "trace_case",
+]

@@ -1,0 +1,148 @@
+"""Findings, baselines, and inline suppressions for ``repro.analysis``.
+
+A :class:`Finding` is one violation from either analysis level (AST lint
+or jaxpr audit): an error code (``RA1xx`` lint / ``RA2xx`` audit), a
+location, a message, and a fix-it hint. The full rule catalog lives in
+docs/analysis.md.
+
+Two suppression mechanisms, both intentional-and-documented:
+
+* **inline** — a ``# ra: allow[RA101] <reason>`` comment on (or directly
+  above) the flagged line. Used for the handful of sanctioned sites
+  (e.g. the codec key *constructor itself* builds a raw ``PRNGKey``).
+  The reason is mandatory by convention and reviewed like code.
+* **baseline** — ``src/repro/analysis/baseline.json``, a checked-in list
+  of fingerprints for violations that predate a rule and are accepted
+  for now. ``tools/analyze.py --update-baseline`` regenerates it; CI
+  fails on any finding that is in neither. Fingerprints are
+  ``(code, path, stripped source line)`` — stable across pure line-number
+  drift, invalidated when the offending line actually changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence
+
+#: rule code -> process exit code for ``tools/analyze.py`` (distinct per
+#: rule so CI logs and scripts can tell failure classes apart; mixed-rule
+#: failures exit 1).
+EXIT_CODES: Dict[str, int] = {
+    "RA101": 11,   # raw PRNGKey outside a sanctioned constructor
+    "RA102": 12,   # PRNG key reused by two samplers without fold_in/split
+    "RA103": 13,   # reserved round-batch key as a string literal
+    "RA104": 14,   # telemetry metric name not in the registry catalog
+    "RA105": 15,   # wall-clock / unseeded randomness in jit-feeding code
+    "RA106": 16,   # unused import
+    "RA201": 21,   # gate-parity: feature-off jaxpr != feature-free jaxpr
+    "RA202": 22,   # f64 leak / unexpected dtype promotion in the jaxpr
+    "RA203": 23,   # host callback inside a scanned body
+    "RA204": 24,   # donated buffer not aliased in the compiled executable
+}
+
+MIXED_EXIT = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation: ``code`` is the RAxxx rule id; ``path`` is repo-
+    relative (or a synthetic ``jaxpr:<case>`` locator for audit
+    findings); ``text`` is the stripped source line / IR detail used for
+    baseline fingerprinting."""
+    code: str
+    path: str
+    line: int
+    message: str
+    fixit: str = ""
+    text: str = ""
+
+    def fingerprint(self) -> str:
+        return f"{self.code}|{self.path}|{self.text.strip()}"
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        out = f"{loc}: {self.code} {self.message}"
+        if self.fixit:
+            out += f"\n    fix: {self.fixit}"
+        return out
+
+
+def exit_code_for(findings: Sequence[Finding]) -> int:
+    """0 when clean; the rule's distinct exit code when every finding
+    shares one rule; ``MIXED_EXIT`` otherwise."""
+    codes = {f.code for f in findings}
+    if not codes:
+        return 0
+    if len(codes) == 1:
+        return EXIT_CODES.get(codes.pop(), MIXED_EXIT)
+    return MIXED_EXIT
+
+
+# ---------------------------------------------------------------- suppression
+
+_ALLOW_RE = re.compile(r"ra:\s*allow\[(RA\d{3})\]")
+
+
+def inline_allows(source_lines: Sequence[str]) -> Dict[int, set]:
+    """{1-based line -> {codes allowed}} from ``# ra: allow[RAxxx]``
+    comments. An allow comment covers its own line AND the line below it
+    (so long flagged expressions can carry the comment above them)."""
+    allows: Dict[int, set] = {}
+    for i, line in enumerate(source_lines, start=1):
+        for m in _ALLOW_RE.finditer(line):
+            allows.setdefault(i, set()).add(m.group(1))
+            allows.setdefault(i + 1, set()).add(m.group(1))
+    return allows
+
+
+def is_allowed(finding: Finding, allows: Dict[int, set]) -> bool:
+    return finding.code in allows.get(finding.line, ())
+
+
+# ------------------------------------------------------------------ baseline
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def load_baseline(path: Optional[str] = None) -> List[dict]:
+    path = path or DEFAULT_BASELINE
+    if not os.path.exists(path):
+        return []
+    with open(path) as fh:
+        body = fh.read()
+    if not body.strip():        # /dev/null or an empty file: no baseline
+        return []
+    return json.loads(body).get("suppressions", [])
+
+
+def save_baseline(findings: Iterable[Finding],
+                  path: Optional[str] = None) -> str:
+    path = path or DEFAULT_BASELINE
+    entries = sorted(
+        ({"code": f.code, "path": f.path, "text": f.text.strip(),
+          "message": f.message} for f in findings),
+        key=lambda e: (e["code"], e["path"], e["text"]))
+    doc = {"_comment": ("Accepted pre-existing violations; regenerate with "
+                        "`python tools/analyze.py --update-baseline`. "
+                        "New code must be clean — prefer an inline "
+                        "`# ra: allow[RAxxx] reason` for sanctioned sites."),
+           "suppressions": entries}
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def split_baselined(findings: Sequence[Finding],
+                    baseline: Sequence[dict]):
+    """-> (new, baselined): a finding is baselined when an entry matches
+    its (code, path, stripped text)."""
+    keys = {(e["code"], e["path"], e["text"]) for e in baseline}
+    new, old = [], []
+    for f in findings:
+        (old if (f.code, f.path, f.text.strip()) in keys else new).append(f)
+    return new, old

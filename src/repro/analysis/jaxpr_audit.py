@@ -1,0 +1,314 @@
+"""Level-2 static analysis: jaxpr/HLO audit of the traced round program.
+
+Where the AST lint (``repro.analysis.lint``) reads source, this module
+reads the PROGRAM: it traces ``make_round_fn`` / ``make_multi_round_fn``
+abstractly (zero FLOPs — ``repro.core.rounds.trace_round_jaxpr``) under
+a matrix of representative :class:`FedConfig` s and checks four
+invariants every subsystem PR so far proved by hand:
+
+``RA201`` **gate-parity** — a feature at its disabled value must trace
+          the *byte-identical* program to the feature-free engine
+          (static gating, the repo-wide bit-exactness contract). The
+          pretty-printed jaxpr is deterministic, so string equality is
+          the check: milliseconds of IR diff where trajectory parity
+          costs minutes. A live host-telemetry session is one of the
+          gates: tracing inside ``telemetry.session()`` must emit the
+          same program.
+``RA202`` **dtype audit** — no f64/c128 equation output anywhere in the
+          program (the fresh-f32-zeros accumulator bug class: an
+          accidental Python-float promotion upcasts a whole chain).
+``RA203`` **host callbacks in scanned bodies** — ``pure_callback`` et
+          al. inside a ``scan``/``while`` body re-enter the host per
+          iteration: a silent ×(K·S·M) dispatch cliff.
+``RA204`` **donation aliasing** — every ``donate_argnums`` leaf of the
+          engine's jit signature must be aliased in the compiled
+          executable's ``input_output_alias`` header (the PR 3
+          ``is_deleted`` property as an IR fact, not a runtime probe).
+
+Sanity direction is checked too: each feature's ON program must DIFFER
+from base, otherwise the parity assertions are vacuous.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+
+LAYOUTS = ("client_parallel", "client_sequential")
+
+#: primitive names that re-enter the host from traced code
+CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback",
+                  "python_callback", "callback")
+#: primitives whose body re-runs per iteration
+LOOP_PRIMS = ("scan", "while")
+
+BANNED_DTYPES = ("float64", "complex128")
+
+
+# ----------------------------------------------------------- jaxpr walking
+
+def iter_eqns(closed_jaxpr) -> Iterable[Tuple[object, bool]]:
+    """Yield ``(eqn, inside_loop)`` over every equation, recursing into
+    sub-jaxprs carried in eqn params (scan/while/cond bodies, pjit
+    calls); ``inside_loop`` is True under any scan/while body."""
+    def sub_jaxprs(params):
+        vals = []
+        for v in params.values():
+            vals.extend(v if isinstance(v, (list, tuple)) else [v])
+        for v in vals:
+            sub = getattr(v, "jaxpr", v)
+            if hasattr(sub, "eqns"):
+                yield sub
+
+    def rec(jaxpr, in_loop):
+        for eqn in jaxpr.eqns:
+            yield eqn, in_loop
+            child_loop = in_loop or eqn.primitive.name in LOOP_PRIMS
+            for sub in sub_jaxprs(eqn.params):
+                yield from rec(sub, child_loop)
+
+    yield from rec(closed_jaxpr.jaxpr, False)
+
+
+def audit_dtypes(name: str, closed_jaxpr) -> List[Finding]:
+    """RA202: flag banned-dtype equation outputs (f64 leak)."""
+    out: List[Finding] = []
+    seen = set()
+    for eqn, _ in iter_eqns(closed_jaxpr):
+        for ov in eqn.outvars:
+            dtype = getattr(getattr(ov, "aval", None), "dtype", None)
+            if dtype is None or str(dtype) not in BANNED_DTYPES:
+                continue
+            key = (eqn.primitive.name, str(dtype))
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(Finding(
+                code="RA202", path=f"jaxpr:{name}", line=0,
+                message=f"equation {eqn.primitive.name!r} produces "
+                        f"{dtype} — the stack is f32; a silent x64 "
+                        "promotion doubles bytes and breaks cross-config "
+                        "bit-exactness",
+                fixit="find the Python float / np.float64 scalar that "
+                      "entered the trace and cast it to the leaf dtype",
+                text=f"{eqn.primitive.name}->{dtype}"))
+    return out
+
+
+def audit_callbacks(name: str, closed_jaxpr) -> List[Finding]:
+    """RA203: host callbacks inside scanned bodies."""
+    out: List[Finding] = []
+    seen = set()
+    for eqn, in_loop in iter_eqns(closed_jaxpr):
+        prim = eqn.primitive.name
+        if in_loop and any(prim.startswith(c) for c in CALLBACK_PRIMS):
+            if prim in seen:
+                continue
+            seen.add(prim)
+            cb = eqn.params.get("callback", "")
+            out.append(Finding(
+                code="RA203", path=f"jaxpr:{name}", line=0,
+                message=f"host callback {prim!r} ({cb}) inside a "
+                        "scan/while body — re-enters the host every "
+                        "iteration (xK local steps, xM fused rounds)",
+                fixit="hoist the callback out of the loop or replace it "
+                      "with an in-program accumulator drained once per "
+                      "call (see telemetry.diagnostics)",
+                text=f"{prim} in loop"))
+    return out
+
+
+# ------------------------------------------------------------ config matrix
+
+@dataclasses.dataclass(frozen=True)
+class AuditCase:
+    """One traced configuration. ``parity_with`` names the case whose
+    jaxpr this one must equal (RA201); ``differs_from`` names the case
+    it must NOT equal (the sanity direction). ``trace_kw`` feeds
+    ``trace_round_jaxpr``; ``in_telemetry_session`` traces under a live
+    host session."""
+    name: str
+    fed: object
+    parity_with: Optional[str] = None
+    differs_from: Optional[str] = None
+    trace_kw: Dict = dataclasses.field(default_factory=dict)
+    in_telemetry_session: bool = False
+
+
+def _base_fed(layout: str, **overrides):
+    from repro.config import FedConfig
+    kw = dict(algorithm="fedadamw", num_clients=8, clients_per_round=2,
+              local_steps=2, lr=1e-3, layout=layout, sequential_clients=2)
+    kw.update(overrides)
+    return FedConfig(**kw)
+
+
+def audit_matrix(layouts: Tuple[str, ...] = LAYOUTS) -> List[AuditCase]:
+    """The representative configs: per layout, a feature-free base, every
+    feature at its OFF value (must trace == base even when its inert
+    knobs move), and every feature ON (must trace != base, and feeds the
+    dtype/callback audits). Codec cases are client_parallel (error
+    feedback's layout)."""
+    cases: List[AuditCase] = []
+    for lay in layouts:
+        b = f"base[{lay}]"
+        cases.append(AuditCase(b, _base_fed(lay)))
+        cases.append(AuditCase(
+            f"dp_off[{lay}]",
+            _base_fed(lay, dp_clip=0.0, dp_noise_multiplier=0.0,
+                      dp_seed=123),
+            parity_with=b))
+        cases.append(AuditCase(
+            f"diag_off[{lay}]",
+            _base_fed(lay, telemetry_diagnostics=False, scenario_seed=7),
+            parity_with=b, in_telemetry_session=True))
+        cases.append(AuditCase(
+            f"scenario_off[{lay}]", _base_fed(lay, scenario_seed=7),
+            parity_with=b, trace_kw={"with_scenario": False}))
+        cases.append(AuditCase(
+            f"dp_on[{lay}]",
+            _base_fed(lay, dp_clip=1.0, dp_noise_multiplier=1.0),
+            differs_from=b))
+        cases.append(AuditCase(
+            f"diag_on[{lay}]", _base_fed(lay, telemetry_diagnostics=True),
+            differs_from=b))
+        cases.append(AuditCase(
+            f"scenario_on[{lay}]",
+            _base_fed(lay, straggler_frac=0.5, agg_weighting="inv_steps"),
+            differs_from=b, trace_kw={"with_scenario": True}))
+    if "client_parallel" not in layouts:
+        return cases
+    cases.append(AuditCase(
+        "codec_on[client_parallel]",
+        _base_fed("client_parallel", algorithm="fedadamw+int8"),
+        differs_from="base[client_parallel]"))
+    cases.append(AuditCase(
+        "multi_dp_off[client_parallel]",
+        _base_fed("client_parallel", dp_clip=0.0, dp_seed=123,
+                  rounds_per_call=3),
+        parity_with="multi_base[client_parallel]",
+        trace_kw={"multi_rounds": 3}))
+    cases.insert(0, AuditCase(          # referenced by the case above
+        "multi_base[client_parallel]",
+        _base_fed("client_parallel", rounds_per_call=3),
+        trace_kw={"multi_rounds": 3}))
+    return cases
+
+
+def _validate_matrix(cases: List[AuditCase]) -> None:
+    """Every matrix config must satisfy the declarative constraint table
+    (repro.config.fed_config.CONSTRAINTS) — the auditor must not audit
+    programs the config layer would reject."""
+    for case in cases:
+        case.fed.validate()
+
+
+def tiny_model():
+    """The reduced vit-tiny used for all audit traces (same one the
+    roofline CI job rooflines)."""
+    import jax.numpy as jnp
+    from repro.config import get_arch
+    from repro.config.model_config import reduced_variant
+    from repro.models import build_model
+    cfg = reduced_variant(get_arch("vit-tiny-fl"))
+    return build_model(cfg, compute_dtype=jnp.float32), cfg
+
+
+def trace_case(model, cfg, case: AuditCase):
+    """-> (ClosedJaxpr, args) for one matrix case."""
+    from repro import telemetry
+    from repro.core.rounds import trace_round_jaxpr
+    if case.in_telemetry_session:
+        with telemetry.session():
+            return trace_round_jaxpr(model, case.fed, cfg=cfg,
+                                     **case.trace_kw)
+    return trace_round_jaxpr(model, case.fed, cfg=cfg, **case.trace_kw)
+
+
+def gate_parity_findings(cases: List[AuditCase],
+                         texts: Dict[str, str]) -> List[Finding]:
+    """RA201 both directions: off-gates equal their baseline, on-gates
+    differ from it (else the parity assertions prove nothing)."""
+    out: List[Finding] = []
+    for case in cases:
+        if case.parity_with is not None and \
+                texts[case.name] != texts[case.parity_with]:
+            out.append(Finding(
+                code="RA201", path=f"jaxpr:{case.name}", line=0,
+                message=f"feature-off program differs from "
+                        f"{case.parity_with!r} "
+                        f"({len(texts[case.name])} vs "
+                        f"{len(texts[case.parity_with])} chars) — the "
+                        "gate leaks into the traced program",
+                fixit="gate the feature statically (Python-level branch "
+                      "on the config, not lax.cond/jnp.where) so the "
+                      "disabled trace is byte-identical",
+                text=f"{case.name} != {case.parity_with}"))
+        if case.differs_from is not None and \
+                texts[case.name] == texts[case.differs_from]:
+            out.append(Finding(
+                code="RA201", path=f"jaxpr:{case.name}", line=0,
+                message=f"feature-ON program is identical to "
+                        f"{case.differs_from!r} — the feature never "
+                        "entered the trace; the off-gate parity checks "
+                        "are vacuous",
+                fixit="check the config plumbing: the flag is not "
+                      "reaching make_round_fn",
+                text=f"{case.name} == {case.differs_from}"))
+    return out
+
+
+# --------------------------------------------------------------- donation
+
+def audit_donation(model, cfg, fed=None) -> List[Finding]:
+    """RA204: compile the engine's jit signature (donate_argnums=(0, 1),
+    exactly ``launch.pipeline.RoundEngine``'s) from abstract args and
+    verify every donated leaf is aliased in the executable header.
+    This is the one audit that pays a real XLA compile (~10 s)."""
+    import jax
+    from repro.core.rounds import make_round_fn, round_abstract_args
+    from repro.roofline.hlo_counter import parse_input_output_alias
+
+    fed = fed or _base_fed("client_parallel")
+    args, specs, alg = round_abstract_args(model, fed, cfg=cfg)
+    fn = make_round_fn(model, fed, specs, alg=alg, cosine_total_rounds=10)
+    compiled = jax.jit(fn, donate_argnums=(0, 1)).lower(*args).compile()
+    alias = parse_input_output_alias(compiled.as_text())
+    n_donated = len(jax.tree.leaves(args[0])) + len(jax.tree.leaves(args[1]))
+    missing = [i for i in range(n_donated) if i not in alias]
+    if not missing:
+        return []
+    return [Finding(
+        code="RA204", path="hlo:donation[client_parallel]", line=0,
+        message=f"{len(missing)} of {n_donated} donated input buffers "
+                f"(params+sstate leaves {missing[:8]}"
+                f"{'...' if len(missing) > 8 else ''}) are NOT aliased "
+                "in the compiled executable — donation silently degrades "
+                "to a copy and peak memory doubles",
+        fixit="keep donated leaves' shapes/dtypes identical between the "
+              "matching input and output positions of round_fn",
+        text=f"unaliased donated params {missing[:8]}")]
+
+
+# ----------------------------------------------------------------- driver
+
+def run_audit(layouts: Tuple[str, ...] = LAYOUTS, *,
+              donation: bool = True) -> List[Finding]:
+    """Trace the full matrix and run all four audits. ~25 traces of the
+    reduced tiny model (~1 s each) plus one XLA compile when
+    ``donation``; comfortably inside the 60 s CI budget."""
+    model, cfg = tiny_model()
+    cases = audit_matrix(layouts)
+    _validate_matrix(cases)
+    findings: List[Finding] = []
+    texts: Dict[str, str] = {}
+    for case in cases:
+        closed, _ = trace_case(model, cfg, case)
+        texts[case.name] = str(closed)
+        findings.extend(audit_dtypes(case.name, closed))
+        findings.extend(audit_callbacks(case.name, closed))
+    findings.extend(gate_parity_findings(cases, texts))
+    if donation:
+        findings.extend(audit_donation(model, cfg))
+    return findings

@@ -1,0 +1,432 @@
+"""Level-1 static analysis: repo-specific AST lint (stdlib ``ast`` only).
+
+Every rule guards an invariant a past PR had to prove (or fix) by hand —
+see docs/analysis.md for the catalog with examples. Codes:
+
+``RA101``  raw ``jax.random.PRNGKey``/``jax.random.key`` in jit-feeding
+           modules outside a sanctioned constructor. Per-round /
+           per-client keys must be derived via ``fold_in`` from a seeded
+           root (the PR 2 ``_encode_key`` client-id-miss bug class);
+           a key built immediately inside ``jax.random.fold_in(...)`` is
+           fine, anything else needs an inline ``# ra: allow[RA101]``.
+``RA102``  PRNG key reuse: one key variable consumed by two or more
+           sampling calls without an intervening ``fold_in``/``split`` —
+           the draws would be correlated.
+``RA103``  reserved round-batch keys (``_step_mask``/``_agg_weights``)
+           spelled as string literals anywhere but their defining module
+           — use ``repro.scenario.STEP_MASK_KEY``/``AGG_WEIGHTS_KEY``.
+``RA104``  telemetry counter/gauge name literal not in the
+           ``repro.telemetry.registry.CANONICAL_METRICS`` catalog (a
+           typo'd name silently splits the accumulator).
+``RA105``  wall-clock / unseeded randomness (``time.time``,
+           ``np.random.*`` global-state calls, stdlib ``random``) inside
+           modules that feed jitted code — nondeterminism there breaks
+           the bit-exactness contracts every subsystem asserts.
+``RA106``  unused import (dead ``upload_bytes``-era aliases rot here).
+
+Suppressions: ``# ra: allow[RAxxx] reason`` inline (sanctioned sites) or
+the checked-in baseline (``repro.analysis.findings``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import difflib
+import os
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.analysis.findings import Finding, inline_allows, is_allowed
+
+# Packages whose code is traced into (or stages data for) the jitted
+# round program: nondeterminism or ad-hoc keys here break bit-exactness.
+JIT_FEEDING = (
+    "src/repro/core/", "src/repro/comm/", "src/repro/privacy/",
+    "src/repro/state/", "src/repro/kernels/", "src/repro/scenario/",
+    "src/repro/models/", "src/repro/lora/", "src/repro/data/",
+)
+
+RESERVED_BATCH_KEYS = ("_step_mask", "_agg_weights")  # ra: allow[RA103] the rule's own pattern table
+RESERVED_DEFINING_MODULE = "src/repro/scenario/__init__.py"
+
+# jax.random functions that CONSUME a key (fresh draws); fold_in/split/
+# clone DERIVE new keys and are the sanctioned way to reuse one.
+_KEY_CONSUMERS = frozenset({
+    "normal", "uniform", "bernoulli", "randint", "truncated_normal",
+    "permutation", "choice", "gamma", "beta", "categorical", "bits",
+    "exponential", "laplace", "gumbel", "rademacher", "ball", "dirichlet",
+    "poisson", "shuffle", "t", "cauchy", "logistic", "rayleigh",
+})
+_KEY_DERIVERS = frozenset({"fold_in", "split", "clone"})
+_KEY_MAKERS = frozenset({"PRNGKey", "key"})
+
+# np.random attributes that are fine: explicitly seeded generator
+# construction, not draws from the global state.
+_NP_RANDOM_OK = frozenset({"default_rng", "Generator", "SeedSequence",
+                           "PCG64", "Philox", "BitGenerator", "RandomState"})
+
+_WALLCLOCK = frozenset({"time.time", "time.time_ns", "datetime.now",
+                        "datetime.datetime.now", "datetime.datetime.today"})
+
+
+# --------------------------------------------------------------- file context
+
+@dataclasses.dataclass
+class FileContext:
+    path: str                       # repo-relative, "/"-separated
+    tree: ast.AST
+    lines: Sequence[str]
+    aliases: Dict[str, str]         # local name -> dotted module
+
+
+def _collect_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Map local names to the dotted module they reference, so attribute
+    chains resolve regardless of import spelling (``import jax.random as
+    jr`` / ``from jax import random`` / ``import numpy as np``)."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    root = a.name.split(".")[0]
+                    aliases[root] = root
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _dotted(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Resolve an attribute chain to a dotted name through the alias map
+    (``jr.fold_in`` -> ``jax.random.fold_in``); None for non-chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    root = aliases.get(node.id, node.id)
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def _call_name(call: ast.Call, aliases: Dict[str, str]) -> Optional[str]:
+    return _dotted(call.func, aliases)
+
+
+def make_context(path: str, source: str, repo_rel: str) -> FileContext:
+    tree = ast.parse(source, filename=path)
+    return FileContext(path=repo_rel, tree=tree,
+                       lines=source.splitlines(),
+                       aliases=_collect_aliases(tree))
+
+
+# --------------------------------------------------------------------- rules
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    applies: Callable[[str], bool]      # repo-relative path predicate
+    check: Callable[[FileContext], List[Finding]]
+    summary: str
+
+
+def _finding(ctx: FileContext, code: str, node: ast.AST, message: str,
+             fixit: str = "") -> Finding:
+    line = getattr(node, "lineno", 0)
+    text = ctx.lines[line - 1] if 0 < line <= len(ctx.lines) else ""
+    return Finding(code=code, path=ctx.path, line=line, message=message,
+                   fixit=fixit, text=text)
+
+
+def _is_key_maker(name: Optional[str]) -> bool:
+    return name in {f"jax.random.{m}" for m in _KEY_MAKERS}
+
+
+def check_raw_prngkey(ctx: FileContext) -> List[Finding]:
+    """RA101: flag PRNGKey/key construction not immediately folded."""
+    sanctioned = set()
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node, ctx.aliases)
+        if name == "jax.random.fold_in":
+            for arg in node.args:
+                if isinstance(arg, ast.Call) and _is_key_maker(
+                        _call_name(arg, ctx.aliases)):
+                    sanctioned.add(id(arg))
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and id(node) not in sanctioned \
+                and _is_key_maker(_call_name(node, ctx.aliases)):
+            out.append(_finding(
+                ctx, "RA101", node,
+                "raw PRNG key construction in a jit-feeding module; "
+                "per-round/per-client keys must derive from a seeded "
+                "root via jax.random.fold_in",
+                "wrap as jax.random.fold_in(jax.random.PRNGKey(seed), "
+                "round_or_client_index), or mark the sanctioned "
+                "constructor with `# ra: allow[RA101] reason`"))
+    return out
+
+
+def _scopes(tree: ast.AST):
+    """Yield (scope_node, direct statements) per function/module scope —
+    nested defs start their own scope and are excluded from the parent's."""
+    fns = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+    def direct_nodes(scope):
+        todo = list(ast.iter_child_nodes(scope))
+        while todo:
+            n = todo.pop()
+            yield n
+            if not isinstance(n, fns):
+                todo.extend(ast.iter_child_nodes(n))
+
+    for node in ast.walk(tree):
+        if isinstance(node, fns) or isinstance(node, ast.Module):
+            yield node, list(direct_nodes(node))
+
+
+def check_key_reuse(ctx: FileContext) -> List[Finding]:
+    """RA102: a key variable assigned once and consumed by >= 2 sampling
+    calls draws correlated randomness."""
+    out: List[Finding] = []
+    consumer_names = {f"jax.random.{c}" for c in _KEY_CONSUMERS}
+    for _scope, nodes in _scopes(ctx.tree):
+        assigns: Dict[str, int] = {}
+        consumed: Dict[str, List[ast.Call]] = {}
+        for n in nodes:
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+                vname = _call_name(n.value, ctx.aliases)
+                if vname and vname.startswith("jax.random.") and \
+                        vname.rsplit(".", 1)[-1] in (_KEY_MAKERS
+                                                     | _KEY_DERIVERS):
+                    for tgt in n.targets:
+                        if isinstance(tgt, ast.Name):
+                            assigns[tgt.id] = assigns.get(tgt.id, 0) + 1
+            if isinstance(n, ast.Call):
+                cname = _call_name(n, ctx.aliases)
+                if cname in consumer_names:
+                    for arg in list(n.args) + [kw.value for kw in
+                                               n.keywords]:
+                        if isinstance(arg, ast.Name):
+                            consumed.setdefault(arg.id, []).append(n)
+        for var, sites in consumed.items():
+            if assigns.get(var, 0) == 1 and len(sites) >= 2:
+                second = sorted(sites, key=lambda c: c.lineno)[1]
+                out.append(_finding(
+                    ctx, "RA102", second,
+                    f"PRNG key {var!r} is consumed by "
+                    f"{len(sites)} sampling calls — the draws are "
+                    "correlated, not independent",
+                    f"derive a fresh key per draw: jax.random.fold_in"
+                    f"({var}, i) or jax.random.split({var})"))
+    return out
+
+
+def check_reserved_keys(ctx: FileContext) -> List[Finding]:
+    """RA103: reserved scenario batch keys only via the named constants."""
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Constant) and node.value in \
+                RESERVED_BATCH_KEYS:
+            out.append(_finding(
+                ctx, "RA103", node,
+                f"reserved round-batch key {node.value!r} spelled as a "
+                "literal; the engine pops these by the constants' "
+                "identity and a drifted spelling silently ships the key "
+                "into the model batch",
+                "import STEP_MASK_KEY / AGG_WEIGHTS_KEY from "
+                "repro.scenario"))
+    return out
+
+
+def check_metric_names(ctx: FileContext) -> List[Finding]:
+    """RA104: telemetry metric name literals must be cataloged."""
+    from repro.telemetry.registry import CANONICAL_METRICS
+    out: List[Finding] = []
+    accessors = {"add", "set_gauge", "counter", "gauge", "value"}
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in accessors and node.args):
+            continue
+        base = _dotted(node.func.value, ctx.aliases)
+        if base is None or not base.endswith("telemetry"):
+            continue
+        arg = node.args[0]
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str) \
+                and arg.value not in CANONICAL_METRICS:
+            close = difflib.get_close_matches(arg.value,
+                                              CANONICAL_METRICS, n=1)
+            hint = (f"did you mean {close[0]!r}?" if close else
+                    "add it to CANONICAL_METRICS in "
+                    "repro/telemetry/registry.py (and the "
+                    "docs/observability.md catalog)")
+            out.append(_finding(
+                ctx, "RA104", node,
+                f"telemetry metric name {arg.value!r} is not in the "
+                "registry catalog — a typo here silently splits the "
+                "accumulator", hint))
+    return out
+
+
+def check_nondeterminism(ctx: FileContext) -> List[Finding]:
+    """RA105: wall-clock / global-state randomness in jit-feeding code."""
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node, ctx.aliases)
+        if name is None:
+            continue
+        bad = None
+        if name in _WALLCLOCK or name.startswith("time.perf_counter"):
+            bad = ("wall-clock read", "hoist timing to the host driver "
+                   "(repro.telemetry spans) — traced code must be a pure "
+                   "function of its inputs")
+        elif name.startswith("numpy.random.") and \
+                name.split(".")[2] not in _NP_RANDOM_OK:
+            bad = ("numpy global-state randomness",
+                   "use a seeded np.random.default_rng(...) generator "
+                   "threaded from the caller")
+        elif name.split(".")[0] == "random" and \
+                ctx.aliases.get("random", "") == "random":
+            bad = ("stdlib random (process-global state)",
+                   "use a seeded np.random.default_rng(...) generator")
+        if bad:
+            out.append(_finding(
+                ctx, "RA105", node,
+                f"{bad[0]} ({name}) inside a module that feeds jitted "
+                "code — breaks the bit-exactness contracts", bad[1]))
+    return out
+
+
+def check_unused_imports(ctx: FileContext) -> List[Finding]:
+    """RA106: imports never referenced in the module."""
+    if ctx.path.endswith("__init__.py"):
+        return []   # re-export surface: presence IS the use
+    bindings: List = []   # (local name, node, display)
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                local = a.asname or a.name.split(".")[0]
+                bindings.append((local, node, a.name))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                local = a.asname or a.name
+                bindings.append((local, node,
+                                 f"{node.module or '.'}.{a.name}"))
+    used = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            used.add(node.value)    # __all__ entries & string annotations
+        elif isinstance(node, ast.Attribute):
+            pass                    # roots arrive as Name nodes
+    out = []
+    for local, node, display in bindings:
+        if local not in used:
+            out.append(_finding(
+                ctx, "RA106", node,
+                f"{display!r} imported as {local!r} but never used",
+                "delete the import (or export it via __all__)"))
+    return out
+
+
+def _in(*prefixes: str) -> Callable[[str], bool]:
+    return lambda p: p.startswith(prefixes)
+
+
+LINT_RULES: List[Rule] = [
+    Rule("RA101", "raw-prng-key", _in(*JIT_FEEDING), check_raw_prngkey,
+         "raw PRNGKey outside sanctioned constructors"),
+    Rule("RA102", "prng-key-reuse", lambda p: True, check_key_reuse,
+         "PRNG key consumed twice without fold_in/split"),
+    Rule("RA103", "reserved-batch-keys",
+         lambda p: p != RESERVED_DEFINING_MODULE, check_reserved_keys,
+         "reserved scenario keys via named constants only"),
+    Rule("RA104", "metric-name-catalog",
+         _in("src/", "benchmarks/", "tools/"), check_metric_names,
+         "telemetry metric literals must be cataloged"),
+    Rule("RA105", "jit-nondeterminism", _in(*JIT_FEEDING),
+         check_nondeterminism,
+         "no wall-clock/global randomness in jit-feeding modules"),
+    Rule("RA106", "unused-import",
+         _in("src/", "tests/", "benchmarks/", "tools/"),
+         check_unused_imports, "no unused imports"),
+]
+
+
+# -------------------------------------------------------------------- driver
+
+DEFAULT_LINT_DIRS = ("src", "tests", "benchmarks", "tools")
+
+
+def iter_py_files(root: str, dirs: Sequence[str] = DEFAULT_LINT_DIRS):
+    for d in dirs:
+        base = os.path.join(root, d)
+        if os.path.isfile(base) and base.endswith(".py"):
+            yield base
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [x for x in dirnames if x != "__pycache__"]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def lint_file(path: str, repo_root: str,
+              rules: Sequence[Rule] = ()) -> List[Finding]:
+    rules = rules or LINT_RULES
+    with open(path) as fh:
+        source = fh.read()
+    rel = os.path.relpath(path, repo_root).replace(os.sep, "/")
+    try:
+        ctx = make_context(path, source, rel)
+    except SyntaxError as e:
+        return [Finding(code="RA100", path=rel, line=e.lineno or 0,
+                        message=f"file does not parse: {e.msg}",
+                        text="")]
+    allows = inline_allows(ctx.lines)
+    findings: List[Finding] = []
+    for rule in rules:
+        if not rule.applies(rel):
+            continue
+        findings.extend(f for f in rule.check(ctx)
+                        if not is_allowed(f, allows))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.code))
+
+
+def lint_source(source: str, repo_rel: str,
+                rules: Sequence[Rule] = ()) -> List[Finding]:
+    """Lint a source string as if it lived at ``repo_rel`` (tests and
+    fixture snippets; the path controls which rules apply)."""
+    rules = rules or LINT_RULES
+    ctx = make_context(repo_rel, source, repo_rel)
+    allows = inline_allows(ctx.lines)
+    findings: List[Finding] = []
+    for rule in rules:
+        if rule.applies(repo_rel):
+            findings.extend(f for f in rule.check(ctx)
+                            if not is_allowed(f, allows))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.code))
+
+
+def run_lint(repo_root: str, dirs: Sequence[str] = DEFAULT_LINT_DIRS,
+             rules: Sequence[Rule] = ()) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in iter_py_files(repo_root, dirs):
+        findings.extend(lint_file(path, repo_root, rules))
+    return findings

@@ -345,7 +345,7 @@ def upload_wire_bytes(upload_spec: Dict[str, Tree],
         if name == "comm_ef":
             continue
         if name == "delta" and codec is not None and codec.name != "none":
-            payload_spec = jax.eval_shape(
+            payload_spec = jax.eval_shape(  # ra: allow[RA101] abstract: sizes only
                 lambda t: codec.encode(t, jax.random.PRNGKey(0)), sub)
             total += codec.wire_bytes(payload_spec)
         else:

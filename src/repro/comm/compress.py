@@ -56,7 +56,7 @@ def _encode_key(round_index, client_id, target) -> jax.Array:
     client id in scope: without it two clients holding equal-magnitude
     deltas would draw identical rounding noise and their quantization
     errors would correlate instead of averaging out."""
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(0)  # ra: allow[RA101] THE sanctioned root; fold_in below
     if round_index is not None:
         key = jax.random.fold_in(key, round_index)
     if client_id is not None:
@@ -132,6 +132,7 @@ def compressed(alg: FedAlgorithm, codec: Codec, *,
             target = clip_tree_by_l2(target, fed.dp_clip)
         key = (_encode_key(cstate.get(ROUND_KEY), cstate.get(CID_KEY),
                            target)
+               # ra: allow[RA101] deterministic codecs ignore the key
                if codec.stochastic else jax.random.PRNGKey(0))
         decoded = codec.decode(codec.encode(target, key))
         decoded = jax.tree.map(lambda d, x: d.astype(x.dtype),

@@ -1,7 +1,16 @@
-"""Federated optimization configuration (FedAdamW and baselines)."""
+"""Federated optimization configuration (FedAdamW and baselines).
+
+Cross-field interaction rules live in one declarative table,
+:data:`CONSTRAINTS`, read by BOTH :meth:`FedConfig.validate` and the
+static analyzer (``repro.analysis``): validation raises the first
+violated constraint's message; the analyzer uses the table to prove its
+jaxpr-audit config matrix is legal and to enumerate the interaction
+surface in docs. Adding a rule = adding one table row.
+"""
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,104 +156,135 @@ class FedConfig:
         if self.client_state_policy not in ("dense", "blockmean", "int8"):
             raise ValueError(
                 f"unknown client_state_policy {self.client_state_policy!r}")
-        if self.rounds_per_call < 1:
-            raise ValueError("rounds_per_call must be >= 1")
         self._validate_participation()
-        self._validate_privacy(codec_spec)
+        for c in CONSTRAINTS:
+            msg = c.check(self, codec_spec)
+            if msg is not None:
+                raise ValueError(msg)
 
     def dp_enabled(self) -> bool:
         """Client-level DP is on iff a finite clip norm is set."""
         return self.dp_clip > 0.0
 
-    def _validate_privacy(self, codec_spec: str) -> None:
-        """DP fields and their interactions with the other subsystems,
-        with actionable messages (docs/privacy.md)."""
-        if self.dp_clip < 0.0:
-            raise ValueError(
-                f"dp_clip must be >= 0, got {self.dp_clip} "
-                "(0 disables DP; a positive value is the per-client "
-                "L2 bound)")
-        if self.dp_noise_multiplier < 0.0:
-            raise ValueError(
-                f"dp_noise_multiplier must be >= 0, got "
-                f"{self.dp_noise_multiplier}")
-        if self.target_epsilon < 0.0:
-            raise ValueError(
-                f"target_epsilon must be >= 0, got {self.target_epsilon}")
-        if not 0.0 < self.dp_delta < 1.0:
-            raise ValueError(
-                f"dp_delta must be in (0, 1), got {self.dp_delta} "
-                "(convention: well below 1/num_clients)")
-        wants_noise = (self.dp_noise_multiplier > 0.0
-                       or self.target_epsilon > 0.0)
-        if wants_noise and self.dp_clip == 0.0:
-            raise ValueError(
-                "DP noise is calibrated to the clip bound: "
-                "dp_noise_multiplier / target_epsilon require dp_clip > 0 "
-                "(set the per-client L2 clip norm)")
-        if self.dp_noise_multiplier > 0.0 and self.target_epsilon > 0.0:
-            raise ValueError(
-                "set EITHER dp_noise_multiplier (explicit sigma) OR "
-                "target_epsilon (inverted into sigma by "
-                "repro.privacy.resolve_dp_noise at launch), not both")
-        if self.dp_enabled() and self.agg_weighting != "uniform":
-            raise ValueError(
-                f"client-level DP calibrates noise to the UNIFORM mean's "
-                f"sensitivity dp_clip/S; agg_weighting="
-                f"{self.agg_weighting!r} gives individual clients larger "
-                "aggregation weight and breaks that bound. Set "
-                "agg_weighting='uniform' (stragglers/availability remain "
-                "fine).")
-        if self.use_pallas_clipacc:
-            if not self.dp_enabled():
-                raise ValueError(
-                    "use_pallas_clipacc fuses the DP clip into the "
-                    "aggregation: it requires dp_clip > 0")
-            if self.layout != "client_parallel":
-                raise ValueError(
-                    "use_pallas_clipacc operates on the stacked (S, ...) "
-                    "upload of the client_parallel layout; "
-                    "client_sequential aggregates one client at a time "
-                    "inside a scan — use the default jnp clip path there")
-            if codec_spec:
-                raise ValueError(
-                    f"use_pallas_clipacc is incompatible with upload "
-                    f"codec {codec_spec!r}: DP clipping must happen "
-                    "BEFORE codec compression (the codec must encode the "
-                    "bounded values), but the fused kernel clips at "
-                    "aggregation time, after decode. Drop the codec "
-                    "suffix or disable the kernel.")
-
     def _validate_participation(self) -> None:
-        """Participation / scenario fields, with actionable messages (the
-        raw numpy failure for S > N is a generic 'larger sample than
-        population' with no federated context; worse, several fields used
-        to pass through unchecked and only blew up rounds into a run)."""
+        """Participation / scenario DOMAIN checks — value must name a
+        known sampler/availability/weight scheme (the raw numpy failure
+        for S > N is a generic 'larger sample than population' with no
+        federated context). Range and cross-field rules live in
+        :data:`CONSTRAINTS`."""
         from repro.data.sampler import get_sampler, validate_participation
         validate_participation(self.num_clients, self.clients_per_round)
-        if self.local_steps < 1:
-            raise ValueError(
-                f"local_steps must be >= 1, got {self.local_steps} "
-                "(each sampled client runs at least one local step)")
-        if self.rounds < 1:
-            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
         # raises ValueError with the known-spec list on a bad spec; the
         # trace path is validated when the schedule is actually loaded
         from repro.scenario.availability import parse_availability
         if not self.availability.startswith("trace"):
             parse_availability(self.availability, self.num_clients)
         get_sampler(self.sampling)
-        if not 0.0 <= self.straggler_frac <= 1.0:
-            raise ValueError(
-                f"straggler_frac must be in [0, 1], got "
-                f"{self.straggler_frac}")
-        if not 1 <= self.straggler_min_steps <= self.local_steps:
-            raise ValueError(
-                f"straggler_min_steps must be in [1, local_steps="
-                f"{self.local_steps}], got {self.straggler_min_steps} "
-                "(a participating client always applies its first step)")
         from repro.scenario.weights import WEIGHT_SCHEMES
         if self.agg_weighting not in WEIGHT_SCHEMES:
             raise ValueError(
                 f"unknown agg_weighting {self.agg_weighting!r}; "
                 f"known: {WEIGHT_SCHEMES}")
+
+
+# --------------------------------------------------------------- constraints
+#
+# The declarative cross-field rule table. One row per invariant; a row's
+# ``check(cfg, codec_spec)`` returns None when satisfied or the full
+# actionable error message when violated. ``FedConfig.validate`` raises
+# the first violation; ``repro.analysis`` imports the table to validate
+# its audit-matrix configs and to document the interaction surface.
+
+@dataclasses.dataclass(frozen=True)
+class Constraint:
+    name: str                      # stable slug (docs, analyzer reports)
+    fields: Tuple[str, ...]        # config fields the rule reads
+    check: Callable[["FedConfig", str], Optional[str]]
+
+
+def _c(name, fields, fn):
+    return Constraint(name=name, fields=tuple(fields), check=fn)
+
+
+CONSTRAINTS: Tuple[Constraint, ...] = (
+    _c("rounds-per-call-min", ("rounds_per_call",),
+       lambda c, s: None if c.rounds_per_call >= 1 else
+       "rounds_per_call must be >= 1"),
+    _c("sequential-clients-min", ("sequential_clients", "layout"),
+       lambda c, s: None if (c.layout != "client_sequential"
+                             or c.sequential_clients >= 1) else
+       f"sequential_clients must be >= 1, got {c.sequential_clients}"),
+    _c("grad-microbatches-min", ("grad_microbatches",),
+       lambda c, s: None if c.grad_microbatches >= 1 else
+       f"grad_microbatches must be >= 1, got {c.grad_microbatches}"),
+    _c("local-steps-min", ("local_steps",),
+       lambda c, s: None if c.local_steps >= 1 else
+       f"local_steps must be >= 1, got {c.local_steps} "
+       "(each sampled client runs at least one local step)"),
+    _c("rounds-min", ("rounds",),
+       lambda c, s: None if c.rounds >= 1 else
+       f"rounds must be >= 1, got {c.rounds}"),
+    _c("straggler-frac-range", ("straggler_frac",),
+       lambda c, s: None if 0.0 <= c.straggler_frac <= 1.0 else
+       f"straggler_frac must be in [0, 1], got {c.straggler_frac}"),
+    _c("straggler-min-steps-range", ("straggler_min_steps", "local_steps"),
+       lambda c, s: None
+       if 1 <= c.straggler_min_steps <= c.local_steps else
+       f"straggler_min_steps must be in [1, local_steps={c.local_steps}], "
+       f"got {c.straggler_min_steps} "
+       "(a participating client always applies its first step)"),
+    _c("dp-clip-nonneg", ("dp_clip",),
+       lambda c, s: None if c.dp_clip >= 0.0 else
+       f"dp_clip must be >= 0, got {c.dp_clip} (0 disables DP; a "
+       "positive value is the per-client L2 bound)"),
+    _c("dp-noise-nonneg", ("dp_noise_multiplier",),
+       lambda c, s: None if c.dp_noise_multiplier >= 0.0 else
+       f"dp_noise_multiplier must be >= 0, got {c.dp_noise_multiplier}"),
+    _c("dp-epsilon-nonneg", ("target_epsilon",),
+       lambda c, s: None if c.target_epsilon >= 0.0 else
+       f"target_epsilon must be >= 0, got {c.target_epsilon}"),
+    _c("dp-delta-range", ("dp_delta",),
+       lambda c, s: None if 0.0 < c.dp_delta < 1.0 else
+       f"dp_delta must be in (0, 1), got {c.dp_delta} "
+       "(convention: well below 1/num_clients)"),
+    _c("dp-noise-requires-clip",
+       ("dp_noise_multiplier", "target_epsilon", "dp_clip"),
+       lambda c, s: None
+       if not (c.dp_noise_multiplier > 0.0 or c.target_epsilon > 0.0)
+       or c.dp_clip > 0.0 else
+       "DP noise is calibrated to the clip bound: dp_noise_multiplier / "
+       "target_epsilon require dp_clip > 0 (set the per-client L2 clip "
+       "norm)"),
+    _c("dp-sigma-xor-epsilon", ("dp_noise_multiplier", "target_epsilon"),
+       lambda c, s: None
+       if not (c.dp_noise_multiplier > 0.0 and c.target_epsilon > 0.0)
+       else "set EITHER dp_noise_multiplier (explicit sigma) OR "
+       "target_epsilon (inverted into sigma by "
+       "repro.privacy.resolve_dp_noise at launch), not both"),
+    _c("dp-uniform-weighting", ("dp_clip", "agg_weighting"),
+       lambda c, s: None
+       if not c.dp_enabled() or c.agg_weighting == "uniform" else
+       f"client-level DP calibrates noise to the UNIFORM mean's "
+       f"sensitivity dp_clip/S; agg_weighting={c.agg_weighting!r} gives "
+       "individual clients larger aggregation weight and breaks that "
+       "bound. Set agg_weighting='uniform' (stragglers/availability "
+       "remain fine)."),
+    _c("clipacc-requires-dp", ("use_pallas_clipacc", "dp_clip"),
+       lambda c, s: None if not c.use_pallas_clipacc or c.dp_enabled()
+       else "use_pallas_clipacc fuses the DP clip into the aggregation: "
+       "it requires dp_clip > 0"),
+    _c("clipacc-parallel-only", ("use_pallas_clipacc", "layout"),
+       lambda c, s: None
+       if not c.use_pallas_clipacc or c.layout == "client_parallel" else
+       "use_pallas_clipacc operates on the stacked (S, ...) upload of "
+       "the client_parallel layout; client_sequential aggregates one "
+       "client at a time inside a scan — use the default jnp clip path "
+       "there"),
+    _c("clipacc-no-codec", ("use_pallas_clipacc", "algorithm"),
+       lambda c, s: None if not (c.use_pallas_clipacc and s) else
+       f"use_pallas_clipacc is incompatible with upload codec {s!r}: DP "
+       "clipping must happen BEFORE codec compression (the codec must "
+       "encode the bounded values), but the fused kernel clips at "
+       "aggregation time, after decode. Drop the codec suffix or "
+       "disable the kernel."),
+)

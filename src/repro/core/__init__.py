@@ -9,7 +9,7 @@ from repro.core.partition import (
     tree_broadcast_means,
     total_blocks,
 )
-from repro.core.fedadamw import get_algorithm, FedAlgorithm, upload_bytes
+from repro.core.fedadamw import get_algorithm, FedAlgorithm
 from repro.core.rounds import (
     make_round_fn,
     make_multi_round_fn,
@@ -23,7 +23,7 @@ from repro.core.rounds import (
 __all__ = [
     "LeafBlockSpec", "build_block_specs", "block_means", "broadcast_means",
     "tree_block_means", "tree_broadcast_means", "total_blocks",
-    "get_algorithm", "FedAlgorithm", "upload_bytes",
+    "get_algorithm", "FedAlgorithm",
     "make_round_fn", "make_multi_round_fn", "make_local_phase",
     "init_server_state",
     "build_fed_state", "cosine_lr_scale", "upload_shape_spec",

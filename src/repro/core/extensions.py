@@ -22,7 +22,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import FedConfig
-from repro.core import partition
 from repro.core.fedadamw import (FedAlgorithm, _adamw_moments,
                                  _bias_corrections, _delta_g_from_mean_delta,
                                  _fedadamw_init_client, _fedadamw_init_server,
@@ -117,6 +116,7 @@ def fake_quant_int8(x: jax.Array) -> jax.Array:
     :mod:`repro.comm.codecs`."""
     from repro.comm import get_codec
     codec = get_codec("int8")
+    # ra: allow[RA101] deprecated shim: keyless back-compat signature
     out = codec.decode(codec.encode(x, jax.random.PRNGKey(0)))
     return out.astype(x.dtype)
 

@@ -56,7 +56,7 @@ import jax.numpy as jnp
 
 from repro.config import FedConfig
 from repro.core import partition
-from repro.core.tree_util import tree_scale, tree_sub, tree_zeros_like
+from repro.core.tree_util import tree_scale, tree_zeros_like
 
 Array = jax.Array
 Tree = Any
@@ -557,18 +557,3 @@ def _get_base_algorithm(name: str) -> FedAlgorithm:
         from repro.core.extensions import fedlion
         return fedlion()
     raise ValueError(name)
-
-
-def upload_bytes(upload_tree, codec=None) -> int:
-    """Communication cost of one client upload (paper Table 7 accounting).
-
-    .. deprecated:: delegates to :func:`repro.comm.upload_wire_bytes` —
-       the codec-aware accounting that prices the ``delta`` entry through
-       the codec's packed wire payload and never charges client-resident
-       error-feedback residuals. The old ``size x itemsize`` sum here
-       over-reported every compressed upload (pre-codec dense bytes);
-       pass ``codec`` (or call ``upload_wire_bytes`` directly) to price a
-       lossy upload correctly.
-    """
-    from repro.comm import upload_wire_bytes
-    return upload_wire_bytes(upload_tree, codec)

@@ -71,7 +71,7 @@ delta entry's clip + uniform mean for the fused
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -517,3 +517,70 @@ def upload_shape_spec(alg: FedAlgorithm, params, sstate, specs,
         return alg.upload(params, cstate, specs, fed)
 
     return jax.eval_shape(one_upload)
+
+
+# ---------------------------------------------------------- trace entry points
+#
+# Abstract-only construction of the round program for the static analyzer
+# (repro.analysis.jaxpr_audit) and for gate-parity tests: everything below
+# runs zero FLOPs — parameters are never allocated, the model never runs.
+# Two traces of the same (model, fed) produce byte-identical jaxpr text,
+# which is what makes IR diffing a substitute for trajectory parity.
+
+def round_abstract_args(model, fed: FedConfig, *, cfg=None, batch_size=2,
+                        seq_len=16, batch_example=None, with_scenario=None,
+                        rounds=0):
+    """Abstract ``round_fn`` argument tree — no parameter allocation.
+
+    Returns ``((params, sstate, batches, client_ids, round_index), specs,
+    alg)`` where every array is a ``jax.ShapeDtypeStruct``. ``rounds > 0``
+    prepends the (M,) multi-round axis to batches/client_ids (the
+    ``make_multi_round_fn`` calling convention). ``batch_example`` is one
+    per-step batch pytree of arrays/ShapeDtypeStructs to stack to
+    (S, K, ...); the default is the LM ``{"tokens", "labels"}`` pair used
+    by every vit/gpt config. ``with_scenario`` forces the reserved
+    step-mask/weights keys on/off; default mirrors what the scenario
+    engine would emit for ``fed``.
+    """
+    cfg = cfg or model.cfg
+    # ra: allow[RA101] abstract eval: the key is never consumed
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    specs = partition.build_block_specs(params, cfg, fed)
+    alg = get_algorithm(fed)
+    sstate = jax.eval_shape(
+        lambda p: init_server_state(alg, p, specs, fed), params)
+    s, k = fed.clients_per_round, fed.local_steps
+    sd = jax.ShapeDtypeStruct
+    lead = (rounds,) if rounds else ()
+    if batch_example is None:
+        batch_example = {"tokens": sd((batch_size, seq_len), jnp.int32),
+                         "labels": sd((batch_size, seq_len), jnp.int32)}
+    batches = jax.tree.map(
+        lambda a: sd(lead + (s, k) + tuple(a.shape), a.dtype), batch_example)
+    if with_scenario is None:
+        with_scenario = (fed.straggler_frac > 0.0
+                         or fed.agg_weighting != "uniform")
+    if with_scenario:
+        batches[STEP_MASK_KEY] = sd(lead + (s, k), jnp.bool_)
+        batches[AGG_WEIGHTS_KEY] = sd(lead + (s,), jnp.float32)
+    client_ids = sd(lead + (s,), jnp.int32)
+    round_index = sd((), jnp.int32)
+    return (params, sstate, batches, client_ids, round_index), specs, alg
+
+
+def trace_round_jaxpr(model, fed: FedConfig, *, cfg=None,
+                      multi_rounds=0, cosine_total_rounds=10, **kw):
+    """Trace the round program abstractly -> ``(ClosedJaxpr, args)``.
+
+    ``multi_rounds > 0`` traces ``make_multi_round_fn`` over that many
+    scanned rounds instead of the single-round program. Keyword args are
+    forwarded to :func:`round_abstract_args`. The jaxpr's pretty-printed
+    text is deterministic: equal programs ⇒ equal strings, so
+    ``str(trace_round_jaxpr(m, a)[0]) == str(trace_round_jaxpr(m, b)[0])``
+    is the gate-parity check."""
+    args, specs, alg = round_abstract_args(
+        model, fed, cfg=cfg, rounds=multi_rounds, **kw)
+    maker = make_multi_round_fn if multi_rounds else make_round_fn
+    fn = maker(model, fed, specs, alg=alg,
+               cosine_total_rounds=cosine_total_rounds)
+    return jax.make_jaxpr(fn)(*args), args

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import (FedConfig, INPUT_SHAPES, InputShape, ModelConfig,
-                          get_arch, list_archs)
+                          get_arch)
 from repro.core.rounds import make_round_fn
 from repro.core.serve import make_serve_step
 from repro.launch import input_specs as ispecs

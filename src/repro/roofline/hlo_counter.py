@@ -21,7 +21,6 @@ keep their semantics there.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 
@@ -345,6 +344,37 @@ def top_bytes_ops(hlo_text: str, n: int = 20) -> List[tuple]:
     walk(c.entry, 1.0)
     out.sort(key=lambda t: -t[0])
     return out[:n]
+
+
+_ALIAS_MARK = "input_output_alias={"
+_ALIAS_ENTRY_RE = re.compile(r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{([\d,\s]*)\}")
+
+
+def parse_input_output_alias(hlo_text: str) -> Dict[int, int]:
+    """Donation aliasing as an IR fact: ``{input parameter index ->
+    output tuple index}`` from the compiled module header's
+    ``input_output_alias={ {0}: (0, {}, may-alias), ... }`` annotation.
+
+    Empty dict when the program donates nothing. Input parameters are in
+    jit-flattening order, so for ``donate_argnums=(0, 1)`` over
+    ``(params, sstate, ...)`` the donated leaves are parameters
+    ``0 .. len(leaves(params)) + len(leaves(sstate)) - 1`` — the static
+    analyzer (``repro.analysis.jaxpr_audit``, rule RA204) checks exactly
+    that range is aliased, turning the PR 3 ``is_deleted`` buffer
+    property into a compile-time assertion."""
+    start = hlo_text.find(_ALIAS_MARK)
+    if start < 0:
+        return {}
+    i = start + len(_ALIAS_MARK)
+    depth = 1           # the annotation nests {output}: (..., {index}) pairs
+    while i < len(hlo_text) and depth:
+        depth += {"{": 1, "}": -1}.get(hlo_text[i], 0)
+        i += 1
+    out: Dict[int, int] = {}
+    for entry in _ALIAS_ENTRY_RE.finditer(hlo_text[start:i]):
+        out_index = int(entry.group(1).split(",")[0]) if entry.group(1).strip() else 0
+        out[int(entry.group(2))] = out_index
+    return out
 
 
 def analyze_hlo(hlo_text: str) -> Dict[str, float]:

@@ -36,7 +36,7 @@ indivisible axis.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np

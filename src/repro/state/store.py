@@ -60,7 +60,7 @@ Usage — a 4-client dense table over one weight leaf (runs under
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -40,6 +40,25 @@ import os
 import threading
 from typing import Dict, Union
 
+#: The machine-readable form of the docstring table above: every metric
+#: name that may appear as a STRING LITERAL in source. The RA104 lint
+#: rule (``repro.analysis``) checks literal ``telemetry.add(...)`` /
+#: ``set_gauge(...)`` / ``counter(...)`` / ``gauge(...)`` names against
+#: this catalog — a typo'd name silently registers a second accumulator
+#: and splits the metric. Dynamically-built names (round diagnostics'
+#: ``diag/...`` keys, test scratch names) are out of scope by design.
+#: Keep this dict, the table above, and docs/observability.md in sync.
+CANONICAL_METRICS: Dict[str, str] = {
+    "prefetch/wait_s": "counter",
+    "prefetch/produce_s": "counter",
+    "prefetch/queue_depth": "gauge",
+    "scenario/valid_step_frac": "gauge",
+    "round/cohort_size": "gauge",
+    "rounds/completed": "counter",
+    "comm/wire_bytes_total": "counter",
+    "dp/epsilon": "gauge",
+}
+
 
 class Counter:
     """Thread-safe monotonically-increasing float."""

@@ -9,6 +9,8 @@ product — the same assertions, a fixed handful of examples.
 """
 from __future__ import annotations
 
+__all__ = ["given", "settings", "st"]
+
 try:
     from hypothesis import given, settings  # noqa: F401
     from hypothesis import strategies as st  # noqa: F401

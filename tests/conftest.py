@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import (AttentionConfig, FedConfig, ModelConfig, MoEConfig,
+from repro.config import (AttentionConfig, ModelConfig, MoEConfig,
                           SSMConfig)
 from repro.models import build_model
 

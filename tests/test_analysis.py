@@ -1,0 +1,326 @@
+"""Static-analysis subsystem: per-rule lint fixtures (positive +
+negative), distinct exit codes for deliberately-broken programs, inline
+allow / baseline suppression mechanics, the declarative FedConfig
+constraint table, and jaxpr gate-parity for the DP/diagnostics/scenario
+off-gates in both client layouts (the structural replacement for the
+trajectory-parity drives this PR migrated — see test_privacy.py /
+test_telemetry.py backstops)."""
+import json
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (EXIT_CODES, Finding, exit_code_for,
+                            load_baseline, save_baseline, split_baselined)
+from repro.analysis.findings import inline_allows
+from repro.analysis.jaxpr_audit import (audit_callbacks, audit_dtypes,
+                                        audit_matrix, gate_parity_findings)
+from repro.analysis.lint import lint_source
+from repro.config import FedConfig
+from repro.config.fed_config import CONSTRAINTS
+
+# honor the CI layout matrix (same pattern as test_scenario.py)
+_ENV_LAYOUT = os.environ.get("REPRO_LAYOUT", "")
+LAYOUTS = ([_ENV_LAYOUT] if _ENV_LAYOUT
+           else ["client_parallel", "client_sequential"])
+
+CORE = "src/repro/core/somemod.py"   # a jit-feeding pseudo-path
+
+
+def codes(findings):
+    return sorted({f.code for f in findings})
+
+
+def lint(src, path=CORE):
+    return lint_source(textwrap.dedent(src), path)
+
+
+# ------------------------------------------------- per-rule lint fixtures
+
+def test_ra101_raw_prngkey_flagged_and_sanctioned_forms_pass():
+    bad = lint("""\
+        import jax
+        key = jax.random.PRNGKey(0)
+    """)
+    assert codes(bad) == ["RA101"] and bad[0].line == 2
+    # immediately folded, aliased import: sanctioned
+    good = lint("""\
+        import jax.random as jr
+        key = jr.fold_in(jr.PRNGKey(0), 7)
+    """)
+    assert good == []
+    # outside jit-feeding packages the rule does not apply
+    assert lint("import jax\nk = jax.random.PRNGKey(0)\n",
+                "benchmarks/somebench.py") == []
+    # inline allow silences it
+    assert lint("""\
+        import jax
+        key = jax.random.PRNGKey(0)  # ra: allow[RA101] test fixture
+    """) == []
+
+
+def test_ra102_key_reuse_flagged_fold_in_is_fine():
+    bad = lint("""\
+        import jax
+
+        def f(shape):
+            key = jax.random.fold_in(jax.random.PRNGKey(0), 1)
+            a = jax.random.normal(key, shape)
+            b = jax.random.uniform(key, shape)
+            return a + b
+    """)
+    assert codes(bad) == ["RA102"]
+    good = lint("""\
+        import jax
+
+        def f(shape):
+            key = jax.random.fold_in(jax.random.PRNGKey(0), 1)
+            a = jax.random.normal(jax.random.fold_in(key, 0), shape)
+            b = jax.random.uniform(jax.random.fold_in(key, 1), shape)
+            return a + b
+    """)
+    assert codes(good) == []
+    # reassigned-per-draw (split idiom) is fine: two assignments
+    assert lint("""\
+        import jax
+
+        def f(shape):
+            key = jax.random.PRNGKey(0)  # ra: allow[RA101] fixture
+            a = jax.random.normal(key, shape)
+            key = jax.random.fold_in(key, 1)
+            b = jax.random.normal(key, shape)
+            return a + b
+    """) == []
+
+
+def test_ra103_reserved_key_literals_only_in_scenario():
+    bad = lint('mask = batches["_step_mask"]\n', "src/repro/core/x.py")
+    assert codes(bad) == ["RA103"]
+    bad2 = lint('w = {"_agg_weights": 1}\n', "tests/test_x.py")
+    assert codes(bad2) == ["RA103"]
+    # the defining module itself is exempt
+    assert lint('STEP_MASK_KEY = "_step_mask"\n',
+                "src/repro/scenario/__init__.py") == []
+
+
+def test_ra104_metric_name_catalog():
+    bad = lint("""\
+        from repro import telemetry
+        telemetry.add("prefetch/wait_sec", 1.0)
+    """, "src/repro/launch/somefile.py")
+    assert codes(bad) == ["RA104"]
+    assert "prefetch/wait_s" in bad[0].fixit   # difflib suggestion
+    good = lint("""\
+        from repro import telemetry
+        telemetry.add("prefetch/wait_s", 1.0)
+        telemetry.set_gauge("round/cohort_size", 4)
+    """, "src/repro/launch/somefile.py")
+    assert good == []
+    # tests/ may invent scratch names freely
+    assert lint('from repro import telemetry\ntelemetry.add("x", 1)\n',
+                "tests/test_x.py") == []
+
+
+def test_ra105_wallclock_and_global_randomness():
+    bad = lint("""\
+        import time
+        import numpy as np
+        t = time.time()
+        x = np.random.normal(0, 1, (3,))
+    """)
+    assert codes(bad) == ["RA105"] and len(bad) == 2
+    good = lint("""\
+        import numpy as np
+        rng = np.random.default_rng(7)
+        x = rng.normal(0, 1, (3,))
+    """)
+    assert good == []
+    # launch/ (host-side driver code) is out of scope
+    assert lint("import time\nt = time.time()\n",
+                "src/repro/launch/x.py") == []
+
+
+def test_ra106_unused_imports():
+    bad = lint("import os\nimport sys\nprint(sys.argv)\n")
+    assert codes(bad) == ["RA106"] and "'os'" in bad[0].message
+    # __all__ re-export counts as a use; __init__.py is exempt
+    assert lint('import os\n__all__ = ["os"]\n') == []
+    assert lint("import os\n", "src/repro/core/__init__.py") == []
+
+
+# ------------------------------------------- exit codes / suppressions
+
+def test_each_broken_fixture_gets_a_distinct_exit_code():
+    """The acceptance matrix: reused key, counter typo, f64 leak, and a
+    leaking gate each map to their own non-zero process exit code."""
+    reused = lint("""\
+        import jax
+
+        def f(s):
+            k = jax.random.fold_in(jax.random.PRNGKey(0), 1)
+            return jax.random.normal(k, s) + jax.random.normal(k, s)
+    """)
+    typo = lint('from repro import telemetry\n'
+                'telemetry.add("comm/wire_byte_total", 1)\n',
+                "src/repro/comm/x.py")
+    with jax.experimental.enable_x64(True):
+        f64_jaxpr = jax.make_jaxpr(
+            lambda x: x.astype("float64") * 2.0)(jnp.ones((2,)))
+    f64 = audit_dtypes("fixture", f64_jaxpr)
+    gate = gate_parity_findings(
+        [c for c in audit_matrix(("client_parallel",))
+         if c.name == "dp_off[client_parallel]"],
+        {"dp_off[client_parallel]": "program A",
+         "base[client_parallel]": "program B"})
+    got = {exit_code_for(f) for f in (reused, typo, f64, gate)}
+    assert got == {12, 14, 22, 21}      # RA102 RA104 RA202 RA201
+    assert exit_code_for([]) == 0
+    assert exit_code_for(reused + typo) == 1        # mixed -> 1
+    assert len(set(EXIT_CODES.values())) == len(EXIT_CODES)
+
+
+def test_inline_allow_covers_own_and_next_line():
+    allows = inline_allows(["x = 1  # ra: allow[RA105] reason", "y = 2",
+                            "z = 3"])
+    assert allows == {1: {"RA105"}, 2: {"RA105"}}
+
+
+def test_baseline_roundtrip_and_split(tmp_path):
+    f1 = Finding(code="RA106", path="src/a.py", line=3, message="m",
+                 text="import os")
+    f2 = Finding(code="RA106", path="src/b.py", line=9, message="m",
+                 text="import sys")
+    path = str(tmp_path / "baseline.json")
+    save_baseline([f1], path)
+    doc = json.load(open(path))
+    assert doc["suppressions"][0]["path"] == "src/a.py"
+    new, old = split_baselined([f1, f2], load_baseline(path))
+    assert old == [f1] and new == [f2]
+    # fingerprint survives pure line drift, breaks on text change
+    drifted = Finding(code="RA106", path="src/a.py", line=99, message="m",
+                      text="  import os ")
+    assert split_baselined([drifted], load_baseline(path))[1] == [drifted]
+
+
+# --------------------------------------------- FedConfig constraint table
+
+def test_constraint_table_names_unique_and_each_rule_fires():
+    names = [c.name for c in CONSTRAINTS]
+    assert len(names) == len(set(names))
+    violating = {
+        "rounds-per-call-min": dict(rounds_per_call=0),
+        "sequential-clients-min": dict(layout="client_sequential",
+                                       sequential_clients=0),
+        "grad-microbatches-min": dict(grad_microbatches=0),
+        "local-steps-min": dict(local_steps=0),
+        "rounds-min": dict(rounds=0),
+        "straggler-frac-range": dict(straggler_frac=2.0),
+        "straggler-min-steps-range": dict(straggler_min_steps=99),
+        "dp-clip-nonneg": dict(dp_clip=-1.0),
+        "dp-noise-nonneg": dict(dp_noise_multiplier=-1.0),
+        "dp-epsilon-nonneg": dict(target_epsilon=-1.0),
+        "dp-delta-range": dict(dp_delta=2.0),
+        "dp-noise-requires-clip": dict(dp_noise_multiplier=1.0),
+        "dp-sigma-xor-epsilon": dict(dp_clip=1.0, dp_noise_multiplier=1.0,
+                                     target_epsilon=2.0),
+        "dp-uniform-weighting": dict(dp_clip=1.0,
+                                     agg_weighting="data_size"),
+        "clipacc-requires-dp": dict(use_pallas_clipacc=True),
+        "clipacc-parallel-only": dict(use_pallas_clipacc=True, dp_clip=1.0,
+                                      layout="client_sequential"),
+        "clipacc-no-codec": dict(use_pallas_clipacc=True, dp_clip=1.0),
+    }
+    assert set(violating) == set(names)   # every table row is exercised
+    base = FedConfig(num_clients=4, clients_per_round=2)
+    for c in CONSTRAINTS:
+        codec = "int8" if c.name == "clipacc-no-codec" else ""
+        bad = FedConfig(num_clients=4, clients_per_round=2,
+                        **violating[c.name])
+        assert c.check(bad, codec), c.name
+        assert c.check(base, "") is None, c.name
+        assert c.fields, c.name
+
+
+def test_audit_matrix_configs_all_validate():
+    for case in audit_matrix():
+        case.fed.validate()
+
+
+# ------------------------------------------------- jaxpr-level fixtures
+
+def test_callback_inside_scan_flagged():
+    def noisy_scan(xs):
+        def body(c, x):
+            y = jax.pure_callback(
+                lambda v: v, jax.ShapeDtypeStruct((), jnp.float32), x)
+            return c + y, y
+        return jax.lax.scan(body, jnp.float32(0), xs)
+
+    closed = jax.make_jaxpr(noisy_scan)(jnp.ones((4,), jnp.float32))
+    found = audit_callbacks("fixture", closed)
+    assert codes(found) == ["RA203"]
+    clean = jax.make_jaxpr(
+        lambda xs: jax.lax.scan(lambda c, x: (c + x, x), jnp.float32(0),
+                                xs))(jnp.ones((4,), jnp.float32))
+    assert audit_callbacks("fixture", clean) == []
+    # outside a loop body a callback is legitimate (metrics spool drain)
+    outside = jax.make_jaxpr(
+        lambda x: jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct((), jnp.float32), x))(
+                jnp.float32(1))
+    assert audit_callbacks("fixture", outside) == []
+
+
+def test_f64_leak_flagged_f32_program_clean():
+    with jax.experimental.enable_x64(True):
+        leak = jax.make_jaxpr(lambda x: x.astype("float64") + 1.0)(
+            jnp.ones((2,), jnp.float32))
+    assert codes(audit_dtypes("fixture", leak)) == ["RA202"]
+    clean = jax.make_jaxpr(lambda x: x * 2 + 1)(jnp.ones((2,), jnp.float32))
+    assert audit_dtypes("fixture", clean) == []
+
+
+# ------------------------------------- gate-parity, both client layouts
+
+@pytest.fixture(scope="module")
+def traced_matrix():
+    """Trace the audit matrix once per layout under test (abstract-only:
+    zero FLOPs, ~1 s per trace)."""
+    from repro.analysis.jaxpr_audit import tiny_model, trace_case
+    model, cfg = tiny_model()
+    out = {}
+    for lay in LAYOUTS:
+        cases = [c for c in audit_matrix((lay,))
+                 if not c.name.startswith("multi_")]
+        texts = {c.name: str(trace_case(model, cfg, c)[0]) for c in cases}
+        out[lay] = (cases, texts)
+    return out
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_gate_parity_dp_diag_scenario_off(layout, traced_matrix):
+    """DP-off, diagnostics-off (traced under a LIVE host telemetry
+    session), and scenario-off must trace the byte-identical program to
+    the feature-free base; each feature ON must differ (non-vacuity).
+    This is the structural check that replaced the trajectory-parity
+    drives in test_privacy.py / test_telemetry.py."""
+    cases, texts = traced_matrix[layout]
+    assert gate_parity_findings(cases, texts) == []
+    # and the audit raises when a gate leaks: corrupt one off-program
+    broken = dict(texts)
+    broken[f"dp_off[{layout}]"] += " leak"
+    leaks = gate_parity_findings(cases, broken)
+    assert codes(leaks) == ["RA201"]
+
+
+def test_donation_alias_parser():
+    from repro.roofline.hlo_counter import parse_input_output_alias
+    hdr = ("HloModule jit_round_fn, is_scheduled=true, "
+           "input_output_alias={ {0}: (0, {}, may-alias), "
+           "{1}: (1, {}, may-alias), {12}: (12, {}, may-alias) }, "
+           "frontend_attributes={foo=\"bar\"}")
+    assert parse_input_output_alias(hdr) == {0: 0, 1: 1, 12: 12}
+    assert parse_input_output_alias("HloModule nothing") == {}

@@ -6,10 +6,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import build_tiny, tiny_batch
+from conftest import build_tiny
 from repro.config import FedConfig
+from repro.comm import upload_wire_bytes
 from repro.core import (build_fed_state, get_algorithm, init_server_state,
-                        make_round_fn, upload_bytes)
+                        make_round_fn)
 from repro.core.partition import build_block_specs
 
 
@@ -85,7 +86,7 @@ def test_upload_bytes_ordering_matches_table7():
             lambda: alg.upload(params,
                                alg.init_client(params, sstate, fed,
                                                specs=specs), specs, fed))
-        sizes[agg] = upload_bytes(up)
+        sizes[agg] = upload_wire_bytes(up)
     d_bytes = sizes["none"]
     assert sizes["none"] < sizes["mean_v"] < 1.1 * d_bytes
     assert sizes["full_v"] > 1.8 * d_bytes

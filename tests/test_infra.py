@@ -8,10 +8,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import build_tiny, tiny_batch
+from conftest import build_tiny
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.config import get_arch
-from repro.core.serve import generate, make_serve_step
+from repro.core.serve import generate
 from repro.roofline.analysis import count_params, model_flops
 from repro.roofline.hlo_counter import analyze_hlo
 

@@ -1,13 +1,12 @@
 """Model-layer tests: every family's forward/loss/decode paths, attention
 implementations, rotary embeddings."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import build_tiny, tiny_batch, tiny_config
+from conftest import build_tiny, tiny_batch
 from repro.config import AttentionConfig, ModelConfig
 from repro.models.attention import (_attention_core_chunked,
                                     _attention_core_naive)

@@ -19,7 +19,7 @@ from repro.core.fedadamw import get_algorithm
 from repro.data import RoundBatchGenerator, get_sampler, make_task
 from repro.launch.pipeline import HostPrefetcher, RoundEngine, plan_round_blocks
 from repro.metrics import MetricsSpool
-from repro.scenario import (AGG_WEIGHTS_KEY, STEP_MASK_KEY, AlwaysOn,
+from repro.scenario import (AGG_WEIGHTS_KEY, STEP_MASK_KEY,
                             Bernoulli, ParticipationScenario, Trace,
                             aggregation_weights, parse_availability,
                             step_validity_mask)

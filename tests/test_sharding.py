@@ -1,13 +1,12 @@
 """Sharding-rule tests: every sharded dim must divide its mesh axis size,
 for every assigned architecture, on a stub of the production mesh."""
-import dataclasses
 
 import jax
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.config import FedConfig, get_arch, list_archs
+from repro.config import FedConfig, get_arch
 from repro.launch import input_specs as ispecs
 from repro.models import build_model
 from repro.sharding import specs as shspecs

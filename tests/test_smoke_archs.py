@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import FedConfig, get_arch, list_archs
+from repro.config import FedConfig, get_arch
 from repro.config.model_config import reduced_variant
 from repro.core import build_fed_state, make_round_fn
 from repro.models import build_model

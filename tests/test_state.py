@@ -17,7 +17,7 @@ from repro.comm import EF_KEY
 from repro.config import FedConfig
 from repro.core import build_fed_state, make_round_fn
 from repro.core.fedadamw import get_algorithm
-from repro.core.partition import LeafBlockSpec, build_block_specs
+from repro.core.partition import build_block_specs
 from repro.state import ClientStateStore, specs_like, store_for, table_pspecs
 
 _ENV_LAYOUT = os.environ.get("REPRO_LAYOUT")

@@ -18,7 +18,7 @@ from conftest import build_tiny
 from repro import telemetry
 from repro.config import FedConfig
 from repro.core import build_fed_state
-from repro.core.rounds import make_local_phase
+from repro.core.rounds import make_local_phase, trace_round_jaxpr
 from repro.data import RoundBatchGenerator, make_task
 from repro.launch.pipeline import (HostPrefetcher, RoundEngine,
                                    plan_round_blocks)
@@ -134,38 +134,40 @@ def test_session_module_functions_noop_without_session():
 
 @pytest.mark.parametrize("layout", LAYOUTS)
 def test_disabled_telemetry_bit_exact(layout):
-    """A live tracing session (host spans + counters) and the default
-    no-session path must produce BIT-identical trajectories — pipelined
-    and rounds_per_call-fused. The device program never depends on host
-    telemetry; this guards that statically gated claim at runtime."""
+    """A live tracing session (host spans + counters) must not touch the
+    device program. Structural check FIRST: the round program traced
+    inside ``telemetry.session()`` is byte-identical to the no-session
+    trace, single-round AND rounds_per_call-fused (jaxpr gate-parity,
+    docs/analysis.md — milliseconds of IR diff where this test used to
+    drive four full trajectories). One pipelined eager trajectory pair
+    stays as the end-to-end backstop."""
     cfg, model, _ = build_tiny("dense")
     task = _task(cfg)
     fed = FedConfig(algorithm="fedadamw", num_clients=4,
                     clients_per_round=2, local_steps=2, lr=1e-3,
                     layout=layout, sequential_clients=2)
+
+    base_txt = str(trace_round_jaxpr(model, fed, cfg=cfg)[0])
+    with telemetry.session():
+        live_txt = str(trace_round_jaxpr(model, fed, cfg=cfg)[0])
+        live_fused = str(trace_round_jaxpr(model, fed, cfg=cfg,
+                                           multi_rounds=3)[0])
+    base_fused = str(trace_round_jaxpr(model, fed, cfg=cfg,
+                                       multi_rounds=3)[0])
+    assert base_txt == live_txt          # single-round program unchanged
+    assert base_fused == live_fused      # fused scan program unchanged
+
     params, specs, alg, sstate = build_fed_state(
         model, fed, jax.random.key(0), cfg=cfg)
     engine = RoundEngine(model, fed, specs, alg=alg,
                          cosine_total_rounds=ROUNDS, donate=False)
-    fused_fed = dataclasses.replace(fed, rounds_per_call=3)
-    fused = RoundEngine(model, fused_fed, specs, alg=alg,
-                        cosine_total_rounds=ROUNDS, donate=False)
     blocks1 = plan_round_blocks(ROUNDS, EVERY, 1)
-    blocks3 = plan_round_blocks(ROUNDS, EVERY, 3)
-
     base, p_base = _drive(engine, params, sstate, _gen(task), blocks1, 2)
     with telemetry.session():
         traced, p_traced = _drive(engine, params, sstate, _gen(task),
                                   blocks1, 2)
-        traced_f, p_traced_f = _drive(fused, params, sstate, _gen(task),
-                                      blocks3, 2)
-    base_f, p_base_f = _drive(fused, params, sstate, _gen(task), blocks3, 2)
-
     assert [m for _, m in base] == [m for _, m in traced]
-    assert [m for _, m in base_f] == [m for _, m in traced_f]
     for a, b in zip(jax.tree.leaves(p_base), jax.tree.leaves(p_traced)):
-        assert jnp.array_equal(a, b)
-    for a, b in zip(jax.tree.leaves(p_base_f), jax.tree.leaves(p_traced_f)):
         assert jnp.array_equal(a, b)
 
 

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Static-analysis driver: AST lint + jaxpr program audit.
+
+Usage:
+    PYTHONPATH=src python tools/analyze.py --check        # lint + audit (CI)
+    PYTHONPATH=src python tools/analyze.py --lint         # level 1 only
+    PYTHONPATH=src python tools/analyze.py --audit        # level 2 only
+    PYTHONPATH=src python tools/analyze.py --audit --no-donation
+    PYTHONPATH=src python tools/analyze.py --update-baseline
+    PYTHONPATH=src python tools/analyze.py --lint --baseline /dev/null
+
+Exit codes (docs/analysis.md): 0 clean; when every non-baselined finding
+shares one rule, that rule's distinct code (RA101→11 … RA106→16,
+RA201→21 … RA204→24); 1 for mixed-rule findings. CI greps the code to
+tell failure classes apart.
+
+The baseline (``src/repro/analysis/baseline.json``) suppresses accepted
+pre-existing findings by (code, path, stripped-line) fingerprint;
+``--update-baseline`` regenerates it from the current tree. Sanctioned
+sites prefer an inline ``# ra: allow[RAxxx] reason`` comment instead.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    mode = p.add_mutually_exclusive_group()
+    mode.add_argument("--check", action="store_true",
+                      help="lint + audit (the CI default)")
+    mode.add_argument("--lint", action="store_true", help="AST lint only")
+    mode.add_argument("--audit", action="store_true",
+                      help="jaxpr audit only")
+    mode.add_argument("--update-baseline", action="store_true",
+                      help="accept all current LINT findings into the "
+                           "baseline (audit findings are never "
+                           "baselined: the program invariants hold or "
+                           "the build is broken)")
+    p.add_argument("--baseline", default=None,
+                   help="baseline path (default: the checked-in one; "
+                        "/dev/null disables suppression)")
+    p.add_argument("--no-donation", action="store_true",
+                   help="skip the RA204 donation compile (~10 s) in the "
+                        "audit")
+    args = p.parse_args(argv)
+
+    from repro.analysis import (exit_code_for, load_baseline, run_audit,
+                                run_lint, save_baseline, split_baselined)
+
+    do_lint = args.lint or args.check or args.update_baseline \
+        or not (args.lint or args.audit)
+    do_audit = args.audit or args.check or not (
+        args.lint or args.audit or args.update_baseline)
+
+    findings = []
+    if do_lint:
+        lint_findings = run_lint(REPO_ROOT)
+        if args.update_baseline:
+            path = save_baseline(lint_findings, args.baseline)
+            print(f"baseline: {len(lint_findings)} suppression(s) "
+                  f"written to {path}")
+            return 0
+        findings += lint_findings
+    if do_audit:
+        findings += run_audit(donation=not args.no_donation)
+
+    new, baselined = split_baselined(findings, load_baseline(args.baseline))
+    for f in new:
+        print(f.render())
+    tag = f" ({len(baselined)} baselined)" if baselined else ""
+    print(f"analyze: {len(new)} finding(s){tag} — "
+          f"{'FAIL' if new else 'ok'}")
+    return exit_code_for(new)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
