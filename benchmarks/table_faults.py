@@ -1,0 +1,61 @@
+"""Fault tolerance: accuracy retention under injected upload faults.
+
+Sweeps the NaN-corruption rate against the defense registry
+(docs/faults.md) on the 15-round vit-tiny-fl run and reports each cell's
+final train loss / test accuracy plus ``retention`` — the fraction of
+the fault-free accuracy the defended run keeps. The acceptance contract:
+at ``p_nan = 0.1``, ``norm_filter`` + quorum stays finite and within 10%
+of the fault-free train loss, while undefended mean aggregation
+demonstrably diverges (one NaN upload poisons the global params — rows
+show ``diverged``).
+"""
+from benchmarks.common import Rows, bench_fl, budget, print_table
+
+FAULT_RATES = (0.0, 0.1, 0.3)
+DEFENSES = ("none", "mean", "trimmed0.25", "coordinate_median",
+            "norm_filter")
+
+
+def _cell(p_nan: float, defense: str):
+    kw = dict(fault_nan=p_nan, fault_seed=1)
+    if defense != "none":
+        kw.update(robust_agg=defense, min_quorum=1)
+    h = bench_fl("fedadamw", **kw)
+    loss = h["train_loss"][-1]
+    acc = h["test_acc"][-1] if h["test_acc"] else float("nan")
+    return loss, acc
+
+
+def run() -> Rows:
+    rows = Rows("table_faults")
+    base_loss, base_acc = _cell(0.0, "none")
+    for p_nan in FAULT_RATES:
+        for defense in DEFENSES:
+            if p_nan == 0.0 and defense != "none":
+                continue                     # one fault-free baseline row
+            loss, acc = _cell(p_nan, defense)
+            finite = loss == loss and abs(loss) != float("inf")
+            rows.add(
+                p_nan=p_nan, defense=defense,
+                train_loss=(round(loss, 4) if finite else "diverged"),
+                test_acc=(round(acc, 4) if acc == acc else "diverged"),
+                loss_vs_clean=(round(loss / base_loss, 3)
+                               if finite else "diverged"),
+                retention=(round(acc / base_acc, 3)
+                           if acc == acc and base_acc else "diverged"))
+    rows.save()
+    print_table("Fault tolerance — NaN-fault rate x defense "
+                f"({budget(15, 3)} rounds, vit-tiny-fl)", rows.rows)
+    # the acceptance pair, machine-checkable from the saved rows
+    cells = {(r["p_nan"], r["defense"]): r for r in rows.rows}
+    defended = cells.get((0.1, "norm_filter"), {})
+    undefended = cells.get((0.1, "none"), {})
+    print(f"acceptance: norm_filter@0.1 loss_vs_clean="
+          f"{defended.get('loss_vs_clean')} (want <= 1.10), "
+          f"undefended@0.1 train_loss={undefended.get('train_loss')} "
+          "(want diverged)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -177,12 +177,28 @@ def audit_matrix(layouts: Tuple[str, ...] = LAYOUTS) -> List[AuditCase]:
             f"scenario_on[{lay}]",
             _base_fed(lay, straggler_frac=0.5, agg_weighting="inv_steps"),
             differs_from=b, trace_kw={"with_scenario": True}))
+        cases.append(AuditCase(
+            f"faults_off[{lay}]", _base_fed(lay, fault_seed=123),
+            parity_with=b, trace_kw={"with_faults": False}))
+        # the mean defense + quorum work in BOTH layouts; the rank-based
+        # aggregators are client_parallel-only (CONSTRAINTS)
+        cases.append(AuditCase(
+            f"faults_on[{lay}]",
+            _base_fed(lay, fault_nan=0.3, robust_agg="mean",
+                      min_quorum=1),
+            differs_from=b, trace_kw={"with_faults": True}))
     if "client_parallel" not in layouts:
         return cases
     cases.append(AuditCase(
         "codec_on[client_parallel]",
         _base_fed("client_parallel", algorithm="fedadamw+int8"),
         differs_from="base[client_parallel]"))
+    cases.append(AuditCase(
+        "defense_on[client_parallel]",
+        _base_fed("client_parallel", fault_scale=0.3,
+                  robust_agg="trimmed0.25"),
+        differs_from="faults_on[client_parallel]",
+        trace_kw={"with_faults": True}))
     cases.append(AuditCase(
         "multi_dp_off[client_parallel]",
         _base_fed("client_parallel", dp_clip=0.0, dp_seed=123,

@@ -43,10 +43,13 @@ JIT_FEEDING = (
     "src/repro/core/", "src/repro/comm/", "src/repro/privacy/",
     "src/repro/state/", "src/repro/kernels/", "src/repro/scenario/",
     "src/repro/models/", "src/repro/lora/", "src/repro/data/",
+    "src/repro/faults/",
 )
 
-RESERVED_BATCH_KEYS = ("_step_mask", "_agg_weights")  # ra: allow[RA103] the rule's own pattern table
-RESERVED_DEFINING_MODULE = "src/repro/scenario/__init__.py"
+RESERVED_BATCH_KEYS = ("_step_mask", "_agg_weights",  # ra: allow[RA103] the rule's own pattern table
+                       "_fault_drop", "_fault_mult")  # ra: allow[RA103] the rule's own pattern table
+RESERVED_DEFINING_MODULES = ("src/repro/scenario/__init__.py",
+                             "src/repro/faults/__init__.py")
 
 # jax.random functions that CONSUME a key (fresh draws); fold_in/split/
 # clone DERIVE new keys and are the sanctioned way to reuse one.
@@ -243,7 +246,8 @@ def check_reserved_keys(ctx: FileContext) -> List[Finding]:
                 "identity and a drifted spelling silently ships the key "
                 "into the model batch",
                 "import STEP_MASK_KEY / AGG_WEIGHTS_KEY from "
-                "repro.scenario"))
+                "repro.scenario (or FAULT_DROP_KEY / FAULT_MULT_KEY "
+                "from repro.faults)"))
     return out
 
 
@@ -355,8 +359,9 @@ LINT_RULES: List[Rule] = [
     Rule("RA102", "prng-key-reuse", lambda p: True, check_key_reuse,
          "PRNG key consumed twice without fold_in/split"),
     Rule("RA103", "reserved-batch-keys",
-         lambda p: p != RESERVED_DEFINING_MODULE, check_reserved_keys,
-         "reserved scenario keys via named constants only"),
+         lambda p: p not in RESERVED_DEFINING_MODULES,
+         check_reserved_keys,
+         "reserved round-batch keys via named constants only"),
     Rule("RA104", "metric-name-catalog",
          _in("src/", "benchmarks/", "tools/"), check_metric_names,
          "telemetry metric literals must be cataloged"),

@@ -1,3 +1,7 @@
-from repro.checkpoint.checkpointer import save_checkpoint, restore_checkpoint
+from repro.checkpoint.checkpointer import (CorruptCheckpointError,
+                                           list_checkpoints,
+                                           restore_checkpoint,
+                                           save_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint"]
+__all__ = ["CorruptCheckpointError", "list_checkpoints",
+           "restore_checkpoint", "save_checkpoint"]

@@ -12,6 +12,18 @@ previous complete checkpoint or the new complete checkpoint — never a
 truncated ``.npz`` that ``latest`` points at. Failed writes clean their
 temp files up.
 
+Restores are VERIFIED: ``save_checkpoint`` records the SHA-256 of the
+finished ``.npz`` in the manifest (hashed AFTER the write completes —
+``np.savez`` seeks inside the zip container, so a streaming hash of the
+write would not match the final bytes), and ``restore_checkpoint``
+recomputes it before deserializing. A mismatch (bit rot, a torn copy, a
+truncation the atomic-write protocol cannot see, e.g. an external sync)
+raises :class:`CorruptCheckpointError` — or, when restoring "latest",
+falls back to the newest checkpoint in the directory that DOES verify,
+so the NaN-watchdog rollback path (docs/faults.md) always lands on
+intact state. Pre-checksum manifests (no ``npz_sha256`` key) restore
+unverified for compatibility.
+
 The training driver (``repro.launch.train``) wires this in via
 ``--ckpt-dir/--ckpt-every/--resume``; resume replays the batch
 generator's rng stream for the completed rounds, so ``train R`` and
@@ -19,14 +31,21 @@ generator's rng stream for the completed rounds, so ``train R`` and
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
 SEP = "\x1f"  # unit separator: safe against '/' or '.' in keys
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint payload failed its integrity check (checksum
+    mismatch, unreadable archive, or missing/mangled manifest)."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -54,11 +73,20 @@ def _atomic_write(path: str, write_fn) -> None:
         raise
 
 
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
 def save_checkpoint(directory: str, step: int, *, params, server_state=None,
                     extra: Optional[Dict[str, Any]] = None) -> str:
     """Atomically persist ``params`` (+ optional server state) as
     ``ckpt_<step>.npz`` + ``.json`` and repoint ``latest``. The pointer
-    is replaced LAST, after both payloads are complete on disk."""
+    is replaced LAST, after both payloads are complete on disk; the
+    manifest carries the SHA-256 of the completed ``.npz``."""
     os.makedirs(directory, exist_ok=True)
     name = f"ckpt_{step:08d}"
     path = os.path.join(directory, name)
@@ -68,11 +96,12 @@ def save_checkpoint(directory: str, step: int, *, params, server_state=None,
             continue
         for k, v in _flatten(tree).items():
             arrays[prefix + SEP + k] = v
-    manifest = {"step": step, "extra": extra or {},
-                "keys": sorted(arrays.keys())}
     # np.savez appends ".npz" to bare paths but writes file objects
     # verbatim, which is what lets the temp file carry the .tmp suffix
     _atomic_write(path + ".npz", lambda f: np.savez(f, **arrays))
+    manifest = {"step": step, "extra": extra or {},
+                "keys": sorted(arrays.keys()),
+                "npz_sha256": _sha256_file(path + ".npz")}
     _atomic_write(path + ".json",
                   lambda f: f.write(json.dumps(manifest).encode()))
     _atomic_write(os.path.join(directory, "latest"),
@@ -98,17 +127,79 @@ def _unflatten_into(template, stored: Dict[str, np.ndarray], prefix: str):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _load_verified(directory: str, name: str):
+    """Load ``(stored, manifest)`` for one checkpoint, raising
+    :class:`CorruptCheckpointError` on any integrity failure."""
+    npz_path = os.path.join(directory, name + ".npz")
+    json_path = os.path.join(directory, name + ".json")
+    try:
+        with open(json_path) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CorruptCheckpointError(
+            f"unreadable manifest for {name}: {e}") from e
+    digest = manifest.get("npz_sha256")
+    if digest is not None and _sha256_file(npz_path) != digest:
+        raise CorruptCheckpointError(
+            f"checksum mismatch for {name}.npz — payload corrupt")
+    try:
+        stored = dict(np.load(npz_path))
+    except Exception as e:  # zipfile raises several unrelated types
+        raise CorruptCheckpointError(
+            f"unreadable archive {name}.npz: {e}") from e
+    return stored, manifest
+
+
+def list_checkpoints(directory: str):
+    """Checkpoint base names present in ``directory``, newest first."""
+    names = [f[:-len(".json")] for f in os.listdir(directory)
+             if f.startswith("ckpt_") and f.endswith(".json")]
+    return sorted(names, reverse=True)
+
+
 def restore_checkpoint(directory: str, *, params_template,
                        state_template=None,
                        step: Optional[int] = None) -> Tuple[Any, Any, int]:
-    if step is None:
-        with open(os.path.join(directory, "latest")) as f:
-            name = f.read().strip()
+    """Restore the checkpoint at ``step``, or the newest VALID one.
+
+    With an explicit ``step``, an integrity failure raises
+    :class:`CorruptCheckpointError` — the caller asked for those exact
+    bytes. With ``step=None``, the ``latest`` pointer is tried first and
+    every remaining checkpoint is then scanned newest-first, skipping
+    (with a warning) any that fail verification, so one flipped bit or
+    truncated file degrades to the previous save instead of killing the
+    run.
+    """
+    if step is not None:
+        stored, manifest = _load_verified(directory, f"ckpt_{step:08d}")
     else:
-        name = f"ckpt_{step:08d}"
-    stored = dict(np.load(os.path.join(directory, name + ".npz")))
-    with open(os.path.join(directory, name + ".json")) as f:
-        manifest = json.load(f)
+        candidates = list_checkpoints(directory)
+        try:
+            with open(os.path.join(directory, "latest")) as f:
+                latest = f.read().strip()
+            if latest in candidates:
+                candidates.remove(latest)
+                candidates.insert(0, latest)
+        except OSError:
+            pass
+        if not candidates:
+            raise FileNotFoundError(
+                f"no checkpoints found in {directory!r}")
+        stored = manifest = None
+        errors = []
+        for name in candidates:
+            try:
+                stored, manifest = _load_verified(directory, name)
+                break
+            except CorruptCheckpointError as e:
+                errors.append(str(e))
+                warnings.warn(
+                    f"skipping corrupt checkpoint {name}: {e}",
+                    stacklevel=2)
+        if stored is None:
+            raise CorruptCheckpointError(
+                "every checkpoint in {!r} failed verification: {}".format(
+                    directory, "; ".join(errors)))
     params = _unflatten_into(params_template, stored, "params")
     state = (None if state_template is None
              else _unflatten_into(state_template, stored, "state"))

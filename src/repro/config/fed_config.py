@@ -117,6 +117,27 @@ class FedConfig:
     use_pallas_clipacc: bool = False   # fused clip+accumulate kernel for the
     #   delta entry (client_parallel, codec-free DP runs)
 
+    # --- fault injection + defense (repro.faults, docs/faults.md):
+    # post-sampling failure modes and the server-side guard rails.
+    # Injection probabilities are per (round, client), drawn from
+    # (fault_seed, round_index)-keyed rngs host-side; all zeros (the
+    # default) emits no reserved batch keys and traces the exact
+    # fault-free round program. The defense (robust_agg != "none") is
+    # statically gated the same way: none | mean | trimmed<f> |
+    # coordinate_median | norm_filter (rank-based entries are
+    # client_parallel-only; the sequential scan supports "mean").
+    fault_drop: float = 0.0            # P[upload never arrives]
+    fault_nan: float = 0.0             # P[upload is NaN-corrupted]
+    fault_scale: float = 0.0           # P[upload norm-inflated]
+    fault_scale_factor: float = 1e3    # the inflation factor
+    fault_seed: int = 0                # fault schedule rng seed
+    robust_agg: str = "none"           # defense registry entry
+    robust_norm_mult: float = 5.0      # norm_filter: reject clients with
+    #   joint upload norm > this multiple of the finite-client median
+    min_quorum: int = 0                # a round with fewer surviving
+    #   uploads commits NO state change (0 = quorum off); the round
+    #   index and every rng stream still advance
+
     # --- telemetry (repro.telemetry, docs/observability.md): opt-in
     # device-side diagnostics — per-round client-drift RMS and v̄
     # cross-client variance (the paper's Figure-2 quantities) computed
@@ -157,6 +178,11 @@ class FedConfig:
             raise ValueError(
                 f"unknown client_state_policy {self.client_state_policy!r}")
         self._validate_participation()
+        # domain check BEFORE the constraint table so cross-field rows
+        # may assume the spec parses (lazy import: faults depends on
+        # nothing here, the config stays the bottom layer)
+        from repro.faults.defense import parse_robust_agg
+        parse_robust_agg(self.robust_agg)
         for c in CONSTRAINTS:
             msg = c.check(self, codec_spec)
             if msg is not None:
@@ -165,6 +191,16 @@ class FedConfig:
     def dp_enabled(self) -> bool:
         """Client-level DP is on iff a finite clip norm is set."""
         return self.dp_clip > 0.0
+
+    def faults_enabled(self) -> bool:
+        """Any fault process has nonzero probability (the batch stream
+        then carries the reserved fault keys)."""
+        return (self.fault_drop > 0.0 or self.fault_nan > 0.0
+                or self.fault_scale > 0.0)
+
+    def defense_enabled(self) -> bool:
+        """The upload validator + robust aggregation are traced in."""
+        return self.robust_agg != "none"
 
     def _validate_participation(self) -> None:
         """Participation / scenario DOMAIN checks — value must name a
@@ -204,6 +240,14 @@ class Constraint:
 
 def _c(name, fields, fn):
     return Constraint(name=name, fields=tuple(fields), check=fn)
+
+
+def _robust_kind(cfg: "FedConfig") -> str:
+    """Parsed defense registry entry ('none' | 'mean' | 'trimmed' |
+    'coordinate_median' | 'norm_filter'); validate() runs the domain
+    check before the table, so this never raises inside a row."""
+    from repro.faults.defense import parse_robust_agg
+    return parse_robust_agg(cfg.robust_agg)[0]
 
 
 CONSTRAINTS: Tuple[Constraint, ...] = (
@@ -287,4 +331,64 @@ CONSTRAINTS: Tuple[Constraint, ...] = (
        "encode the bounded values), but the fused kernel clips at "
        "aggregation time, after decode. Drop the codec suffix or "
        "disable the kernel."),
+    _c("fault-prob-range", ("fault_drop", "fault_nan", "fault_scale"),
+       lambda c, s: next(
+           (f"{n} must be a probability in [0, 1], got {p}"
+            for n, p in (("fault_drop", c.fault_drop),
+                         ("fault_nan", c.fault_nan),
+                         ("fault_scale", c.fault_scale))
+            if not 0.0 <= p <= 1.0), None)),
+    _c("fault-scale-factor-positive", ("fault_scale_factor",),
+       lambda c, s: None if c.fault_scale_factor > 0.0 else
+       f"fault_scale_factor must be > 0, got {c.fault_scale_factor} "
+       "(it multiplies a faulty client's upload norm)"),
+    _c("min-quorum-range", ("min_quorum", "clients_per_round"),
+       lambda c, s: None
+       if 0 <= c.min_quorum <= c.clients_per_round else
+       f"min_quorum must be in [0, clients_per_round="
+       f"{c.clients_per_round}], got {c.min_quorum} (a round can never "
+       "have more surviving uploads than sampled clients, so a larger "
+       "quorum would skip every round)"),
+    _c("quorum-requires-defense", ("min_quorum", "robust_agg"),
+       lambda c, s: None
+       if c.min_quorum == 0 or c.defense_enabled() else
+       f"min_quorum={c.min_quorum} needs the upload validator to count "
+       "survivors: set robust_agg (e.g. 'mean' just validates + masks, "
+       "'norm_filter' also screens norm outliers)"),
+    _c("robust-rank-parallel-only", ("robust_agg", "layout"),
+       lambda c, s: None
+       if _robust_kind(c) in ("none", "mean")
+       or c.layout == "client_parallel" else
+       f"robust_agg={c.robust_agg!r} reduces across the full stacked "
+       "(S, ...) upload (rank statistics / the cross-client norm "
+       "median); client_sequential accumulates one client at a time "
+       "inside a scan and never materializes that stack. Use "
+       "robust_agg='mean' there (per-client validity folds into the "
+       "online accumulation) or layout='client_parallel'."),
+    _c("robust-rank-uniform-weights", ("robust_agg", "agg_weighting"),
+       lambda c, s: None
+       if _robust_kind(c) not in ("trimmed", "coordinate_median")
+       or c.agg_weighting == "uniform" else
+       f"robust_agg={c.robust_agg!r} is a rank statistic and ignores "
+       f"aggregation weights; agg_weighting={c.agg_weighting!r} would "
+       "be silently dropped. Set agg_weighting='uniform' (or use "
+       "robust_agg='mean'/'norm_filter', which weight the survivors)."),
+    _c("dp-robust-mean-compatible", ("dp_clip", "robust_agg"),
+       lambda c, s: None
+       if not c.dp_enabled()
+       or _robust_kind(c) in ("none", "mean", "norm_filter") else
+       f"client-level DP calibrates noise to the MEAN's sensitivity "
+       f"dp_clip/S; robust_agg={c.robust_agg!r} releases a rank "
+       "statistic whose sensitivity that bound does not cover. Use "
+       "robust_agg='mean' or 'norm_filter' with DP (the engine then "
+       "scales noise to the surviving cohort)."),
+    _c("clipacc-no-faults",
+       ("use_pallas_clipacc", "robust_agg", "fault_drop", "fault_nan",
+        "fault_scale"),
+       lambda c, s: None
+       if not c.use_pallas_clipacc
+       or not (c.defense_enabled() or c.faults_enabled()) else
+       "use_pallas_clipacc fuses a UNIFORM clip+accumulate over the "
+       "client stack and cannot mask rejected/faulted uploads; disable "
+       "the kernel to use fault injection or a robust_agg defense"),
 )

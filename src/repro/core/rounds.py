@@ -68,6 +68,21 @@ disabled config traces the exact pre-privacy program):
 ``FedConfig.use_pallas_clipacc`` (client_parallel, codec-free) swaps the
 delta entry's clip + uniform mean for the fused
 ``repro.kernels.clipacc`` pass over the (S, model-size) upload stack.
+
+Fault injection + defense (``repro.faults``, docs/faults.md) follows the
+same two patterns. Injection rides the batch pytree under two more
+reserved keys that :func:`_pop_faults` splits off — ``FAULT_DROP_KEY``
+((S,) bool upload-dropout mask) and ``FAULT_MULT_KEY`` ((S,) f32
+multiplier carrying NaN corruption / norm inflation) — applied to the
+aggregated upload entries AFTER commit and AFTER the DP clip (a faulty
+client does not politely clip itself). The defense is statically gated
+on ``fed.robust_agg != "none"``: an on-device per-client validity mask
+(finite check, transport arrivals, optional norm-outlier screen) feeds
+the robust-aggregation registry, rejected clients are zero-weighted, the
+surviving count scales DP noise and the quorum check
+(``fed.min_quorum``: too few survivors ⇒ the round commits no state
+change, round index still advances). Fault-free + defense-free traces
+the exact pre-fault program — structural bit-exactness again.
 """
 from __future__ import annotations
 
@@ -81,6 +96,9 @@ from repro.config import FedConfig, ModelConfig
 from repro.core import partition
 from repro.core.fedadamw import FedAlgorithm, get_algorithm
 from repro.core.tree_util import tree_sub
+from repro.faults import FAULT_DROP_KEY, FAULT_MULT_KEY
+from repro.faults.defense import (apply_fault_mult, parse_robust_agg,
+                                  robust_aggregate, upload_validity)
 from repro.privacy import add_round_noise, clip_tree_by_l2, clip_upload_aux
 from repro.scenario import AGG_WEIGHTS_KEY, STEP_MASK_KEY
 from repro.telemetry.diagnostics import (attach_round_diagnostics,
@@ -115,6 +133,19 @@ def _pop_scenario(batches):
     batches = dict(batches)
     return (batches, batches.pop(STEP_MASK_KEY, None),
             batches.pop(AGG_WEIGHTS_KEY, None))
+
+
+def _pop_faults(batches):
+    """Split the reserved fault keys out of the round batch pytree ->
+    ``(data_batches, drop_mask | None, fault_mult | None)`` — the
+    :func:`_pop_scenario` pattern: presence is pytree structure, so the
+    fault-free stream traces the fault-free program."""
+    if not isinstance(batches, dict) or not (
+            FAULT_DROP_KEY in batches or FAULT_MULT_KEY in batches):
+        return batches, None, None
+    batches = dict(batches)
+    return (batches, batches.pop(FAULT_DROP_KEY, None),
+            batches.pop(FAULT_MULT_KEY, None))
 
 
 def _weighted_mean(uploads, weights):
@@ -298,6 +329,12 @@ def make_round_fn(model, fed: FedConfig, specs, *,
     dp_on = fed.dp_clip > 0.0
     dp_noise_on = dp_on and fed.dp_noise_multiplier > 0.0
     diag_on = fed.telemetry_diagnostics
+    # defense layer (repro.faults, docs/faults.md) — statically gated:
+    # robust_agg == "none" with no fault keys on the batch traces the
+    # exact pre-fault program
+    robust_kind, trim_frac = parse_robust_agg(fed.robust_agg)
+    defense_on = robust_kind != "none"
+    quorum_on = fed.min_quorum > 0
 
     def _lr_scale(round_index):
         if cosine_total_rounds:
@@ -308,6 +345,8 @@ def make_round_fn(model, fed: FedConfig, specs, *,
 
         def round_fn(gparams, sstate, batches, client_ids, round_index):
             batches, step_mask, agg_w = _pop_scenario(batches)
+            batches, f_drop, f_mult = _pop_faults(batches)
+            sstate0 = sstate  # pre-commit state, for the quorum rollback
             lr_scale = _lr_scale(round_index)
             # "trace/*" spans time PROGRAM CONSTRUCTION (this body runs
             # on the host only while jit traces it) — they never touch
@@ -339,7 +378,31 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                             uploads, pre_commit_keys, fed.dp_clip,
                             stacked=True)
             with telemetry.span("trace/aggregate", "trace"):
-                if dp_on and fed.use_pallas_clipacc:
+                if f_mult is not None:
+                    # NaN corruption / norm inflation land AFTER the DP
+                    # clip and the commit hook: a faulty client does not
+                    # politely clip itself, and its own state-table row
+                    # keeps the clean values (the corruption models the
+                    # wire, not the client's local training)
+                    uploads = apply_fault_mult(uploads, f_mult)
+                n_valid = None
+                if defense_on or f_drop is not None:
+                    # upload validator + masked/robust aggregation:
+                    # dropped uploads never arrived (observable by ANY
+                    # server), the finite/norm screens need the defense
+                    arrived = (None if f_drop is None
+                               else jnp.logical_not(f_drop))
+                    if defense_on:
+                        valid = upload_validity(
+                            uploads, arrived=arrived, kind=robust_kind,
+                            norm_mult=fed.robust_norm_mult)
+                    else:
+                        valid = arrived
+                    mean_up, n_valid = robust_aggregate(
+                        uploads, valid, agg_w,
+                        kind=robust_kind if defense_on else "mean",
+                        trim_frac=trim_frac)
+                elif dp_on and fed.use_pallas_clipacc:
                     # fused per-client clip + uniform accumulate for the
                     # delta entry (one pass over the S x model-size
                     # stack; validation pins agg_weighting=uniform, so
@@ -357,11 +420,29 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                     mean_up = _weighted_mean(uploads, agg_w)
                 clean_up = mean_up  # pre-noise mean, for diagnostics
                 if dp_noise_on:
-                    mean_up = add_round_noise(mean_up, fed, round_index)
+                    # noise std scales to the SURVIVING cohort when the
+                    # validator rejected clients (sigma*C/S_valid keeps
+                    # the per-client guarantee as S_valid shrinks)
+                    mean_up = add_round_noise(mean_up, fed, round_index,
+                                              cohort_size=n_valid)
             with telemetry.span("trace/server_update", "trace"):
                 new_params, new_state = alg.server_update(
                     gparams, sstate, mean_up, specs, fed)
+            if quorum_on:
+                # too few survivors: commit NOTHING — params AND server
+                # state (incl. the rows this round's commit hook wrote)
+                # roll back to the round-start values; the round index
+                # and every rng stream advance outside, so schedules
+                # stay aligned
+                ok = n_valid >= fed.min_quorum
+                keep = lambda new, old: jnp.where(ok, new, old)  # noqa: E731
+                new_params = jax.tree.map(keep, new_params, gparams)
+                new_state = jax.tree.map(keep, new_state, sstate0)
             out_metrics = jax.tree.map(lambda m: m.mean(axis=0), metrics)
+            if n_valid is not None:
+                out_metrics["agg_survivors"] = n_valid
+            if quorum_on:
+                out_metrics["quorum_ok"] = ok.astype(jnp.float32)
             if diag_on:
                 out_metrics = attach_round_diagnostics(out_metrics,
                                                        clean_up)
@@ -371,8 +452,16 @@ def make_round_fn(model, fed: FedConfig, specs, *,
 
         def round_fn(gparams, sstate, batches, client_ids, round_index):
             batches, step_mask, agg_w = _pop_scenario(batches)
+            batches, f_drop, f_mult = _pop_faults(batches)
+            sstate0 = sstate  # pre-commit state, for the quorum rollback
             lr_scale = _lr_scale(round_index)
             weighted = agg_w is not None
+            faults_on = f_drop is not None
+            # per-client validity folds into the online accumulation:
+            # the sequential layout supports the "mean" defense (rank
+            # statistics would need the full client stack — rejected by
+            # config validation)
+            track_valid = defense_on or faults_on
 
             def one_client(sst, per_client_batches, cid, step_valid):
                 """One client's local phase + per-client state commit.
@@ -396,20 +485,53 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                             stacked=False)
                 return sst, up, m
 
+            def client_valid(up, x):
+                """Scalar validity of one client's (post-fault) upload:
+                arrived (dropout fault) AND — when the defense is on —
+                every aggregated element finite."""
+                ok = jnp.ones((), jnp.bool_)
+                if faults_on:
+                    ok = jnp.logical_and(ok, jnp.logical_not(x["fd"]))
+                if defense_on:
+                    ok = jnp.logical_and(
+                        ok, upload_validity(up, arrived=None,
+                                            kind="mean", norm_mult=0.0,
+                                            stacked=False))
+                return ok
+
             def contrib(up, w):
                 # weights sum to 1, so the accumulated weighted
                 # contributions ARE the weighted mean — no final divide
+                # (under validity masking a renormalizing weight-sum
+                # accumulator rides along instead)
                 if not weighted:
                     return up
                 return jax.tree.map(lambda u: (u * w).astype(u.dtype), up)
 
             def scan_client(acc, xs):
-                acc_up, acc_m, n, sst = acc
+                if track_valid:
+                    acc_up, acc_m, n, nv, ws, sst = acc
+                else:
+                    acc_up, acc_m, n, sst = acc
                 sst, up, m = one_client(sst, xs["b"], xs["cid"],
                                         xs.get("sm"))
+                if f_mult is not None:
+                    up = apply_fault_mult(up, xs["fm"], stacked=False)
+                if track_valid:
+                    ok = client_valid(up, xs)
+                    okf = ok.astype(jnp.float32)
+                    # zero the rejected upload BEFORE weighting: the
+                    # corrupt values are NaN and NaN * 0 = NaN
+                    up = jax.tree.map(
+                        lambda u: jnp.where(ok, u, jnp.zeros((), u.dtype)),
+                        up)
+                    nv = nv + okf
+                    ws = ws + (xs["w"] * okf if weighted else okf)
                 acc_up = jax.tree.map(jnp.add, acc_up,
                                       contrib(up, xs.get("w")))
                 acc_m = jax.tree.map(jnp.add, acc_m, m)
+                if track_valid:
+                    return (acc_up, acc_m, n + 1, nv, ws, sst), None
                 return (acc_up, acc_m, n + 1, sst), None
 
             xs = {"b": batches, "cid": client_ids}
@@ -417,6 +539,9 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                 xs["sm"] = step_mask
             if weighted:
                 xs["w"] = agg_w
+            if faults_on:
+                xs["fd"] = f_drop
+                xs["fm"] = f_mult
 
             # build zero accumulators with the right structure via one
             # abstract evaluation (no FLOPs at runtime: jitted away)
@@ -428,27 +553,53 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                                        jax.tree.map(lambda x: x[0], xs))
             acc0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                 acc_shape)
+            zero = jnp.zeros((), jnp.float32)
+            carry0 = ((acc0[0], acc0[1], zero, zero, zero, sstate)
+                      if track_valid else (acc0[0], acc0[1], zero, sstate))
             # trace-time span (see client_parallel): host cost of
             # constructing the scanned client program, not device time
             with telemetry.span("trace/local_phase", "trace"):
-                (sum_up, sum_m, n, sstate_k), _ = jax.lax.scan(
-                    scan_client,
-                    (acc0[0], acc0[1], jnp.zeros((), jnp.float32), sstate),
-                    xs)
+                if track_valid:
+                    (sum_up, sum_m, n, n_valid, wsum, sstate_k), _ = \
+                        jax.lax.scan(scan_client, carry0, xs)
+                else:
+                    (sum_up, sum_m, n, sstate_k), _ = jax.lax.scan(
+                        scan_client, carry0, xs)
+                    n_valid = None
             with telemetry.span("trace/aggregate", "trace"):
                 inv = 1.0 / jnp.maximum(n, 1.0)
-                mean_up = (sum_up if weighted
-                           else jax.tree.map(lambda u: u * inv, sum_up))
+                if track_valid:
+                    # masked (weighted) mean over the survivors: wsum is
+                    # the valid count (uniform) or the valid weight sum
+                    winv = 1.0 / jnp.maximum(wsum, 1e-12)
+                    mean_up = jax.tree.map(lambda u: u * winv, sum_up)
+                    if defense_on:
+                        from repro.faults.defense import \
+                            clamp_nonneg_entries
+                        mean_up = clamp_nonneg_entries(mean_up)
+                elif weighted:
+                    mean_up = sum_up
+                else:
+                    mean_up = jax.tree.map(lambda u: u * inv, sum_up)
                 clean_up = mean_up  # pre-noise mean, for diagnostics
                 if dp_noise_on:
-                    mean_up = add_round_noise(mean_up, fed, round_index)
+                    mean_up = add_round_noise(mean_up, fed, round_index,
+                                              cohort_size=n_valid)
             out_metrics = jax.tree.map(lambda m: m * inv, sum_m)
-            if diag_on:
-                out_metrics = attach_round_diagnostics(out_metrics,
-                                                       clean_up)
+            if n_valid is not None:
+                out_metrics["agg_survivors"] = n_valid
             with telemetry.span("trace/server_update", "trace"):
                 new_params, new_state = alg.server_update(
                     gparams, sstate_k, mean_up, specs, fed)
+            if quorum_on:
+                ok = n_valid >= fed.min_quorum
+                keep = lambda new, old: jnp.where(ok, new, old)  # noqa: E731
+                new_params = jax.tree.map(keep, new_params, gparams)
+                new_state = jax.tree.map(keep, new_state, sstate0)
+                out_metrics["quorum_ok"] = ok.astype(jnp.float32)
+            if diag_on:
+                out_metrics = attach_round_diagnostics(out_metrics,
+                                                       clean_up)
             return new_params, new_state, out_metrics
 
     return round_fn
@@ -529,7 +680,7 @@ def upload_shape_spec(alg: FedAlgorithm, params, sstate, specs,
 
 def round_abstract_args(model, fed: FedConfig, *, cfg=None, batch_size=2,
                         seq_len=16, batch_example=None, with_scenario=None,
-                        rounds=0):
+                        with_faults=None, rounds=0):
     """Abstract ``round_fn`` argument tree — no parameter allocation.
 
     Returns ``((params, sstate, batches, client_ids, round_index), specs,
@@ -540,7 +691,8 @@ def round_abstract_args(model, fed: FedConfig, *, cfg=None, batch_size=2,
     (S, K, ...); the default is the LM ``{"tokens", "labels"}`` pair used
     by every vit/gpt config. ``with_scenario`` forces the reserved
     step-mask/weights keys on/off; default mirrors what the scenario
-    engine would emit for ``fed``.
+    engine would emit for ``fed``. ``with_faults`` does the same for the
+    reserved fault keys (default: on iff any fault probability is > 0).
     """
     cfg = cfg or model.cfg
     # ra: allow[RA101] abstract eval: the key is never consumed
@@ -563,6 +715,11 @@ def round_abstract_args(model, fed: FedConfig, *, cfg=None, batch_size=2,
     if with_scenario:
         batches[STEP_MASK_KEY] = sd(lead + (s, k), jnp.bool_)
         batches[AGG_WEIGHTS_KEY] = sd(lead + (s,), jnp.float32)
+    if with_faults is None:
+        with_faults = fed.faults_enabled()
+    if with_faults:
+        batches[FAULT_DROP_KEY] = sd(lead + (s,), jnp.bool_)
+        batches[FAULT_MULT_KEY] = sd(lead + (s,), jnp.float32)
     client_ids = sd(lead + (s,), jnp.int32)
     round_index = sd((), jnp.int32)
     return (params, sstate, batches, client_ids, round_index), specs, alg

@@ -169,12 +169,19 @@ class RoundBatchGenerator:
     availability/straggler processes draw from their own per-round seeded
     generators, NEVER from this stream, so attaching a degenerate
     scenario changes nothing — bit-exactness holds by construction.
+
+    ``faults`` (a ``repro.faults.FaultModel``) rides the same pattern:
+    its schedule is a pure function of ``(fault_seed, round_index)``
+    under its own salt, attached under the reserved fault keys, so the
+    data stream and the scenario processes are untouched and every
+    execution mode sees the identical fault realization.
     """
 
     def __init__(self, task: SyntheticTask, *, num_clients: int,
                  clients_per_round: int, local_steps: int, batch_size: int,
                  rng: Union[np.random.Generator, int, None] = None,
-                 scenario: Optional[ParticipationScenario] = None):
+                 scenario: Optional[ParticipationScenario] = None,
+                 faults=None):
         validate_participation(num_clients, clients_per_round)
         self.task = task
         self.num_clients = num_clients
@@ -185,6 +192,7 @@ class RoundBatchGenerator:
             rng = np.random.default_rng(rng)
         self.rng = rng
         self.scenario = scenario
+        self.faults = faults if faults is not None and faults.active else None
         self.rounds_produced = 0
 
     def next_round(self) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
@@ -202,6 +210,8 @@ class RoundBatchGenerator:
                                 self.batch_size, self.rng)
         if self.scenario is not None:
             batches.update(self.scenario.round_payload(r, cids))
+        if self.faults is not None:
+            batches.update(self.faults.round_payload(r, cids))
         self.rounds_produced += 1
         return batches, cids.astype(np.int32)
 

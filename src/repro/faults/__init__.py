@@ -1,0 +1,56 @@
+"""Fault injection + graceful degradation (docs/faults.md).
+
+The ``scenario`` package models WHO shows up and how much work they
+finish; this package models what goes WRONG after the cohort is drawn —
+the failure modes a deployed FedAdamW server actually sees:
+
+``injection``   :class:`FaultModel` — seeded per-round fault schedules
+                (upload dropout, NaN/Inf corruption, norm inflation)
+                realized as static-shape masks/multipliers riding the
+                round batch pytree under reserved keys
+``defense``     the server-side upload validator (per-client finite +
+                norm-outlier screen) and the robust-aggregation registry
+                (``mean`` / ``trimmed<f>`` / ``coordinate_median`` /
+                ``norm_filter``), all jittable, no host sync
+``watchdog``    :class:`NaNWatchdog` — host-side finite check of the
+                post-aggregation global state, driving checkpoint
+                rollback with a bounded retry budget
+
+Everything follows the scenario-engine contract: schedules are pure
+functions of ``(fault_seed, round_index)`` drawn host-side (never from
+the shared batch rng stream), so eager, host-prefetched, and
+``rounds_per_call``-fused execution see BIT-identical faults in both
+placement layouts; key presence is pytree structure, so the fault-free
+config traces the exact pre-fault round program.
+"""
+
+# Reserved keys of the round batch pytree (the STEP_MASK_KEY /
+# AGG_WEIGHTS_KEY pattern — core.rounds pops them at trace time, the
+# leading underscore keeps them out of any model input namespace).
+# Both keys are always emitted together when any fault process is
+# active, so every active fault config shares one pytree structure.
+FAULT_DROP_KEY = "_fault_drop"  # (S,) bool: True = upload never arrived
+FAULT_MULT_KEY = "_fault_mult"  # (S,) f32: 1.0 clean, NaN corrupt, or
+#                                 the norm-inflation factor
+
+from repro.faults.injection import FaultModel  # noqa: E402
+from repro.faults.defense import (  # noqa: E402
+    ROBUST_AGGREGATORS,
+    apply_fault_mult,
+    clamp_nonneg_entries,
+    client_sq_norms,
+    masked_median,
+    parse_robust_agg,
+    robust_aggregate,
+    upload_validity,
+)
+from repro.faults.watchdog import NaNWatchdog, WatchdogRollback  # noqa: E402
+
+__all__ = [
+    "FAULT_DROP_KEY", "FAULT_MULT_KEY",
+    "FaultModel",
+    "ROBUST_AGGREGATORS", "parse_robust_agg", "apply_fault_mult",
+    "upload_validity", "client_sq_norms", "masked_median",
+    "robust_aggregate", "clamp_nonneg_entries",
+    "NaNWatchdog", "WatchdogRollback",
+]

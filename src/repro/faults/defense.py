@@ -1,0 +1,299 @@
+"""Server-side upload defense: validator + robust-aggregation registry.
+
+Everything here is jittable and traced INTO the round program by
+``repro.core.rounds`` — per-client validity is an (S,) bool mask on
+device, rejected clients are zero-weighted inside the cross-client
+reduction, and the surviving count is a traced scalar (fed to DP noise
+scaling and, via the round metrics, to the RDP accountant). No host
+sync anywhere.
+
+The registry (``FedConfig.robust_agg``):
+
+``mean``              masked (weighted) mean over the valid clients —
+                      the paper's reduction, minus rejected uploads.
+                      The only entry the ``client_sequential`` layout
+                      supports: it needs no cross-client ranking, so it
+                      folds into the scan's online accumulation.
+``trimmed<f>``        coordinate-wise trimmed mean: drop the
+                      ``floor(f*n)`` smallest and largest values per
+                      coordinate among the n valid clients, mean the
+                      rest. ``f`` in (0, 0.5).
+``coordinate_median`` coordinate-wise median over the valid clients.
+``norm_filter``       mean, after additionally rejecting clients whose
+                      joint upload L2 norm exceeds ``robust_norm_mult``
+                      times the median norm of the finite clients — the
+                      defense matched to the norm-inflation fault.
+
+Validity is always at least the per-client finite check over every
+aggregated entry (delta, block-mean v, SCAFFOLD dc — client-resident
+comm state is never aggregated and never screened); ``norm_filter``
+adds the norm-outlier screen. Rank-based entries (trimmed, median)
+tolerate norm inflation intrinsically and skip the screen.
+
+Every registry entry clamps the second-moment entries
+(``repro.privacy.NONNEG_ENTRIES``) at zero after aggregation — the
+coordinate-median / trimmed mean of nonneg values is nonneg in exact
+arithmetic, but the clamp makes the invariant unconditional (matching
+the post-noise clamp in ``add_round_noise``), because a negative v̄
+NaNs the next round's sqrt.
+
+Reductions use the fixed left-to-right association order of
+``core.rounds._weighted_mean`` so eager and ``rounds_per_call``-fused
+execution stay bit-identical under active faults too.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Dict[str, object]
+
+ROBUST_AGGREGATORS = ("mean", "trimmed", "coordinate_median",
+                      "norm_filter")
+#: registry entries that reduce by rank across the full (S,) client
+#: stack — impossible to fold into the sequential layout's online
+#: accumulation, and insensitive to aggregation weights
+RANK_BASED = ("trimmed", "coordinate_median")
+
+_DENOM_FLOOR = 1e-12  # guards the all-rejected round's 0/0
+
+
+def parse_robust_agg(spec: str) -> Tuple[str, float]:
+    """``FedConfig.robust_agg`` spec -> ``(kind, trim_frac)``.
+
+    >>> parse_robust_agg("none")
+    ('none', 0.0)
+    >>> parse_robust_agg("trimmed0.2")
+    ('trimmed', 0.2)
+    >>> parse_robust_agg("coordinate_median")
+    ('coordinate_median', 0.0)
+    """
+    if spec == "none":
+        return "none", 0.0
+    if spec in ("mean", "coordinate_median", "norm_filter"):
+        return spec, 0.0
+    if spec.startswith("trimmed"):
+        try:
+            frac = float(spec[len("trimmed"):])
+        except ValueError:
+            raise ValueError(
+                f"bad robust_agg spec {spec!r}: 'trimmed' takes the "
+                "trim fraction inline, e.g. 'trimmed0.1'") from None
+        if not 0.0 < frac < 0.5:
+            raise ValueError(
+                f"robust_agg trim fraction must be in (0, 0.5), got "
+                f"{frac} (trimming half or more leaves nothing to mean)")
+        return "trimmed", frac
+    raise ValueError(
+        f"unknown robust_agg {spec!r}; known: none | mean | "
+        "trimmed<f> (e.g. trimmed0.1) | coordinate_median | norm_filter")
+
+
+def _agg_entries(upload: Tree) -> Tree:
+    """The upload entries that cross the wire and get aggregated —
+    client-resident comm state (EF residuals) is neither faulted nor
+    screened."""
+    from repro.comm.error_feedback import COMM_STATE_KEYS
+    return {k: v for k, v in upload.items() if k not in COMM_STATE_KEYS}
+
+
+def apply_fault_mult(upload: Tree, mult: jax.Array, *,
+                     stacked: bool = True) -> Tree:
+    """Realize NaN-corruption / norm-inflation faults: multiply every
+    aggregated entry by the per-client factor (NaN poisons, scale
+    inflates, 1.0 is a no-op numerically — but the multiply is always
+    traced when the fault keys ride the batch). ``stacked``: entries
+    carry a leading (S,) client axis; ``mult`` is then (S,), else a
+    scalar (inside the sequential scan)."""
+    from repro.comm.error_feedback import COMM_STATE_KEYS
+
+    def scale(u):
+        m = (mult.reshape((-1,) + (1,) * (u.ndim - 1)) if stacked
+             else mult)
+        return (u.astype(jnp.float32) * m).astype(u.dtype)
+
+    return {k: (v if k in COMM_STATE_KEYS else jax.tree.map(scale, v))
+            for k, v in upload.items()}
+
+
+def _finite_mask(uploads: Tree, *, stacked: bool) -> jax.Array:
+    """(S,) bool (or scalar when not stacked): client's every aggregated
+    element is finite. Fixed left-to-right AND chain over leaves."""
+    leaves = jax.tree.leaves(_agg_entries(uploads))
+
+    def leaf_ok(leaf):
+        fin = jnp.isfinite(leaf.astype(jnp.float32))
+        return jnp.all(fin, axis=tuple(range(1, fin.ndim)) if stacked
+                       else None)
+
+    ok = leaf_ok(leaves[0])
+    for leaf in leaves[1:]:
+        ok = jnp.logical_and(ok, leaf_ok(leaf))
+    return ok
+
+
+def client_sq_norms(uploads: Tree) -> jax.Array:
+    """(S,) joint squared L2 norm of each client's aggregated entries
+    (the quantity the norm-outlier screen thresholds), accumulated
+    left-to-right per leaf like ``repro.privacy.l2_sq_norm``."""
+    leaves = jax.tree.leaves(_agg_entries(uploads))
+
+    def leaf_sq(leaf):
+        x = leaf.astype(jnp.float32)
+        return jnp.sum(x * x, axis=tuple(range(1, x.ndim)))
+
+    acc = leaf_sq(leaves[0])
+    for leaf in leaves[1:]:
+        acc = acc + leaf_sq(leaf)
+    return acc
+
+
+def masked_median(values: jax.Array, valid: jax.Array) -> jax.Array:
+    """Median of ``values[valid]`` with static shapes: invalid entries
+    sort to +inf and the two middle VALID ranks are selected by one-hot
+    sums (S is small and static). Returns 0 when nothing is valid."""
+    s = values.shape[0]
+    n = valid.astype(jnp.int32).sum()
+    ordered = jnp.sort(jnp.where(valid, values, jnp.inf))
+    lo, hi = (n - 1) // 2, n // 2
+
+    def pick(rank):
+        acc = jnp.where(rank == 0, ordered[0], 0.0)
+        for i in range(1, s):
+            acc = acc + jnp.where(rank == i, ordered[i], 0.0)
+        return acc
+
+    # n == 0 would select the +inf sentinel at rank 0 — report 0 instead
+    return jnp.where(n > 0, 0.5 * (pick(lo) + pick(hi)), 0.0)
+
+
+def upload_validity(uploads: Tree, *, arrived: Optional[jax.Array],
+                    kind: str, norm_mult: float,
+                    stacked: bool = True) -> jax.Array:
+    """The validator: (S,) bool validity over the stacked uploads (or a
+    scalar for one client inside the sequential scan).
+
+    Always the per-client finite check (AND the transport-level
+    ``arrived`` mask when dropout faults ride the batch); ``norm_filter``
+    adds the norm-outlier screen — reject clients whose joint norm
+    exceeds ``norm_mult`` times the median norm of the finite arrivals.
+    The screen needs the full client stack, so it is stacked-only
+    (config validation pins ``norm_filter`` to ``client_parallel``).
+    """
+    valid = _finite_mask(uploads, stacked=stacked)
+    if arrived is not None:
+        valid = jnp.logical_and(valid, arrived)
+    if kind == "norm_filter" and stacked:
+        norms = jnp.sqrt(client_sq_norms(uploads))
+        med = masked_median(norms, valid)
+        bound = norm_mult * jnp.maximum(med, _DENOM_FLOOR)
+        valid = jnp.logical_and(valid, norms <= bound)
+    return valid
+
+
+def _zero_invalid(uploads: Tree, valid: jax.Array) -> Tree:
+    """Replace rejected clients' rows with zeros BEFORE any weighted
+    reduction: zero-weighting alone is not enough because the corrupt
+    rows hold NaN and ``NaN * 0 = NaN``."""
+    def z(u):
+        v = valid.reshape((-1,) + (1,) * (u.ndim - 1))
+        return jnp.where(v, u, jnp.zeros((), u.dtype))
+
+    return jax.tree.map(z, uploads)
+
+
+def _chain_sum(terms):
+    """Fixed left-to-right association (the ``_weighted_mean`` idiom)."""
+    acc = terms[0]
+    for t in terms[1:]:
+        acc = acc + t
+    return acc
+
+
+def clamp_nonneg_entries(mean_up: Tree) -> Tree:
+    """Clamp the aggregated second-moment entries at zero (the
+    ``add_round_noise`` post-processing invariant, applied by every
+    robust registry entry)."""
+    from repro.privacy import NONNEG_ENTRIES
+    return {k: (jax.tree.map(lambda x: jnp.maximum(x, 0.0), v)
+                if k in NONNEG_ENTRIES else v)
+            for k, v in mean_up.items()}
+
+
+def robust_aggregate(uploads: Tree, valid: jax.Array,
+                     weights: Optional[jax.Array], *, kind: str,
+                     trim_frac: float = 0.0
+                     ) -> Tuple[Tree, jax.Array]:
+    """Aggregate the stacked (S, ...) uploads over the valid clients ->
+    ``(mean_up, n_valid)``. ``weights`` is the scenario aggregation
+    weight vector (None = uniform); rank-based entries ignore it
+    (validated at config time). ``n_valid`` is the traced survivor
+    count the engine feeds to DP noise scaling, the quorum check, and
+    the ``agg_survivors`` round metric."""
+    s = valid.shape[0]
+    valid_f = valid.astype(jnp.float32)
+    n_valid = valid_f.sum()
+
+    if kind in ("mean", "norm_filter"):
+        base = (jnp.full((s,), 1.0 / s, jnp.float32) if weights is None
+                else weights)
+        w = base * valid_f
+        w = w / jnp.maximum(w.sum(), _DENOM_FLOOR)
+        zeroed = _zero_invalid(uploads, valid)
+
+        def wmean(u):
+            x = u.astype(jnp.float32)
+            acc = _chain_sum([x[i] * w[i] for i in range(s)])
+            return acc.astype(u.dtype)
+
+        mean_up = jax.tree.map(wmean, zeroed)
+
+    elif kind == "trimmed":
+        n = valid.astype(jnp.int32).sum()
+        k = jnp.floor(trim_frac * n_valid).astype(jnp.int32)
+        kept = jnp.maximum(n - 2 * k, 1).astype(jnp.float32)
+
+        def tmean(u):
+            x = u.astype(jnp.float32)
+            v = valid.reshape((-1,) + (1,) * (x.ndim - 1))
+            # invalid rows sort to +inf per coordinate: ranks [k, n-k)
+            # are exactly the kept VALID values (rejected-but-finite
+            # values are still data here — validity decides membership,
+            # rank decides trimming)
+            ordered = jnp.sort(jnp.where(v, x, jnp.inf), axis=0)
+            terms = []
+            for i in range(s):
+                keep = jnp.logical_and(i >= k, i < n - k)
+                terms.append(jnp.where(keep, ordered[i], 0.0))
+            return (_chain_sum(terms) / kept).astype(u.dtype)
+
+        mean_up = jax.tree.map(tmean, uploads)
+
+    elif kind == "coordinate_median":
+        n = valid.astype(jnp.int32).sum()
+        lo, hi = (n - 1) // 2, n // 2
+
+        def cmed(u):
+            x = u.astype(jnp.float32)
+            v = valid.reshape((-1,) + (1,) * (x.ndim - 1))
+            ordered = jnp.sort(jnp.where(v, x, jnp.inf), axis=0)
+
+            def pick(rank):
+                terms = [jnp.where(rank == i, ordered[i], 0.0)
+                         for i in range(s)]
+                return _chain_sum(terms)
+
+            med = 0.5 * (pick(lo) + pick(hi))
+            # all-rejected: hi == 0 would select the +inf sentinel —
+            # report a zero update (quorum is the real guard here)
+            return jnp.where(n > 0, med, 0.0).astype(u.dtype)
+
+        mean_up = jax.tree.map(cmed, uploads)
+
+    else:
+        raise ValueError(f"unknown robust aggregator kind {kind!r}; "
+                         f"known: {ROBUST_AGGREGATORS}")
+
+    return clamp_nonneg_entries(mean_up), n_valid

@@ -1,0 +1,117 @@
+"""Seeded, deterministic fault schedules (docs/faults.md).
+
+:class:`FaultModel` draws, per round, which clients fail and how:
+
+* **upload dropout** (``p_drop``) — the client trained but its upload
+  never arrived (transport failure). Realized as an (S,) bool mask the
+  engine uses to zero-weight the missing uploads — observable by any
+  server, defended or not, because an absent upload is absent.
+* **NaN/Inf corruption** (``p_nan``) — the client's loss blew up and it
+  shipped non-finite values. Realized as a NaN entry in the (S,) f32
+  multiplier (``NaN * x = NaN`` poisons every element of that client's
+  aggregated entries — delta, block-mean v, SCAFFOLD dc — exactly like
+  a diverged local AdamW run).
+* **norm inflation** (``p_scale``) — a byzantine/buggy client ships a
+  ``scale_factor``-times-too-large update. Realized as the same
+  multiplier. The multiplier lands AFTER the engine's DP clipping
+  (deliberately: a faulty client does not politely clip itself, and the
+  sweep in benchmarks/table_faults.py shows DP clipping alone is not a
+  defense).
+
+Draws follow the availability/straggler seeding idiom: one
+``np.random.default_rng([seed, salt, round_index])`` generator per
+round, evaluated for ALL N clients and then indexed by the sampled
+cohort — a pure function of ``(fault_seed, round_index, client_id)``,
+never of the shared batch rng stream or of which execution mode is
+running. Eager/prefetched/fused execution and both placement layouts
+therefore see bit-identical schedules, and whether a given client is
+faulty this round does not depend on who else was sampled.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro import telemetry
+
+_FAULT_SALT = 0xFA17  # rng stream id, distinct from scenario salts
+
+
+class FaultModel:
+    """Per-round fault draws for ``num_clients`` clients.
+
+    >>> fm = FaultModel(8, p_nan=0.5, seed=3)
+    >>> cids = np.arange(4)
+    >>> p1 = fm.round_payload(0, cids)
+    >>> p2 = fm.round_payload(0, cids)
+    >>> bool(np.array_equal(p1["_fault_mult"], p2["_fault_mult"],
+    ...                     equal_nan=True))            # deterministic
+    True
+    >>> FaultModel(8).round_payload(0, cids)            # inactive: no keys
+    {}
+    """
+
+    def __init__(self, num_clients: int, *, p_drop: float = 0.0,
+                 p_nan: float = 0.0, p_scale: float = 0.0,
+                 scale_factor: float = 1e3, seed: int = 0):
+        for name, p in (("p_drop", p_drop), ("p_nan", p_nan),
+                        ("p_scale", p_scale)):
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+        if scale_factor <= 0.0:
+            raise ValueError(
+                f"scale_factor must be > 0, got {scale_factor}")
+        self.num_clients = num_clients
+        self.p_drop = p_drop
+        self.p_nan = p_nan
+        self.p_scale = p_scale
+        self.scale_factor = scale_factor
+        self.seed = seed
+
+    @property
+    def active(self) -> bool:
+        """False = the degenerate model: no keys, no engine change."""
+        return (self.p_drop > 0.0 or self.p_nan > 0.0
+                or self.p_scale > 0.0)
+
+    def round_faults(self, round_index: int, client_ids: np.ndarray):
+        """This round's ``(drop (S,) bool, mult (S,) f32)`` for the
+        sampled cohort. NaN wins where corruption and inflation hit the
+        same client (a diverged client's scale is meaningless)."""
+        rng = np.random.default_rng(
+            [self.seed, _FAULT_SALT, int(round_index)])
+        u = rng.random((3, self.num_clients))
+        mult = np.ones(self.num_clients, np.float32)
+        mult[u[1] < self.p_scale] = self.scale_factor
+        mult[u[2] < self.p_nan] = np.nan
+        drop = u[0] < self.p_drop
+        cids = np.asarray(client_ids, np.int64)
+        return drop[cids], mult[cids]
+
+    def round_payload(self, round_index: int,
+                      client_ids: np.ndarray) -> Dict[str, np.ndarray]:
+        """Reserved-key entries to merge into the round batch pytree —
+        empty when the model is inactive (the traced program is then the
+        fault-free one, structurally). Both keys are always emitted
+        together so every active config shares one batch structure."""
+        if not self.active:
+            return {}
+        from repro.faults import FAULT_DROP_KEY, FAULT_MULT_KEY
+        drop, mult = self.round_faults(round_index, client_ids)
+        injected = int(np.sum(drop | ~np.isfinite(mult)
+                              | (np.isfinite(mult) & (mult != 1.0))))
+        if injected:
+            telemetry.add("faults/injected", injected)
+        return {FAULT_DROP_KEY: drop, FAULT_MULT_KEY: mult}
+
+    @classmethod
+    def from_fed(cls, fed, *, seed: Optional[int] = None
+                 ) -> Optional["FaultModel"]:
+        """The model a ``FedConfig`` describes, or None when every fault
+        probability is zero (nothing to attach to the stream)."""
+        fm = cls(fed.num_clients, p_drop=fed.fault_drop,
+                 p_nan=fed.fault_nan, p_scale=fed.fault_scale,
+                 scale_factor=fed.fault_scale_factor,
+                 seed=fed.fault_seed if seed is None else seed)
+        return fm if fm.active else None

@@ -170,23 +170,37 @@ class HostPrefetcher:
         return start, size, batches, cids
 
     # -- background producer --------------------------------------------
+    def _put(self, item, deadline: Optional[float] = None) -> bool:
+        """Enqueue honoring the stop flag (and an optional monotonic
+        deadline), in bounded 0.1 s waits so a full queue can never pin
+        the producer thread. Returns False when abandoned."""
+        while not self._stop.is_set():
+            if deadline is not None and time.monotonic() >= deadline:
+                return False
+            try:
+                self._queue.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _producer_loop(self) -> None:
         try:
             for start, size in self.blocks:
                 if self._stop.is_set():
                     return
                 item = self._produce(start, size)
-                while not self._stop.is_set():
-                    try:
-                        self._queue.put(item, timeout=0.1)
-                        telemetry.set_gauge("prefetch/queue_depth",
-                                            self._queue.qsize())
-                        break
-                    except queue.Full:
-                        continue
-            self._queue.put(self._SENTINEL)
+                if not self._put(item):
+                    return
+                telemetry.set_gauge("prefetch/queue_depth",
+                                    self._queue.qsize())
+            self._put(self._SENTINEL)
         except BaseException as e:  # surfaced on the consumer thread
-            self._queue.put(e)
+            # bounded: if the consumer is already gone (it crashed, or
+            # close() raced us), give up after 5 s instead of pinning
+            # this thread on a blocking put forever — the regression
+            # test in tests/test_pipeline.py holds this line
+            self._put(e, deadline=time.monotonic() + 5.0)
 
     def __iter__(self) -> Iterator[Tuple[int, int, dict, jax.Array]]:
         if self.depth <= 0:
@@ -213,16 +227,30 @@ class HostPrefetcher:
         finally:
             self.close()
 
-    def close(self) -> None:
+    def close(self, timeout: float = 5.0) -> None:
+        """Graceful shutdown with a hard deadline.
+
+        Sets the stop flag, drains the queue (so a producer blocked in
+        ``put`` observes the flag within one 0.1 s wait), and joins the
+        thread. A producer wedged inside ``_produce`` (a hung
+        ``device_put``, a generator bug) cannot hang the caller: past
+        ``timeout`` seconds the daemon thread is abandoned — interpreter
+        exit reaps it — and the shutdown still returns. Runs under a
+        telemetry ``shutdown`` span so interrupted runs export how long
+        teardown took instead of vanishing into a hang."""
         self._stop.set()
-        if self._thread is not None:
-            # drain so a blocked put() can observe the stop flag
-            while self._thread.is_alive():
+        if self._thread is None:
+            return
+        with telemetry.span("shutdown"):
+            deadline = time.monotonic() + timeout
+            while self._thread.is_alive() and time.monotonic() < deadline:
                 try:
                     self._queue.get_nowait()
                 except queue.Empty:
-                    self._thread.join(timeout=0.2)
-            self._thread = None
+                    self._thread.join(timeout=0.1)
+            if self._thread.is_alive():
+                telemetry.set_gauge("prefetch/shutdown_abandoned", 1.0)
+        self._thread = None
 
 
 class RoundEngine:

@@ -27,6 +27,15 @@ from the privacy budget at launch. The RDP accountant consumes the
 ACTUAL per-round cohorts and reports cumulative ``(eps, delta)`` into
 the history / CSV at every eval round.
 
+Fault injection + graceful degradation (``repro.faults``,
+docs/faults.md): ``--fault-nan 0.1 --fault-drop 0.1`` corrupts/drops a
+seeded per-round subset of uploads; ``--robust-agg
+trimmed0.1|coordinate_median|norm_filter`` screens and robustly
+aggregates them server-side; ``--min-quorum 4`` freezes rounds with too
+few valid uploads; ``--watchdog`` finite-checks the global state every
+block and rolls back to the newest checksum-valid checkpoint on
+corruption. Everything-off is bit-exact with the fault-free engine.
+
 Long (DP) sweeps survive preemption via ``--ckpt-dir out/ckpt
 --ckpt-every 50``; ``--resume`` restores the latest checkpoint and
 replays the data stream's rng for the completed rounds, so a resumed
@@ -50,12 +59,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import telemetry
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.checkpoint import (CorruptCheckpointError, restore_checkpoint,
+                              save_checkpoint)
 from repro.comm import codec_for, upload_wire_bytes
 from repro.config import FedConfig, get_arch
 from repro.config.model_config import reduced_variant
 from repro.core import build_fed_state, upload_shape_spec
 from repro.data import RoundBatchGenerator, make_task
+from repro.faults import FaultModel, NaNWatchdog, WatchdogRollback
 from repro.launch.pipeline import (HostPrefetcher, RoundEngine,
                                    eval_boundaries, plan_round_blocks)
 from repro.metrics import CSVLogger, Meter, MetricsSpool
@@ -114,6 +125,24 @@ def evaluate(model, params, task, batch_size: int = 256,
     return {"test_loss": float(loss), "test_acc": float(acc)}
 
 
+def _trim_history(history: Dict[str, list], resume_round: int) -> None:
+    """Drop every logged row from rounds >= ``resume_round`` (watchdog
+    rollback): the per-round lists are index-aligned with the round
+    number, the eval-aligned lists are filtered by the recorded round
+    column (eval rounds are ordered, so the kept set is a prefix). The
+    CSV, if any, is append-only — replayed rounds log again, and the
+    duplicated rows are the watchdog's visible audit trail."""
+    for k in ("train_loss", "client_drift_rms", "v_bar_variance",
+              "agg_survivors", "quorum_ok"):
+        if k in history:
+            del history[k][resume_round:]
+    n_eval = sum(1 for r in history["round"] if r < resume_round)
+    for k in ("round", "test_acc", "test_loss", "upload_mbytes",
+              "epsilon", "host_blocked_frac"):
+        if k in history:
+            del history[k][n_eval:]
+
+
 def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                  rounds: int = 30, num_clients: int = 16,
                  clients_per_round: int = 8, local_steps: int = 10,
@@ -142,6 +171,13 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                  use_pallas_clipacc: bool = False,
                  ckpt_dir: str = "", ckpt_every: int = 0,
                  resume: bool = False,
+                 fault_drop: float = 0.0, fault_nan: float = 0.0,
+                 fault_scale: float = 0.0,
+                 fault_scale_factor: float = 1e3,
+                 fault_seed: Optional[int] = None,
+                 robust_agg: str = "none", robust_norm_mult: float = 5.0,
+                 min_quorum: int = 0,
+                 watchdog: bool = False, watchdog_max_rollbacks: int = 2,
                  trace_dir: str = "",
                  telemetry_diagnostics: bool = False) -> Dict[str, list]:
     cfg = get_arch(arch)
@@ -170,6 +206,11 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         target_epsilon=target_epsilon, dp_delta=dp_delta,
         dp_seed=seed if dp_seed is None else dp_seed,
         use_pallas_clipacc=use_pallas_clipacc,
+        fault_drop=fault_drop, fault_nan=fault_nan,
+        fault_scale=fault_scale, fault_scale_factor=fault_scale_factor,
+        fault_seed=seed if fault_seed is None else fault_seed,
+        robust_agg=robust_agg, robust_norm_mult=robust_norm_mult,
+        min_quorum=min_quorum,
         telemetry_diagnostics=telemetry_diagnostics)
     model = build_model(cfg, compute_dtype=jnp.float32)
     task = make_task(task_kind, vocab_size=cfg.vocab_size, seq_len=seq_len,
@@ -201,11 +242,27 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
     # degenerate default is inert — no payload keys, identical rng stream
     scenario = ParticipationScenario.from_fed(
         fed, task=task, trace=availability_trace)
-    gen = RoundBatchGenerator(
-        task, num_clients=fed.num_clients,
-        clients_per_round=fed.clients_per_round,
-        local_steps=fed.local_steps, batch_size=batch_size,
-        rng=np.random.default_rng(seed + 1), scenario=scenario)
+    # fault injection (repro.faults, docs/faults.md): same reserved-key
+    # pattern; None when every fault probability is zero
+    fault_model = FaultModel.from_fed(fed)
+
+    def fresh_gen(skip_rounds: int = 0) -> RoundBatchGenerator:
+        # one seeded stream per (re)start: resume and watchdog rollback
+        # both rebuild the generator and burn the completed rounds, so
+        # replayed data is bit-identical to an uninterrupted run (the
+        # prefetcher may have consumed the old stream arbitrarily far
+        # ahead, so the old generator cannot be rewound in place)
+        g = RoundBatchGenerator(
+            task, num_clients=fed.num_clients,
+            clients_per_round=fed.clients_per_round,
+            local_steps=fed.local_steps, batch_size=batch_size,
+            rng=np.random.default_rng(seed + 1), scenario=scenario,
+            faults=fault_model)
+        for _ in range(skip_rounds):
+            g.next_round()
+        return g
+
+    gen = fresh_gen()
     blocks = plan_round_blocks(rounds, eval_every, fed.rounds_per_call)
     eval_rounds = set(eval_boundaries(rounds, eval_every))
     if ckpt_dir and ckpt_every:
@@ -235,8 +292,7 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
             ckpt_dir, params_template=params, state_template=sstate)
         params = jax.device_put(restored_params)
         sstate = jax.device_put(restored_state)
-        for _ in range(start_round):
-            gen.next_round()                    # burn the rng stream
+        gen = fresh_gen(start_round)            # burn the rng stream
         if accountant is not None:
             # completed rounds already spent budget (cohorts are the
             # static S — the top-up sampler keeps every round full)
@@ -255,6 +311,11 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
     # even before the first eval round lands
     fieldnames = ["round", "train_loss", "upload_mbytes", "test_loss",
                   "test_acc"] + (["epsilon"] if accountant else [])
+    track_faults = fed.faults_enabled() or fed.defense_enabled()
+    if track_faults:
+        fieldnames.append("agg_survivors")
+    if fed.min_quorum > 0:
+        fieldnames.append("quorum_ok")
     if fed.telemetry_diagnostics:
         fieldnames.append("client_drift_rms")
         if any(k in upload_spec for k in ("v_mean", "v_full")):
@@ -290,67 +351,149 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
     tele = telemetry.session(trace_dir) if trace_dir else None
     if tele is not None:
         telemetry.install(tele)
-    prefetcher = HostPrefetcher(gen, blocks, depth=prefetch_depth,
-                                stacked=engine.stacked)
+    # NaN-watchdog (repro.faults, docs/faults.md): finite-check the
+    # committed global state once per block; on corruption roll back to
+    # the newest VALID checkpoint and replay, at most max_rollbacks
+    # times, then abort with the telemetry trace exported
+    wd = NaNWatchdog(watchdog_max_rollbacks) if watchdog else None
     spool = MetricsSpool()
+    prefetcher = None
+    resume_round = start_round
+    static_s = fed.clients_per_round
     t0 = time.perf_counter()
     try:
-        for start, size, batches, cids in prefetcher:
-            params, sstate, metrics = engine.run_block(
-                params, sstate, batches, cids, start, size)
-            spool.append(start, metrics, size)
-            r_end = start + size - 1
-            telemetry.add("comm/wire_bytes_total",
-                          comm_bytes * int(np.shape(cids)[-1]) * size)
-            if accountant is not None:
-                # charge the rounds of this block at the cohort size the
-                # participation engine ACTUALLY produced
-                accountant.step(int(np.shape(cids)[-1]), rounds=size)
-            if ckpt_dir and ckpt_every and (r_end + 1) % ckpt_every == 0:
-                with telemetry.span("commit"):
-                    save_checkpoint(ckpt_dir, r_end + 1, params=params,
-                                    server_state=sstate,
-                                    extra={"algorithm": fed.algorithm})
-            if r_end not in eval_rounds:
-                continue
-            # eval boundary: one blocking fetch of everything spooled,
-            # then the exact full-split eval on the current params
-            with telemetry.span("eval"):
-                eval_rec = evaluate(model, params, task, eval_fn=eval_fn,
-                                    stacked=eval_stacked)
-            if accountant is not None:
-                eval_rec["epsilon"] = accountant.epsilon()
-                telemetry.set_gauge("dp/epsilon", eval_rec["epsilon"])
-            # fraction of wall time the consumer spent blocked on host
-            # batch assembly/staging — same counter the prefetcher and
-            # the round-throughput benchmark read
-            hbf = prefetcher.wait_s / max(time.perf_counter() - t0, 1e-9)
-            eval_rec["host_blocked_frac"] = hbf
-            history["host_blocked_frac"].append(hbf)
-            with telemetry.span("flush"):
-                flushed = spool.flush()
-            for r, m in flushed:
-                loss = m["loss_mean"]
-                meter.update(loss)
-                history["train_loss"].append(loss)  # EVERY round
-                rec = {"round": r, "train_loss": loss,
-                       "upload_mbytes": comm_bytes / 1e6}
-                for k in ("client_drift_rms", "v_bar_variance"):
-                    if k in m:
-                        rec[k] = m[k]
-                        history.setdefault(k, []).append(m[k])
-                if r == r_end:
-                    rec.update(eval_rec)
-                    history["round"].append(r)
-                    history["test_acc"].append(rec["test_acc"])
-                    history["test_loss"].append(rec["test_loss"])
-                    history["upload_mbytes"].append(rec["upload_mbytes"])
+        while True:
+            run_blocks = [(s, z) for s, z in blocks if s >= resume_round]
+            prefetcher = HostPrefetcher(gen, run_blocks,
+                                        depth=prefetch_depth,
+                                        stacked=engine.stacked)
+            try:
+                for start, size, batches, cids in prefetcher:
+                    params, sstate, metrics = engine.run_block(
+                        params, sstate, batches, cids, start, size)
+                    r_end = start + size - 1
+                    if wd is not None:
+                        # one device->host sync per block (why the
+                        # watchdog is opt-in); raising HERE keeps the
+                        # poisoned state out of the checkpoint and the
+                        # block's metrics out of the spool
+                        wd.check(r_end, params, sstate)
+                    spool.append(start, metrics, size)
+                    telemetry.add("comm/wire_bytes_total",
+                                  comm_bytes * int(np.shape(cids)[-1]) * size)
+                    if ckpt_dir and ckpt_every \
+                            and (r_end + 1) % ckpt_every == 0:
+                        with telemetry.span("commit"):
+                            save_checkpoint(
+                                ckpt_dir, r_end + 1, params=params,
+                                server_state=sstate,
+                                extra={"algorithm": fed.algorithm})
+                    if r_end not in eval_rounds:
+                        continue
+                    # eval boundary: one blocking fetch of everything
+                    # spooled, then the exact full-split eval on the
+                    # current params
+                    with telemetry.span("eval"):
+                        eval_rec = evaluate(model, params, task,
+                                            eval_fn=eval_fn,
+                                            stacked=eval_stacked)
+                    # fraction of wall time the consumer spent blocked on
+                    # host batch assembly/staging — same counter the
+                    # prefetcher and the round-throughput benchmark read
+                    hbf = prefetcher.wait_s / max(
+                        time.perf_counter() - t0, 1e-9)
+                    eval_rec["host_blocked_frac"] = hbf
+                    history["host_blocked_frac"].append(hbf)
+                    with telemetry.span("flush"):
+                        flushed = spool.flush()
+                    if track_faults:
+                        # canonical defense counters, fed from the
+                        # per-round survivor metric the engine emitted
+                        telemetry.add("faults/rejected_uploads", sum(
+                            static_s - int(round(float(
+                                m.get("agg_survivors", static_s))))
+                            for _, m in flushed))
+                        telemetry.add("rounds/quorum_skipped", sum(
+                            1 for _, m in flushed
+                            if float(m.get("quorum_ok", 1.0)) == 0.0))
                     if accountant is not None:
-                        history["epsilon"].append(rec["epsilon"])
-                if logger:
-                    logger.log(rec)
+                        # charge each round at the cohort the aggregation
+                        # ACTUALLY averaged: the validator may have
+                        # rejected uploads, and the noise std already
+                        # scales to the survivors (repro.privacy.dp)
+                        for _, m in flushed:
+                            cohort = int(round(float(
+                                m.get("agg_survivors", static_s))))
+                            if cohort > 0:
+                                accountant.step(cohort, rounds=1)
+                        eval_rec["epsilon"] = accountant.epsilon()
+                        telemetry.set_gauge("dp/epsilon",
+                                            eval_rec["epsilon"])
+                    for r, m in flushed:
+                        loss = m["loss_mean"]
+                        meter.update(loss)
+                        history["train_loss"].append(loss)  # EVERY round
+                        rec = {"round": r, "train_loss": loss,
+                               "upload_mbytes": comm_bytes / 1e6}
+                        for k in ("client_drift_rms", "v_bar_variance",
+                                  "agg_survivors", "quorum_ok"):
+                            if k in m:
+                                rec[k] = m[k]
+                                history.setdefault(k, []).append(m[k])
+                        if r == r_end:
+                            rec.update(eval_rec)
+                            history["round"].append(r)
+                            history["test_acc"].append(rec["test_acc"])
+                            history["test_loss"].append(rec["test_loss"])
+                            history["upload_mbytes"].append(
+                                rec["upload_mbytes"])
+                            if accountant is not None:
+                                history["epsilon"].append(rec["epsilon"])
+                        if logger:
+                            logger.log(rec)
+                break                       # every block committed
+            except WatchdogRollback as exc:
+                prefetcher.close()
+                telemetry.add("watchdog/rollbacks", 1)
+                wd.rollbacks += 1
+                if not (ckpt_dir and ckpt_every):
+                    raise RuntimeError(
+                        "watchdog: non-finite global state after round "
+                        f"{exc.round_index} ({exc.bad_leaves} corrupt "
+                        "leaves) and no --ckpt-dir/--ckpt-every to roll "
+                        "back to") from exc
+                if wd.rollbacks > wd.max_rollbacks:
+                    raise RuntimeError(
+                        "watchdog: rollback budget exhausted "
+                        f"({wd.max_rollbacks}) — still corrupt at round "
+                        f"{exc.round_index}; aborting") from exc
+                try:
+                    # newest VALID checkpoint: restore_checkpoint skips
+                    # corrupt payloads by checksum (repro.checkpoint)
+                    rest_p, rest_s, resume_round = restore_checkpoint(
+                        ckpt_dir, params_template=params,
+                        state_template=sstate)
+                except (FileNotFoundError, CorruptCheckpointError) as e:
+                    raise RuntimeError(
+                        "watchdog: no valid checkpoint to roll back to "
+                        f"after round {exc.round_index}: {e}") from exc
+                params = jax.device_put(rest_p)
+                sstate = jax.device_put(rest_s)
+                gen = fresh_gen(resume_round)
+                spool = MetricsSpool()  # poisoned block's rows discarded
+                _trim_history(history, resume_round)
+                if accountant is not None:
+                    # replayed rounds must not double-charge: restart
+                    # the ledger and charge the completed rounds at the
+                    # static S (>= any survivor count, so conservative)
+                    accountant = RDPAccountant(
+                        fed.dp_noise_multiplier, fed.num_clients,
+                        delta=fed.dp_delta,
+                        released_entries=accountant.released_entries)
+                    accountant.step(static_s, rounds=resume_round)
     finally:
-        prefetcher.close()
+        if prefetcher is not None:
+            prefetcher.close()
         try:
             # salvage rounds computed since the last eval boundary (an
             # interrupt mid-interval must not drop logged rows the
@@ -377,6 +520,8 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         "start_round": start_round,
         "trace_dir": trace_dir,
     }
+    if wd is not None:
+        history["engine"]["watchdog_rollbacks"] = wd.rollbacks
     if fed.dp_enabled():
         history["engine"]["dp"] = {
             "clip": fed.dp_clip,
@@ -469,6 +614,36 @@ def main() -> None:
                     help="restore the latest checkpoint in --ckpt-dir "
                          "and continue; trajectory-identical to an "
                          "uninterrupted run")
+    ap.add_argument("--fault-drop", type=float, default=0.0,
+                    help="per-round probability a sampled client's "
+                         "upload never arrives (fault injection)")
+    ap.add_argument("--fault-nan", type=float, default=0.0,
+                    help="per-round probability a client's upload is "
+                         "corrupted to NaN")
+    ap.add_argument("--fault-scale", type=float, default=0.0,
+                    help="per-round probability a client's upload is "
+                         "inflated by --fault-scale-factor")
+    ap.add_argument("--fault-scale-factor", type=float, default=1e3,
+                    help="multiplier applied by the norm-inflation fault")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="fault schedule seed (defaults to --seed); the "
+                         "schedule is a pure function of (seed, round)")
+    ap.add_argument("--robust-agg", default="none",
+                    help="server-side defense: none | mean | "
+                         "trimmed<frac> | coordinate_median | "
+                         "norm_filter (docs/faults.md)")
+    ap.add_argument("--robust-norm-mult", type=float, default=5.0,
+                    help="norm_filter rejects uploads with norm > this "
+                         "multiple of the cohort median norm")
+    ap.add_argument("--min-quorum", type=int, default=0,
+                    help="rounds with fewer valid uploads than this "
+                         "commit no state change (0 = no quorum)")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="finite-check global state every block and "
+                         "roll back to the newest valid checkpoint on "
+                         "corruption (costs one sync per block)")
+    ap.add_argument("--watchdog-max-rollbacks", type=int, default=2,
+                    help="abort after this many watchdog rollbacks")
     ap.add_argument("--trace-dir", default="",
                     help="write a Chrome-trace/Perfetto trace.json plus "
                          "counters.json of the run here (empty = no "
@@ -504,6 +679,15 @@ def main() -> None:
         dp_seed=args.dp_seed, use_pallas_clipacc=args.pallas_clipacc,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         resume=args.resume,
+        fault_drop=args.fault_drop, fault_nan=args.fault_nan,
+        fault_scale=args.fault_scale,
+        fault_scale_factor=args.fault_scale_factor,
+        fault_seed=args.fault_seed,
+        robust_agg=args.robust_agg,
+        robust_norm_mult=args.robust_norm_mult,
+        min_quorum=args.min_quorum,
+        watchdog=args.watchdog,
+        watchdog_max_rollbacks=args.watchdog_max_rollbacks,
         trace_dir=args.trace_dir,
         telemetry_diagnostics=args.diagnostics)
     out = {"wall_s": round(time.time() - t0, 1)}

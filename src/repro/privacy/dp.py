@@ -90,18 +90,30 @@ def released_entry_count(upload: Dict[str, Any]) -> int:
     return len([k for k in upload if k not in COMM_STATE_KEYS])
 
 
-def add_round_noise(mean_up: Dict[str, Tree], fed, round_index) -> Dict[str, Tree]:
+def add_round_noise(mean_up: Dict[str, Tree], fed, round_index,
+                    cohort_size=None) -> Dict[str, Tree]:
     """Server-side Gaussian noise on the aggregated mean, one
     independent draw per leaf, std ``dp_noise_multiplier * dp_clip / S``
     (the clipped SUM takes ``sigma * C``; the engine aggregates the
     uniform mean, so the mean takes ``sigma * C / S``).
+
+    ``cohort_size`` (a traced scalar) replaces the static S when the
+    fault-defense layer rejected uploads: the mean is then taken over
+    the SURVIVING clients, so the same per-client guarantee needs
+    ``sigma * C / S_valid`` — the noise grows as survivors shrink. The
+    default (None) keeps the static-S expression, so defense-free
+    programs trace unchanged. The RDP accountant consumes the matching
+    per-round survivor counts via the ``agg_survivors`` round metric
+    (``repro.launch.train``).
 
     Keys depend only on ``(dp_seed, round_index, leaf counter)`` with a
     fixed (sorted-entry, flatten-order) leaf numbering, so every
     execution mode and both placement layouts draw the same bits.
     """
     from repro.comm.error_feedback import COMM_STATE_KEYS
-    std = fed.dp_noise_multiplier * fed.dp_clip / fed.clients_per_round
+    denom = (fed.clients_per_round if cohort_size is None
+             else jnp.maximum(cohort_size, 1.0))
+    std = fed.dp_noise_multiplier * fed.dp_clip / denom
     rkey = jax.random.fold_in(jax.random.PRNGKey(fed.dp_seed),
                               round_index)
     out: Dict[str, Tree] = {}

@@ -20,6 +20,11 @@ name                                  kind     meaning
 ``rounds/completed``                  counter  rounds dispatched
 ``comm/wire_bytes_total``             counter  uploaded wire bytes
 ``dp/epsilon``                        gauge    RDP ε at last eval round
+``faults/injected``                   counter  faulted uploads injected
+``faults/rejected_uploads``           counter  uploads the defense zeroed
+``rounds/quorum_skipped``             counter  rounds frozen by quorum
+``watchdog/rollbacks``                counter  checkpoint rollbacks taken
+``prefetch/shutdown_abandoned``       gauge    1 if close() hit deadline
 ====================================  =======  ==========================
 
 Usage::
@@ -57,6 +62,11 @@ CANONICAL_METRICS: Dict[str, str] = {
     "rounds/completed": "counter",
     "comm/wire_bytes_total": "counter",
     "dp/epsilon": "gauge",
+    "faults/injected": "counter",
+    "faults/rejected_uploads": "counter",
+    "rounds/quorum_skipped": "counter",
+    "watchdog/rollbacks": "counter",
+    "prefetch/shutdown_abandoned": "gauge",
 }
 
 

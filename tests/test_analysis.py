@@ -232,6 +232,18 @@ def test_constraint_table_names_unique_and_each_rule_fires():
         "clipacc-parallel-only": dict(use_pallas_clipacc=True, dp_clip=1.0,
                                       layout="client_sequential"),
         "clipacc-no-codec": dict(use_pallas_clipacc=True, dp_clip=1.0),
+        "fault-prob-range": dict(fault_nan=1.5),
+        "fault-scale-factor-positive": dict(fault_scale_factor=0.0),
+        "min-quorum-range": dict(min_quorum=99),
+        "quorum-requires-defense": dict(min_quorum=1),
+        "robust-rank-parallel-only": dict(robust_agg="trimmed0.25",
+                                          layout="client_sequential"),
+        "robust-rank-uniform-weights": dict(robust_agg="coordinate_median",
+                                            agg_weighting="data_size"),
+        "dp-robust-mean-compatible": dict(dp_clip=1.0,
+                                          robust_agg="trimmed0.25"),
+        "clipacc-no-faults": dict(use_pallas_clipacc=True, dp_clip=1.0,
+                                  fault_nan=0.1),
     }
     assert set(violating) == set(names)   # every table row is exercised
     base = FedConfig(num_clients=4, clients_per_round=2)

@@ -95,6 +95,73 @@ def test_restore_rejects_shape_mismatch(tmp_path):
         restore_checkpoint(d, params_template=bad)
 
 
+# ------------------------------------------------------------- integrity
+
+def _corrupt(path, mode):
+    """Bit-flip one payload byte, or truncate the file, in place."""
+    with open(path, "rb") as f:
+        data = bytearray(f.read())
+    if mode == "bitflip":
+        data[len(data) // 2] ^= 0x40
+    else:
+        data = data[: len(data) // 2]
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+
+
+@pytest.mark.parametrize("mode", ["bitflip", "truncate"])
+def test_corrupt_latest_falls_back_to_newest_valid(tmp_path, mode):
+    """A corrupted newest payload (bit rot or truncation behind the
+    atomic-write protocol's back) must degrade to the previous save —
+    with a warning — not crash the restore or return garbage."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, params=_tree(1.0))
+    save_checkpoint(d, 2, params=_tree(2.0))
+    _corrupt(os.path.join(d, "ckpt_00000002.npz"), mode)
+    with pytest.warns(UserWarning, match="skipping corrupt"):
+        params, _, step = restore_checkpoint(d, params_template=_tree())
+    assert step == 1
+    assert float(params["w"][1, 2]) == 5.0  # the scale-1.0 payload
+
+
+def test_corrupt_explicit_step_raises(tmp_path):
+    """Asking for a specific step means those exact bytes: a checksum
+    mismatch is an error, never a silent fallback."""
+    from repro.checkpoint import CorruptCheckpointError
+    d = str(tmp_path)
+    save_checkpoint(d, 3, params=_tree())
+    _corrupt(os.path.join(d, "ckpt_00000003.npz"), "bitflip")
+    with pytest.raises(CorruptCheckpointError, match="checksum"):
+        restore_checkpoint(d, params_template=_tree(), step=3)
+
+
+def test_every_checkpoint_corrupt_is_actionable(tmp_path):
+    from repro.checkpoint import CorruptCheckpointError
+    d = str(tmp_path)
+    save_checkpoint(d, 1, params=_tree())
+    _corrupt(os.path.join(d, "ckpt_00000001.npz"), "truncate")
+    with pytest.warns(UserWarning):
+        with pytest.raises(CorruptCheckpointError,
+                           match="failed verification"):
+            restore_checkpoint(d, params_template=_tree())
+
+
+def test_legacy_manifest_without_checksum_still_restores(tmp_path):
+    """Pre-checksum checkpoints (no ``npz_sha256`` key) restore
+    unverified — upgrading the code must not orphan old saves."""
+    import json
+    d = str(tmp_path)
+    save_checkpoint(d, 4, params=_tree())
+    mpath = os.path.join(d, "ckpt_00000004.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["npz_sha256"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    _, _, step = restore_checkpoint(d, params_template=_tree())
+    assert step == 4
+
+
 # --------------------------------------------------------- driver resume
 
 def _preempt_at(src_dir, dst_dir, step):

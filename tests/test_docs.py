@@ -24,6 +24,9 @@ DOCTEST_MODULES = [
     "repro.data.sampler",
     "repro.privacy.accountant",
     "repro.telemetry.registry",
+    "repro.faults.injection",
+    "repro.faults.defense",
+    "repro.faults.watchdog",
 ]
 
 
@@ -51,11 +54,12 @@ def test_markdown_links_resolve():
 
 def test_docs_cover_required_pages():
     for page in ("architecture.md", "paper_map.md", "scenarios.md",
-                 "privacy.md", "observability.md"):
+                 "privacy.md", "observability.md", "faults.md"):
         assert (REPO / "docs" / page).exists(), f"docs/{page} missing"
-    # the README §Scenarios / §Privacy / §Observability sections must
-    # link into docs/
+    # the README §Scenarios / §Privacy / §Observability / §Fault
+    # tolerance sections must link into docs/
     readme = (REPO / "README.md").read_text()
     assert "docs/scenarios.md" in readme
     assert "docs/privacy.md" in readme
     assert "docs/observability.md" in readme
+    assert "docs/faults.md" in readme

@@ -1,0 +1,430 @@
+"""Fault-injection + graceful-degradation layer (repro.faults,
+docs/faults.md): seeded schedules, upload validation, robust
+aggregation, quorum rounds, watchdog rollback, and the chaos sweep.
+
+Set ``REPRO_LAYOUT=client_parallel|client_sequential`` to pin the layout
+matrix to one entry (the CI layout matrix does)."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from conftest import build_tiny
+from repro.config import FedConfig
+from repro.core import build_fed_state, make_round_fn
+from repro.core.rounds import make_multi_round_fn, trace_round_jaxpr
+from repro.faults import (FAULT_DROP_KEY, FAULT_MULT_KEY, FaultModel,
+                          NaNWatchdog, WatchdogRollback, parse_robust_agg,
+                          robust_aggregate, upload_validity)
+
+_ENV_LAYOUT = os.environ.get("REPRO_LAYOUT")
+LAYOUTS = ([_ENV_LAYOUT] if _ENV_LAYOUT
+           else ["client_parallel", "client_sequential"])
+
+
+# ------------------------------------------------------------- schedules
+
+def test_schedule_deterministic_and_subset_invariant():
+    """The fault realization of (seed, round, client) is a pure function:
+    re-draws are identical, and sampling a SUBSET of clients sees exactly
+    the full population's values at those ids — so any two execution
+    modes (or cohort compositions) agree on who faulted."""
+    fm = FaultModel(16, p_drop=0.3, p_nan=0.2, p_scale=0.2, seed=11)
+    sub = np.array([1, 4, 9])
+    d1, m1 = fm.round_faults(5, sub)
+    d2, m2 = fm.round_faults(5, sub)
+    assert np.array_equal(d1, d2)
+    assert np.array_equal(m1, m2, equal_nan=True)
+    full_d, full_m = fm.round_faults(5, np.arange(16))
+    assert np.array_equal(d1, full_d[sub])
+    assert np.array_equal(m1, full_m[sub], equal_nan=True)
+    # different rounds draw independently
+    d3, m3 = fm.round_faults(6, sub)
+    assert not (np.array_equal(d1, d3)
+                and np.array_equal(m1, m3, equal_nan=True))
+
+
+def test_inactive_model_emits_no_payload():
+    assert FaultModel(8).round_payload(0, np.arange(4)) == {}
+    assert FaultModel.from_fed(FedConfig()) is None
+
+
+def test_payload_rides_reserved_keys():
+    fm = FaultModel(8, p_nan=0.5, seed=3)
+    pay = fm.round_payload(2, np.arange(8))
+    assert set(pay) == {FAULT_DROP_KEY, FAULT_MULT_KEY}
+    assert pay[FAULT_DROP_KEY].dtype == np.bool_
+    assert pay[FAULT_MULT_KEY].dtype == np.float32
+
+
+def test_generator_attaches_fault_payload_identically_all_modes():
+    """The payload comes from its own seeded rng, not the data stream:
+    attaching it changes neither tokens nor cids, and the prefetched
+    stream matches eager assembly."""
+    from repro.data import RoundBatchGenerator, make_task
+    task = make_task("class_lm", vocab_size=64, seq_len=16,
+                     num_samples=256, num_clients=4, seed=0)
+
+    def gen(faults):
+        return RoundBatchGenerator(
+            task, num_clients=4, clients_per_round=4, local_steps=2,
+            batch_size=2, rng=np.random.default_rng(7), faults=faults)
+
+    g0, g1 = gen(None), gen(FaultModel(4, p_nan=0.4, seed=5))
+    for r in range(3):
+        b0, c0 = g0.next_round()
+        b1, c1 = g1.next_round()
+        assert np.array_equal(c0, c1)
+        assert np.array_equal(b0["tokens"], b1["tokens"])
+        assert FAULT_MULT_KEY in b1 and FAULT_MULT_KEY not in b0
+        want_d, want_m = FaultModel(4, p_nan=0.4, seed=5).round_faults(r, c1)
+        assert np.array_equal(b1[FAULT_DROP_KEY], want_d)
+        assert np.array_equal(b1[FAULT_MULT_KEY], want_m, equal_nan=True)
+
+
+# ----------------------------------------------------- parse + constraints
+
+def test_parse_robust_agg_specs():
+    assert parse_robust_agg("none") == ("none", 0.0)
+    assert parse_robust_agg("mean") == ("mean", 0.0)
+    assert parse_robust_agg("trimmed0.1") == ("trimmed", 0.1)
+    assert parse_robust_agg("coordinate_median") == ("coordinate_median",
+                                                     0.0)
+    assert parse_robust_agg("norm_filter") == ("norm_filter", 0.0)
+    for bad in ("trimmed", "trimmed0.5", "trimmed-0.1", "median", ""):
+        with pytest.raises(ValueError):
+            parse_robust_agg(bad)
+
+
+def test_constraints_reject_invalid_fault_configs():
+    base = dict(num_clients=8, clients_per_round=4, sequential_clients=4)
+    with pytest.raises(ValueError, match="fault_nan"):
+        FedConfig(fault_nan=1.5, **base).validate()
+    with pytest.raises(ValueError, match="min_quorum"):
+        FedConfig(min_quorum=5, robust_agg="mean", **base).validate()
+    with pytest.raises(ValueError, match="survivors"):
+        FedConfig(min_quorum=2, **base).validate()  # quorum needs defense
+    with pytest.raises(ValueError, match="client_parallel"):
+        FedConfig(layout="client_sequential", robust_agg="trimmed0.1",
+                  **base).validate()
+    with pytest.raises(ValueError, match="rank"):
+        FedConfig(robust_agg="coordinate_median", dp_clip=1.0,
+                  dp_noise_multiplier=1.0, **base).validate()
+    with pytest.raises(ValueError, match="clipacc"):
+        FedConfig(use_pallas_clipacc=True, dp_clip=1.0,
+                  dp_noise_multiplier=1.0, fault_nan=0.1,
+                  **base).validate()
+    # the sanctioned combos pass
+    FedConfig(fault_nan=0.1, robust_agg="norm_filter", min_quorum=2,
+              **base).validate()
+    FedConfig(layout="client_sequential", fault_drop=0.2,
+              robust_agg="mean", **base).validate()
+
+
+# ----------------------------------------------------- validator/aggregate
+
+def _uploads(vals):
+    """(S,) list of scalars -> stacked upload dict with a (S, 2) leaf."""
+    arr = jnp.asarray([[v, v] for v in vals], jnp.float32)
+    return {"delta": {"w": arr}}
+
+
+def test_upload_validity_screens_nonfinite_and_outliers():
+    ups = _uploads([1.0, np.nan, 1.0, np.inf, 1.0, 100.0])
+    valid = upload_validity(ups, arrived=None, kind="mean", norm_mult=0.0)
+    assert list(np.asarray(valid)) == [True, False, True, False, True,
+                                       True]
+    # norm screen: 100.0 is way past 5x the median norm
+    valid = upload_validity(ups, arrived=None, kind="norm_filter",
+                            norm_mult=5.0)
+    assert list(np.asarray(valid)) == [True, False, True, False, True,
+                                       False]
+    # arrived mask composes
+    arrived = jnp.asarray([False, True, True, True, True, True])
+    valid = upload_validity(ups, arrived=arrived, kind="mean",
+                            norm_mult=0.0)
+    assert list(np.asarray(valid)) == [False, False, True, False, True,
+                                       True]
+
+
+def test_robust_aggregators_match_numpy_reference():
+    vals = [3.0, -1.0, 7.0, np.nan, 5.0, 2.0]
+    ups = _uploads(vals)
+    valid = upload_validity(ups, arrived=None, kind="mean", norm_mult=0.0)
+    ok = np.asarray([v for v in vals if np.isfinite(v)])
+
+    mean_up, nv = robust_aggregate(ups, valid, None, kind="mean")
+    assert int(nv) == 5
+    np.testing.assert_allclose(np.asarray(mean_up["delta"]["w"])[0],
+                               ok.mean(), rtol=1e-6)
+
+    med_up, _ = robust_aggregate(ups, valid, None,
+                                 kind="coordinate_median")
+    np.testing.assert_allclose(np.asarray(med_up["delta"]["w"])[0],
+                               np.median(ok), rtol=1e-6)
+
+    tr_up, _ = robust_aggregate(ups, valid, None, kind="trimmed",
+                                trim_frac=0.25)
+    k = int(0.25 * 5)                       # 1 trimmed per side
+    ref = np.sort(ok)[k:len(ok) - k].mean()
+    np.testing.assert_allclose(np.asarray(tr_up["delta"]["w"])[0], ref,
+                               rtol=1e-6)
+
+
+def test_aggregate_zero_survivors_is_zero_update():
+    """No valid upload: every aggregator must produce a FINITE (zero)
+    mean, never the +inf sort sentinel — quorum then freezes the round."""
+    ups = _uploads([np.nan, np.inf, np.nan])
+    valid = jnp.zeros(3, bool)
+    for kind, tf in (("mean", 0.0), ("trimmed", 0.2),
+                     ("coordinate_median", 0.0), ("norm_filter", 0.0)):
+        mu, nv = robust_aggregate(ups, valid, None, kind=kind,
+                                  trim_frac=tf)
+        assert int(nv) == 0
+        assert np.all(np.asarray(mu["delta"]["w"]) == 0.0), kind
+
+
+@settings(max_examples=12, deadline=None)
+@given(kind=st.sampled_from(["mean", "trimmed", "coordinate_median",
+                             "norm_filter"]),
+       vneg=st.floats(-10.0, -0.1), seed=st.integers(0, 5))
+def test_vbar_stays_nonnegative_under_every_aggregator(kind, vneg, seed):
+    """Second-moment entries must come out >= 0 from every registry
+    entry: the next round sqrt()s them, and a weighted combination of
+    screened values (or DP noise upstream) must never leak a negative
+    through (satellite 3)."""
+    rng = np.random.default_rng(seed)
+    s = 5
+    ups = {
+        "delta": {"w": jnp.asarray(rng.normal(size=(s, 3)), jnp.float32)},
+        "v_mean": {"w": jnp.asarray(
+            np.concatenate([[vneg], rng.uniform(0, 2, s - 1)])[:, None],
+            jnp.float32)},
+    }
+    valid = jnp.ones(s, bool)
+    weights = jnp.asarray(rng.uniform(0.1, 1.0, s), jnp.float32)
+    tf = 0.2 if kind == "trimmed" else 0.0
+    w = None if kind in ("trimmed", "coordinate_median") else weights
+    mu, _ = robust_aggregate(ups, valid, w, kind=kind, trim_frac=tf)
+    assert np.all(np.asarray(mu["v_mean"]["w"]) >= 0.0)
+
+
+# ------------------------------------------------- engine: gating + chaos
+
+def _batch(cfg, s, k, b, seq, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (s, k, b, seq))
+    return {"tokens": jnp.asarray(toks, jnp.int32),
+            "labels": jnp.asarray(np.roll(toks, -1, -1), jnp.int32)}
+
+
+def _base_fed(layout, **kw):
+    return FedConfig(algorithm="fedadamw", num_clients=4,
+                     clients_per_round=4, local_steps=2, lr=1e-3,
+                     layout=layout, sequential_clients=4, **kw)
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_faults_off_bit_exact_and_jaxpr_parity(layout):
+    """Disabled faults/defense must not perturb the engine: the traced
+    program is byte-identical (structural gating) AND one eager round
+    gives bit-identical parameters even with inert knobs moved."""
+    cfg, model, _ = build_tiny("dense")
+    base = _base_fed(layout)
+    shifted = dataclasses.replace(base, fault_seed=123,
+                                  robust_norm_mult=9.0)
+    j0, _ = trace_round_jaxpr(model, base, cfg=cfg, with_faults=False)
+    j1, _ = trace_round_jaxpr(model, shifted, cfg=cfg, with_faults=False)
+    assert str(j0) == str(j1)
+
+    batch = _batch(cfg, 4, 2, 2, 16)
+    cids = jnp.arange(4, dtype=jnp.int32)
+
+    def run(fed):
+        params, specs, alg, sstate = build_fed_state(
+            model, fed, jax.random.key(0), cfg=cfg)
+        rf = jax.jit(make_round_fn(model, fed, specs, alg=alg))
+        return rf(params, sstate, batch, cids, jnp.asarray(0))[0]
+
+    for a, b in zip(jax.tree.leaves(run(base)),
+                    jax.tree.leaves(run(shifted))):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_chaos_sweep_defended_rounds_stay_finite(layout):
+    """(p_drop, p_nan, p_scale) grid x layouts x eager/fused: with the
+    mean defense, every committed round is finite and the survivor count
+    matches the host-side schedule — in both layouts and both engines
+    (the schedule rides the batch pytree, so invariance is structural)."""
+    cfg, model, _ = build_tiny("dense")
+    fed = _base_fed(layout, fault_drop=0.1, fault_nan=0.1,
+                    fault_scale=0.1, robust_agg="mean")
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    rf = jax.jit(make_round_fn(model, fed, specs, alg=alg))
+    grid = [(0.5, 0.0, 0.0), (0.0, 0.5, 0.0), (0.0, 0.0, 0.5),
+            (0.3, 0.3, 0.3)]
+    cids = jnp.arange(4, dtype=jnp.int32)
+    survivors = {}
+    for p_drop, p_nan, p_scale in grid:
+        fm = FaultModel(4, p_drop=p_drop, p_nan=p_nan, p_scale=p_scale,
+                        seed=13)
+        batch = _batch(cfg, 4, 2, 2, 16)
+        batch.update(jax.tree.map(jnp.asarray,
+                                  fm.round_payload(0, np.arange(4))))
+        p, s, m = rf(params, sstate, batch, cids, jnp.asarray(0))
+        assert np.isfinite(float(m["loss_mean"]))
+        for leaf in jax.tree.leaves(p):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+        drop, mult = fm.round_faults(0, np.arange(4))
+        want = int(np.sum(~drop & np.isfinite(mult)))
+        assert int(m["agg_survivors"]) == want
+        survivors[(p_drop, p_nan, p_scale)] = int(m["agg_survivors"])
+        # same schedule realized for a different client subset agrees
+        d2, m2 = fm.round_faults(0, np.array([0, 2]))
+        assert np.array_equal(d2, drop[[0, 2]])
+    assert survivors[(0.3, 0.3, 0.3)] <= 4
+
+
+def test_fused_engine_matches_eager_under_faults():
+    """M fused faulty rounds == M eager faulty rounds, bit-for-bit: the
+    fault keys scan apart with the data axes."""
+    cfg, model, _ = build_tiny("dense")
+    fed = _base_fed("client_parallel", fault_nan=0.4,
+                    robust_agg="mean", min_quorum=1)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    rf = jax.jit(make_round_fn(model, fed, specs, alg=alg))
+    mrf = jax.jit(make_multi_round_fn(model, fed, specs, alg=alg))
+    fm = FaultModel(4, p_nan=0.4, seed=9)
+    cids = jnp.arange(4, dtype=jnp.int32)
+    per_round = []
+    for r in range(3):
+        b = _batch(cfg, 4, 2, 2, 16, seed=r)
+        b.update(jax.tree.map(jnp.asarray,
+                              fm.round_payload(r, np.arange(4))))
+        per_round.append(b)
+    p_e, s_e = params, sstate
+    for r, b in enumerate(per_round):
+        p_e, s_e, _ = rf(p_e, s_e, b, cids, jnp.asarray(r))
+    stacked = {k: jnp.stack([b[k] for b in per_round])
+               for k in per_round[0]}
+    p_f, s_f, m_f = mrf(params, sstate, stacked,
+                        jnp.stack([cids] * 3), jnp.asarray(0))
+    for a, b in zip(jax.tree.leaves(p_e), jax.tree.leaves(p_f)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert m_f["agg_survivors"].shape == (3,)
+
+
+def test_quorum_freezes_round_but_advances_schedule():
+    """All uploads rejected: params AND server state bit-match their
+    pre-round values; the next round (different schedule draw) moves."""
+    cfg, model, _ = build_tiny("dense")
+    fed = _base_fed("client_parallel", fault_nan=0.999999,
+                    robust_agg="mean", min_quorum=1)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    rf = jax.jit(make_round_fn(model, fed, specs, alg=alg))
+    fm = FaultModel(4, p_nan=0.999999, seed=0)
+    b = _batch(cfg, 4, 2, 2, 16)
+    b.update(jax.tree.map(jnp.asarray, fm.round_payload(0, np.arange(4))))
+    p, s, m = rf(params, sstate, b, jnp.arange(4, dtype=jnp.int32),
+                 jnp.asarray(0))
+    assert float(m["quorum_ok"]) == 0.0 and int(m["agg_survivors"]) == 0
+    for a, c in zip(jax.tree.leaves(p), jax.tree.leaves(params)):
+        assert np.array_equal(np.asarray(a), np.asarray(c))
+    for a, c in zip(jax.tree.leaves(s), jax.tree.leaves(sstate)):
+        assert np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_undefended_nan_fault_poisons_params():
+    """The divergence half of the acceptance demo: without a defense a
+    NaN upload reaches the global params in one round."""
+    cfg, model, _ = build_tiny("dense")
+    fed = _base_fed("client_parallel", fault_nan=0.999999)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    rf = jax.jit(make_round_fn(model, fed, specs, alg=alg))
+    fm = FaultModel(4, p_nan=0.999999, seed=0)
+    b = _batch(cfg, 4, 2, 2, 16)
+    b.update(jax.tree.map(jnp.asarray, fm.round_payload(0, np.arange(4))))
+    p, _, _ = rf(params, sstate, b, jnp.arange(4, dtype=jnp.int32),
+                 jnp.asarray(0))
+    assert not all(bool(jnp.all(jnp.isfinite(l)))
+                   for l in jax.tree.leaves(p))
+
+
+# ------------------------------------------------------- DP interaction
+
+def test_dp_noise_scales_to_surviving_cohort():
+    """sigma*C/S_valid: with the same (seed, round) the noise drawn for
+    a 2-survivor cohort is exactly S/2 times the full-cohort noise."""
+    from repro.privacy.dp import add_round_noise
+    fed = _base_fed("client_parallel", dp_clip=1.0,
+                    dp_noise_multiplier=1.0)
+    x = {"delta": {"w": jnp.zeros((4, 4), jnp.float32)}}
+    full = add_round_noise(x, fed, 0)["delta"]["w"]
+    half = add_round_noise(x, fed, 0,
+                           cohort_size=jnp.asarray(2.0))["delta"]["w"]
+    np.testing.assert_allclose(np.asarray(half), 2.0 * np.asarray(full),
+                               rtol=1e-6)
+    # cohort_size floors at 1 instead of dividing by zero
+    zero = add_round_noise(x, fed, 0,
+                           cohort_size=jnp.asarray(0.0))["delta"]["w"]
+    assert np.all(np.isfinite(np.asarray(zero)))
+
+
+# ----------------------------------------------------------- watchdog
+
+def test_watchdog_detects_and_rollback_bitmatches_checkpoint(tmp_path):
+    """Round-trip: save a clean checkpoint, poison the live state, the
+    watchdog raises, the restore bit-matches the saved trees."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    wd = NaNWatchdog(max_rollbacks=1)
+    params = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)}
+    sstate = {"m": jnp.ones((4,), jnp.float32), "t": jnp.zeros((), jnp.int32)}
+    assert wd.healthy(params, sstate)
+    save_checkpoint(str(tmp_path), 7, params=params, server_state=sstate)
+    poisoned = {"w": params["w"].at[0, 0].set(jnp.nan)}
+    assert wd.bad_leaves(poisoned, sstate) == 1
+    with pytest.raises(WatchdogRollback) as ei:
+        wd.check(7, poisoned, sstate)
+    assert ei.value.round_index == 7
+    rp, rs, step = restore_checkpoint(str(tmp_path),
+                                      params_template=params,
+                                      state_template=sstate)
+    assert step == 7
+    assert np.array_equal(np.asarray(rp["w"]), np.asarray(params["w"]))
+    assert np.array_equal(np.asarray(rs["m"]), np.asarray(sstate["m"]))
+    assert wd.healthy(rp, rs)
+
+
+def test_watchdog_driver_rolls_back_then_aborts_cleanly(tmp_path):
+    """Driver loop: fault_seed=15 first corrupts round 2 — AFTER the
+    round-2 checkpoint. The deterministic replay re-corrupts, so the
+    budget burns down and the run aborts with a clean RuntimeError (not
+    a NaN trajectory, not a hang)."""
+    from repro.launch.train import run_training
+    with pytest.raises(RuntimeError, match="budget exhausted"):
+        run_training(rounds=4, num_clients=4, clients_per_round=4,
+                     local_steps=2, batch_size=4, eval_every=2,
+                     seq_len=16, fault_nan=0.3, fault_seed=15,
+                     watchdog=True, watchdog_max_rollbacks=2,
+                     ckpt_dir=str(tmp_path), ckpt_every=2)
+
+
+def test_driver_defended_run_finite_with_history_columns():
+    from repro.launch.train import run_training
+    h = run_training(rounds=4, num_clients=4, clients_per_round=4,
+                     local_steps=2, batch_size=4, eval_every=2,
+                     seq_len=16, fault_nan=0.3, robust_agg="norm_filter",
+                     min_quorum=1, watchdog=True)
+    assert all(np.isfinite(h["train_loss"]))
+    assert len(h["agg_survivors"]) == 4
+    assert len(h["quorum_ok"]) == 4
+    assert h["engine"]["watchdog_rollbacks"] == 0

@@ -95,6 +95,70 @@ def test_prefetcher_propagates_producer_error():
         list(pre)
 
 
+def test_producer_raise_midrun_cannot_deadlock_shutdown():
+    """A producer that fills the bounded queue and THEN raises, with a
+    consumer that never drains (it crashed elsewhere), must not wedge:
+    the exception put honors the stop flag, and close() returns within
+    its deadline with the thread gone."""
+    import time as _time
+
+    class FillThenBoom:
+        def __init__(self):
+            self.calls = 0
+
+        def next_round(self):
+            self.calls += 1
+            if self.calls > 1:
+                raise RuntimeError("mid-run explosion")
+            return {"tokens": np.zeros((1, 1, 2, 4), np.int32),
+                    "labels": np.zeros((1, 1, 2, 4), np.int32)}, \
+                np.zeros((1,), np.int32)
+
+    pre = HostPrefetcher(FillThenBoom(), [(0, 1), (1, 1)], depth=1,
+                         stacked=False, to_device=False)
+    it = iter(pre)
+    next(it)                      # start the thread, take one item
+    # queue now holds the exception (or the producer is retrying the
+    # put); shut down WITHOUT draining it
+    t0 = _time.monotonic()
+    pre.close(timeout=5.0)
+    assert _time.monotonic() - t0 < 5.5
+    assert pre._thread is None
+
+
+def test_close_deadline_abandons_wedged_producer():
+    """A producer stuck inside _produce (hung staging, generator bug)
+    must not hang close(): past the deadline the daemon thread is
+    abandoned and the call returns."""
+    import threading as _threading
+    import time as _time
+    release = _threading.Event()
+
+    class Wedged:
+        def next_round(self):
+            release.wait(30.0)    # simulates a hung device_put
+            return {"tokens": np.zeros((1, 1, 2, 4), np.int32),
+                    "labels": np.zeros((1, 1, 2, 4), np.int32)}, \
+                np.zeros((1,), np.int32)
+
+    import queue as _queue
+    pre = HostPrefetcher(Wedged(), [(0, 1)], depth=1, stacked=False,
+                         to_device=False)
+    # start the producer the way __iter__ does, without the consumer
+    # blocking on the (never-filled) queue
+    pre._queue = _queue.Queue(maxsize=1)
+    pre._thread = _threading.Thread(target=pre._producer_loop,
+                                    daemon=True)
+    pre._thread.start()
+    _time.sleep(0.2)              # let it wedge inside _produce
+    t0 = _time.monotonic()
+    pre.close(timeout=0.5)
+    took = _time.monotonic() - t0
+    release.set()                 # let the daemon thread die
+    assert took < 3.0
+    assert pre._thread is None
+
+
 # -------------------------------------------------------------- metrics
 
 def test_metrics_spool_scalar_and_stacked():
