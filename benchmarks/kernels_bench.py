@@ -5,7 +5,11 @@ so wall-clock numbers compare the XLA *unfused* update against an XLA
 *pre-fused* single-expression update (the computation the Pallas kernel
 performs per tile); the kernel's HBM-byte advantage is reported
 analytically from the operand counts (DESIGN.md §5: 32 B/elem fused vs
->= 52 B/elem naive with materialized m_hat/v_hat)."""
+>= 52 B/elem naive with materialized m_hat/v_hat).
+
+The ``uploadfuse_dp_int4`` row measures the one-pass DP + int4 upload
+(the uploadfuse megakernel's computation) against the staged engine
+path including the codec wire round trip it eliminates."""
 import time
 
 import jax
@@ -71,6 +75,78 @@ def run() -> Rows:
     rows.add(kernel="blockmean", n_elems=r * c,
              xla_unfused_us=round(t_col, 1), xla_fused_us=round(t_col, 1),
              pallas_bytes_per_elem=4, naive_bytes_per_elem=8)
+
+    # uploadfuse: the DP + int4 upload (fold -> clip -> quantize-pack ->
+    # wire -> unpack -> re-clip -> accumulate) as one XLA expression vs
+    # the staged jits the unfused engine runs — including the codec wire
+    # round trip the fused kernel skips (it aggregates decoded values
+    # in-register and emits packed codes as a side output). The barrier
+    # in the one-pass program pins the decoded copy to a single
+    # materialization, exactly like the kernel's per-tile compute —
+    # without it XLA re-derives the decode chain for each consumer.
+    s_n, r_u, c_u = 4, budget(512, 64), 1024
+
+    def _clip05(a):
+        norm = jnp.sqrt(jnp.sum(a * a, axis=(1, 2)))
+        return jnp.minimum(1.0, 0.5 / jnp.maximum(norm, 1e-12)
+                           )[:, None, None] * a
+
+    def _scale4(ctgt):
+        return jnp.maximum(jnp.max(jnp.abs(ctgt), axis=(1, 2)),
+                           1e-12)[:, None, None] / 7.0
+
+    def _pack(q):
+        c8 = (q + 8.0).astype(jnp.uint8)
+        pairs = c8.reshape(*c8.shape[:-1], -1, 2)
+        return pairs[..., 0] | (pairs[..., 1] << 4)
+
+    def _unpack(p, sc):
+        lo = (p & 0xF).astype(jnp.float32) - 8.0
+        hi = (p >> 4).astype(jnp.float32) - 8.0
+        q = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], -1)
+        return q * sc
+
+    stage_fold = jax.jit(lambda x, e: x + e)
+    stage_clip = jax.jit(_clip05)
+    stage_scale = jax.jit(_scale4)
+    stage_q = jax.jit(lambda ctgt, u, sc: jnp.clip(
+        jnp.floor(ctgt / sc + u), -8.0, 7.0))
+    stage_pack = jax.jit(_pack)
+    stage_unpack = jax.jit(_unpack)
+    stage_acc = jax.jit(lambda w, final: jnp.sum(
+        w[:, None, None] * final, axis=0))
+    stage_res = jax.jit(lambda ctgt, final: ctgt - final)
+
+    def staged(x, e, u, w):
+        ctgt = stage_clip(stage_fold(x, e))
+        sc = stage_scale(ctgt)
+        q = stage_q(ctgt, u, sc)
+        wire = stage_pack(q)               # client encode -> wire
+        final = stage_clip(stage_unpack(wire, sc))   # server decode
+        return stage_acc(w, final), stage_res(ctgt, final), wire
+
+    @jax.jit
+    def onepass(x, e, u, w):
+        ctgt = _clip05(x + e)
+        sc = _scale4(ctgt)
+        q = jnp.clip(jnp.floor(ctgt / sc + u), -8.0, 7.0)
+        final = jax.lax.optimization_barrier(_clip05(q * sc))
+        return (jnp.sum(w[:, None, None] * final, axis=0),
+                ctgt - final, _pack(q))
+
+    xu, eu, uu = [jnp.asarray(rng.normal(size=(s_n, r_u, c_u)),
+                              jnp.float32) for _ in range(3)]
+    wu = jnp.full((s_n,), 1.0 / s_n, jnp.float32)
+    t_staged = _timeit(staged, xu, eu, uu, wu)
+    t_onepass = _timeit(onepass, xu, eu, uu, wu)
+    for a, b in zip(staged(xu, eu, uu, wu), onepass(xu, eu, uu, wu)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    rows.add(kernel="uploadfuse_dp_int4", n_elems=s_n * r_u * c_u,
+             xla_unfused_us=round(t_staged, 1),
+             xla_fused_us=round(t_onepass, 1),
+             pallas_bytes_per_elem=17,    # x+e+u in, acc/S+res+codes out
+             naive_bytes_per_elem=41)     # + ctgt/dec/wire round trips
 
     # correctness cross-check against the Pallas kernels (interpret mode)
     from repro.kernels.blockmean.ops import block_means_2d

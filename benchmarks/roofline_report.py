@@ -4,8 +4,9 @@ Two modes:
 
 ``--live`` (the CI ``roofline-report`` job, ROADMAP item 4)
     Compiles the federated round step and the semantic program of each
-    Pallas kernel (quantpack, clipacc, blockmean, fused_adamw) on this
-    host, counts FLOPs / HBM bytes / collective bytes from the compiled
+    Pallas kernel (quantpack, clipacc, blockmean, fused_adamw,
+    uploadfuse) on this host, counts FLOPs / HBM bytes / collective
+    bytes from the compiled
     HLO text (``repro.roofline.hlo_counter`` — trip-count aware), and
     prints the three-term TPU-v5e roofline per subsystem
     (``repro.roofline.analysis``). Each row also carries the *analytic*
@@ -24,8 +25,11 @@ default (no flag)
     roofline recorded there.
 
 Artifacts land in ``benchmarks/out/``: ``roofline_live.csv`` plus
-``roofline_live.md`` (the markdown table CI uploads). Column meanings
-are documented in docs/observability.md §Roofline report.
+``roofline_live.md`` (the markdown table CI uploads) and
+``roofline_fusion.json`` — the uploadfuse fusion audit: the one-pass
+kernel interface bytes vs the separate-pass pipeline's summed HLO
+bytes, asserted strictly smaller. Column meanings are documented in
+docs/observability.md §Roofline report.
 """
 import argparse
 import glob
@@ -140,13 +144,107 @@ def _kernel_cases(smoke: bool):
     five = [jax.random.normal(jax.random.fold_in(key, i), (r, c),
                               jnp.float32) for i in range(5)]
     scalars = jnp.arange(1.0, 9.0, dtype=jnp.float32)
+    uf = _uploadfuse_operands(smoke)
     return [
         ("kernel:quantpack", quantpack_int8_ref, (x2d,)),
         ("kernel:clipacc",
          lambda x, wt: clip_accumulate_ref(x, wt, 1.0), (x3d, w)),
         ("kernel:blockmean", column_mean_ref, (x2d,)),
         ("kernel:fused_adamw", fused_adamw_ref, (*five, scalars)),
+        ("kernel:uploadfuse", uf["semantic"], uf["args"]),
     ]
+
+
+def _uploadfuse_operands(smoke: bool):
+    """Operands + closures for the fused-upload costing: the DP + int4 +
+    error-feedback configuration (the 3-phase path, worst unfused
+    traffic)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.uploadfuse.ref import upload_fuse_semantic
+
+    s_n = 4 if smoke else 8
+    n_leaves, blocks = 2, (2 if smoke else 8)   # 8-row tiles per leaf
+    r, c = n_leaves * blocks * 8, 1024
+    seg = np.repeat(np.arange(n_leaves, dtype=np.int32), blocks)
+    key = jax.random.key(7)
+    x = jax.random.normal(key, (s_n, r, c), jnp.float32)
+    e = jax.random.normal(jax.random.fold_in(key, 1), (s_n, r, c),
+                          jnp.float32)
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (s_n, r, c),
+                           jnp.float32)
+    w = jnp.full((s_n,), 1.0 / s_n, jnp.float32)
+    kw = dict(bits=4, dp=True, ef=True, n_leaves=n_leaves)
+
+    def semantic(x, e, u, w):
+        return upload_fuse_semantic(x, e, u, w, 0.5, seg, **kw)
+
+    return dict(semantic=semantic, args=(x, e, u, w), seg=seg, kw=kw)
+
+
+def _fusion_audit(smoke: bool) -> dict:
+    """Prove the one-pass win in bytes: the fused kernel's interface
+    (inputs + all outputs moved exactly once) vs the separate-pass
+    pipeline (fold+clip, quantize+decode, re-clip+accumulate compiled as
+    individual programs, intermediates materialized between them — the
+    sum of their HLO byte counts). Written to
+    ``benchmarks/out/roofline_fusion.json``; the roofline-report CI job
+    asserts ``fused_interface_bytes < separate_pass_bytes``."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.uploadfuse.ref import upload_fuse_semantic
+    from repro.kernels.uploadfuse.uploadfuse import (NORM_FLOOR,
+                                                    upload_fuse_3d)
+    from repro.roofline.hlo_counter import analyze_hlo
+
+    uf = _uploadfuse_operands(smoke)
+    x, e, u, w = uf["args"]
+    seg, kw = uf["seg"], uf["kw"]
+
+    def hlo_bytes(fn, *args):
+        return analyze_hlo(
+            jax.jit(fn).lower(*args).compile().as_text())["bytes"]
+
+    def clip_stack(a):
+        norm = jnp.sqrt(jnp.sum(a * a, axis=(1, 2)))
+        f = jnp.minimum(1.0, 0.5 / jnp.maximum(norm, NORM_FLOOR))
+        return f[:, None, None] * a
+
+    def stage_fold_clip(x, e):
+        return clip_stack(x + e)
+
+    def stage_quant_decode(ctgt, u):
+        # per-stack scale stands in for the per-leaf loop: the leaf
+        # bookkeeping costs nothing in bytes, the materialized decoded
+        # copy is the traffic
+        scale = jnp.maximum(jnp.max(jnp.abs(ctgt), axis=(1, 2)),
+                            1e-12)[:, None, None] / 7.0
+        q = jnp.clip(jnp.floor(ctgt / scale + u), -8.0, 7.0)
+        return q * scale
+
+    def stage_reclip_acc(ctgt, dec, w):
+        final = clip_stack(dec)
+        return jnp.sum(w[:, None, None] * final, axis=0), ctgt - final
+
+    ctgt = jax.jit(stage_fold_clip)(x, e)
+    dec = jax.jit(stage_quant_decode)(ctgt, u)
+    separate = (hlo_bytes(stage_fold_clip, x, e)
+                + hlo_bytes(stage_quant_decode, ctgt, u)
+                + hlo_bytes(stage_reclip_acc, ctgt, dec, w))
+    single_jit = hlo_bytes(
+        lambda x, e, u, w: upload_fuse_semantic(x, e, u, w, 0.5, seg,
+                                                **kw),
+        x, e, u, w)
+    fused_out = jax.eval_shape(
+        lambda x, e, u, w: upload_fuse_3d(x, e, u, w, 0.5,
+                                          jnp.asarray(seg), **kw),
+        x, e, u, w)
+    fused = _tree_bytes((x, e, u, w)) + _tree_bytes(fused_out)
+    return {"fused_interface_bytes": int(fused),
+            "separate_pass_bytes": int(separate),
+            "single_jit_bytes": int(single_jit),
+            "separate_over_fused": round(separate / fused, 2)}
 
 
 def live_report(smoke: bool = False) -> Rows:
@@ -176,6 +274,16 @@ def live_report(smoke: bool = False) -> Rows:
     print_table("Roofline (live) — per subsystem, TPU-v5e terms from "
                 "compiled HLO", rows.rows)
     print(f"csv: {path}")
+    audit = _fusion_audit(smoke)
+    audit_path = os.path.join(OUT_DIR, "roofline_fusion.json")
+    with open(audit_path, "w") as f:
+        json.dump(audit, f, indent=2)
+    print(f"fusion audit: fused one-pass interface "
+          f"{audit['fused_interface_bytes']:.4g} B vs separate-pass "
+          f"pipeline {audit['separate_pass_bytes']:.4g} B "
+          f"({audit['separate_over_fused']}x) -> {audit_path}")
+    assert (audit["fused_interface_bytes"]
+            < audit["separate_pass_bytes"]), audit
     return rows
 
 

@@ -148,8 +148,9 @@ def audit_matrix(layouts: Tuple[str, ...] = LAYOUTS) -> List[AuditCase]:
     """The representative configs: per layout, a feature-free base, every
     feature at its OFF value (must trace == base even when its inert
     knobs move), and every feature ON (must trace != base, and feeds the
-    dtype/callback audits). Codec cases are client_parallel (error
-    feedback's layout)."""
+    dtype/callback audits). Codec + uploadfuse cases run in both
+    layouts; the rank-defense and multi-round cases are
+    client_parallel-only."""
     cases: List[AuditCase] = []
     for lay in layouts:
         b = f"base[{lay}]"
@@ -187,12 +188,26 @@ def audit_matrix(layouts: Tuple[str, ...] = LAYOUTS) -> List[AuditCase]:
             _base_fed(lay, fault_nan=0.3, robust_agg="mean",
                       min_quorum=1),
             differs_from=b, trace_kw={"with_faults": True}))
+        # upload codec + the fused upload megakernel (both layouts):
+        # uploadfuse at its OFF value must leave the codec program
+        # byte-identical (the defer gate in comm.compress is static),
+        # and ON must actually reroute the aggregation
+        cases.append(AuditCase(
+            f"codec_on[{lay}]",
+            _base_fed(lay, algorithm="fedadamw+int8"),
+            differs_from=b))
+        cases.append(AuditCase(
+            f"uploadfuse_off[{lay}]",
+            _base_fed(lay, algorithm="fedadamw+int8",
+                      use_pallas_uploadfuse=False),
+            parity_with=f"codec_on[{lay}]"))
+        cases.append(AuditCase(
+            f"uploadfuse_on[{lay}]",
+            _base_fed(lay, algorithm="fedadamw+int8",
+                      use_pallas_uploadfuse=True),
+            differs_from=f"codec_on[{lay}]"))
     if "client_parallel" not in layouts:
         return cases
-    cases.append(AuditCase(
-        "codec_on[client_parallel]",
-        _base_fed("client_parallel", algorithm="fedadamw+int8"),
-        differs_from="base[client_parallel]"))
     cases.append(AuditCase(
         "defense_on[client_parallel]",
         _base_fed("client_parallel", fault_scale=0.3,

@@ -71,10 +71,20 @@ def _encode_key(round_index, client_id, target) -> jax.Array:
 
 
 def compressed(alg: FedAlgorithm, codec: Codec, *,
-               error_feedback: Optional[bool] = None) -> FedAlgorithm:
+               error_feedback: Optional[bool] = None,
+               defer: bool = False) -> FedAlgorithm:
     """Route ``alg``'s delta upload through ``codec``.
 
-    ``error_feedback=None`` enables feedback iff the codec is lossy."""
+    ``error_feedback=None`` enables feedback iff the codec is lossy.
+
+    ``defer=True`` (set by ``FedConfig.use_pallas_uploadfuse``) skips the
+    per-client clip/encode/decode in ``upload`` and ships the RAW delta
+    plus the client's current residual row instead: the round engine
+    runs the whole pipeline — fold, DP clip, quantize, decoded re-clip,
+    weighted accumulate — in one fused Pallas pass over the stacked
+    uploads (kernels/uploadfuse) and writes the new residual back into
+    the upload dict before ``commit`` scatters it. State layout, wire
+    accounting and the commit/server_update hooks are unchanged."""
     ef = codec.lossy if error_feedback is None else error_feedback
     # client ids are needed for the EF residual table AND for stochastic
     # codecs (per-client rounding noise decorrelation) — both layouts
@@ -120,6 +130,12 @@ def compressed(alg: FedAlgorithm, codec: Codec, *,
 
     def upload(delta, cstate, specs, fed):
         up = dict(alg.upload(delta, _strip_comm(cstate), specs, fed))
+        if defer:
+            # fused path: hand the engine the raw delta and the current
+            # residual row; kernels/uploadfuse does the rest in-pass
+            if ef:
+                up[EF_KEY] = cstate[EF_KEY]
+            return up
         target = tree_add(delta, cstate[EF_KEY]) if ef else delta
         if ef and fed.dp_clip > 0.0:
             # client-level DP + error feedback: the residual must fold

@@ -116,6 +116,14 @@ class FedConfig:
     dp_seed: int = 0                   # server noise seed
     use_pallas_clipacc: bool = False   # fused clip+accumulate kernel for the
     #   delta entry (client_parallel, codec-free DP runs)
+    use_pallas_uploadfuse: bool = False  # one-pass upload megakernel:
+    #   error-feedback fold + DP clip + int8/int4 quantize + decoded
+    #   re-clip + weighted accumulate in a single read of the stacked
+    #   upload (kernels/uploadfuse, docs/kernels.md). Works in BOTH
+    #   layouts and composes DP with the int8/int4 codecs — the
+    #   combinations clipacc cannot fuse. fault_drop rides the kernel's
+    #   accumulation weights; corruption faults and robust_agg defenses
+    #   need the unfused path (see the uploadfuse-* constraint rows).
 
     # --- fault injection + defense (repro.faults, docs/faults.md):
     # post-sampling failure modes and the server-side guard rails.
@@ -322,15 +330,57 @@ CONSTRAINTS: Tuple[Constraint, ...] = (
        if not c.use_pallas_clipacc or c.layout == "client_parallel" else
        "use_pallas_clipacc operates on the stacked (S, ...) upload of "
        "the client_parallel layout; client_sequential aggregates one "
-       "client at a time inside a scan — use the default jnp clip path "
-       "there"),
+       "client at a time inside a scan. Set use_pallas_uploadfuse "
+       "instead — the fused upload kernel runs in both layouts"),
     _c("clipacc-no-codec", ("use_pallas_clipacc", "algorithm"),
        lambda c, s: None if not (c.use_pallas_clipacc and s) else
        f"use_pallas_clipacc is incompatible with upload codec {s!r}: DP "
        "clipping must happen BEFORE codec compression (the codec must "
        "encode the bounded values), but the fused kernel clips at "
-       "aggregation time, after decode. Drop the codec suffix or "
-       "disable the kernel."),
+       "aggregation time, after decode. Set use_pallas_uploadfuse "
+       "instead — the fused upload kernel clips before it quantizes, so "
+       "DP composes with the int8/int4 codecs on the fast path."),
+    _c("uploadfuse-codec-kind", ("use_pallas_uploadfuse", "algorithm"),
+       lambda c, s: None
+       if not c.use_pallas_uploadfuse or not s or s in ("int8", "int4")
+       else
+       f"use_pallas_uploadfuse fuses the int8/int4 quantize-pack (or no "
+       f"codec suffix at all); codec {s!r} reshapes the payload (sparse "
+       "indices / low-rank factors) and cannot ride the fused pass. "
+       "Drop the flag for this codec."),
+    _c("uploadfuse-xor-clipacc",
+       ("use_pallas_uploadfuse", "use_pallas_clipacc"),
+       lambda c, s: None
+       if not (c.use_pallas_uploadfuse and c.use_pallas_clipacc) else
+       "use_pallas_uploadfuse subsumes use_pallas_clipacc (the upload "
+       "megakernel clips and accumulates in the same pass); enable only "
+       "one of the two"),
+    _c("uploadfuse-no-corruption",
+       ("use_pallas_uploadfuse", "fault_nan", "fault_scale"),
+       lambda c, s: None
+       if not c.use_pallas_uploadfuse
+       or (c.fault_nan == 0.0 and c.fault_scale == 0.0) else
+       "use_pallas_uploadfuse aggregates decoded uploads inside the "
+       "kernel, so wire corruption (fault_nan / fault_scale) has no "
+       "materialized upload stack to land on; only fault_drop (masked "
+       "accumulation weights) rides the fused path. Disable the kernel "
+       "for corruption-fault experiments."),
+    _c("uploadfuse-no-defense", ("use_pallas_uploadfuse", "robust_agg"),
+       lambda c, s: None
+       if not c.use_pallas_uploadfuse or not c.defense_enabled() else
+       f"use_pallas_uploadfuse folds dropped-upload masking into its "
+       f"accumulation weights; robust_agg={c.robust_agg!r} screens a "
+       "materialized upload stack the fused kernel never builds. Set "
+       "robust_agg='none' or disable the kernel."),
+    _c("uploadfuse-sequential-no-drop",
+       ("use_pallas_uploadfuse", "layout", "fault_drop"),
+       lambda c, s: None
+       if not c.use_pallas_uploadfuse or c.layout == "client_parallel"
+       or c.fault_drop == 0.0 else
+       "use_pallas_uploadfuse under client_sequential pre-weights each "
+       "client's fused contribution inside the scan and cannot "
+       "renormalize the mean over surviving uploads; run fault_drop "
+       "experiments in client_parallel"),
     _c("fault-prob-range", ("fault_drop", "fault_nan", "fault_scale"),
        lambda c, s: next(
            (f"{n} must be a probability in [0, 1], got {p}"

@@ -527,7 +527,10 @@ def get_algorithm(fed: FedConfig) -> FedAlgorithm:
         # ids, so EF is on for every lossy codec unless explicitly
         # disabled (FedConfig.comm_error_feedback=False)
         ef = codec.lossy and fed.comm_error_feedback
-        alg = compressed(alg, codec, error_feedback=ef)
+        # use_pallas_uploadfuse defers clip/encode/decode to the round
+        # engine's one-pass upload megakernel (kernels/uploadfuse)
+        alg = compressed(alg, codec, error_feedback=ef,
+                         defer=fed.use_pallas_uploadfuse)
     return alg
 
 

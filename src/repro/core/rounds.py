@@ -205,9 +205,13 @@ def make_local_phase(loss_fn: Callable, alg: FedAlgorithm, fed: FedConfig,
     the bounded values (wire bytes unchanged) — and the auxiliary upload
     entries are clipped per client right after. The fused clipacc kernel
     (client_parallel, codec-free) instead clips the delta at aggregation
-    time, which is the same math with no codec in between."""
+    time, which is the same math with no codec in between; the fused
+    uploadfuse megakernel likewise clips inside its one-pass upload
+    pipeline (before it quantizes), so both kernels take over the delta
+    clip while the auxiliary entries stay clipped here."""
     dp_on = fed.dp_clip > 0.0
-    clip_delta_here = dp_on and not fed.use_pallas_clipacc
+    clip_delta_here = dp_on and not (fed.use_pallas_clipacc
+                                     or fed.use_pallas_uploadfuse)
     diag_on = fed.telemetry_diagnostics
 
     def local_phase(gparams, sstate, batches, lr_scale, client_id=None,
@@ -335,6 +339,31 @@ def make_round_fn(model, fed: FedConfig, specs, *,
     robust_kind, trim_frac = parse_robust_agg(fed.robust_agg)
     defense_on = robust_kind != "none"
     quorum_on = fed.min_quorum > 0
+    # fused one-pass upload (kernels/uploadfuse): the compressed wrapper
+    # ran in defer mode, so every upload carries the RAW delta (plus the
+    # client's current EF residual row) and the engine owns the whole
+    # fold -> DP clip -> quantize -> re-clip -> accumulate pipeline
+    fuse_on = fed.use_pallas_uploadfuse
+    if fuse_on:
+        from repro.comm.codecs import split_algorithm_name
+        from repro.comm.compress import _encode_key
+        from repro.comm.error_feedback import EF_KEY, ROUND_KEY
+        from repro.kernels.uploadfuse import tree_upload_fuse
+        _, _fuse_spec = split_algorithm_name(fed.algorithm)
+        fuse_bits = {"int8": 8, "int4": 4}.get(_fuse_spec or "", 0)
+
+        def fuse_uploads(delta_stack, ef_stack, weights, cids, rnd):
+            # int4 stochastic rounding draws the SAME per-(round, client)
+            # keys the unfused codec derives, so the fused trajectory
+            # reuses the unfused noise stream
+            keys = None
+            if fuse_bits == 4:
+                keys = jax.vmap(
+                    lambda c: _encode_key(rnd, c, None))(cids)
+            return tree_upload_fuse(
+                delta_stack, ef_stack, bits=fuse_bits,
+                clip=fed.dp_clip if dp_on else 0.0,
+                weights=weights, keys=keys)
 
     def _lr_scale(round_index):
         if cosine_total_rounds:
@@ -363,6 +392,34 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                         local_phase, in_axes=(None, None, 0, None, 0, 0),
                         out_axes=0)(gparams, sstate, batches, lr_scale,
                                     client_ids, step_mask)
+            if fuse_on:
+                # one fused pass over the stacked raw deltas: pull the
+                # delta stack (and the clients' current residual rows)
+                # out of the upload dict, run the megakernel, and hand
+                # ``commit`` the NEW residuals; the surviving entries
+                # (block-mean v, SCAFFOLD dc) aggregate below with the
+                # same effective weights the kernel folded in
+                with telemetry.span("trace/uploadfuse", "trace"):
+                    uploads = dict(uploads)
+                    delta_stack = uploads.pop("delta")
+                    ef_stack = uploads.pop(EF_KEY, None)
+                    s = jax.tree.leaves(delta_stack)[0].shape[0]
+                    base_w = (agg_w if agg_w is not None
+                              else jnp.full((s,), 1.0 / s, jnp.float32))
+                    if f_drop is not None:
+                        # dropped uploads never arrived: renormalize the
+                        # weights over the survivors so the fused
+                        # accumulate IS the masked mean
+                        wv = base_w * jnp.logical_not(f_drop).astype(
+                            jnp.float32)
+                        w_eff = wv / jnp.maximum(jnp.sum(wv), 1e-12)
+                    else:
+                        w_eff = base_w
+                    fused = fuse_uploads(
+                        delta_stack, ef_stack, w_eff, client_ids,
+                        sstate[ROUND_KEY] if fuse_bits == 4 else None)
+                    if fused.residual is not None:
+                        uploads[EF_KEY] = fused.residual
             if alg.commit is not None:
                 # write the sampled clients' per-client server state rows
                 # (control variates, EF residuals) before aggregation
@@ -386,7 +443,17 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                     # wire, not the client's local training)
                     uploads = apply_fault_mult(uploads, f_mult)
                 n_valid = None
-                if defense_on or f_drop is not None:
+                if fuse_on:
+                    # the kernel already produced the weighted delta
+                    # mean; the remaining entries take the same masked
+                    # weights so a dropped client vanishes from every
+                    # entry consistently
+                    if f_drop is not None:
+                        n_valid = jnp.sum(
+                            jnp.logical_not(f_drop).astype(jnp.float32))
+                    mean_up = dict(_weighted_mean(uploads, w_eff))
+                    mean_up["delta"] = fused.mean
+                elif defense_on or f_drop is not None:
                     # upload validator + masked/robust aggregation:
                     # dropped uploads never arrived (observable by ANY
                     # server), the finite/norm screens need the defense
@@ -463,7 +530,31 @@ def make_round_fn(model, fed: FedConfig, specs, *,
             # config validation)
             track_valid = defense_on or faults_on
 
-            def one_client(sst, per_client_batches, cid, step_valid):
+            def _fuse_one(sst, up, cid, w):
+                """Sequential fused upload: the same megakernel run on a
+                one-client (S=1) stack inside the scan body. The client's
+                aggregation weight folds into the kernel's accumulate, so
+                ``contrib`` must NOT weight the delta again; uniform runs
+                keep weight 1 and divide by n at the end like every other
+                entry."""
+                up = dict(up)
+                delta = up.pop("delta")
+                ef_row = up.pop(EF_KEY, None)
+                one = lambda t: jax.tree.map(lambda a: a[None], t)  # noqa: E731
+                wvec = jnp.reshape(jnp.asarray(
+                    1.0 if w is None else w, jnp.float32), (1,))
+                fused = fuse_uploads(
+                    one(delta), None if ef_row is None else one(ef_row),
+                    wvec, jnp.reshape(cid, (1,)),
+                    sst[ROUND_KEY] if fuse_bits == 4 else None)
+                up["delta"] = fused.mean
+                if fused.residual is not None:
+                    up[EF_KEY] = jax.tree.map(lambda a: a[0],
+                                              fused.residual)
+                return up
+
+            def one_client(sst, per_client_batches, cid, step_valid,
+                           w=None):
                 """One client's local phase + per-client state commit.
 
                 Distinct clients touch distinct table rows, so committing
@@ -476,6 +567,8 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                 else:
                     up, m = local_phase(gparams, sst, per_client_batches,
                                         lr_scale, cid, step_valid)
+                if fuse_on:
+                    up = _fuse_one(sst, up, cid, w)
                 if alg.commit is not None:
                     pre_commit_keys = set(up)
                     sst, up = alg.commit(sst, up, cid, specs, fed)
@@ -506,6 +599,12 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                 # accumulator rides along instead)
                 if not weighted:
                     return up
+                if fuse_on:
+                    # the fused kernel already folded w into the delta
+                    wmul = lambda u: (u * w).astype(u.dtype)  # noqa: E731
+                    return {k: (v if k == "delta"
+                                else jax.tree.map(wmul, v))
+                            for k, v in up.items()}
                 return jax.tree.map(lambda u: (u * w).astype(u.dtype), up)
 
             def scan_client(acc, xs):
@@ -514,7 +613,7 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                 else:
                     acc_up, acc_m, n, sst = acc
                 sst, up, m = one_client(sst, xs["b"], xs["cid"],
-                                        xs.get("sm"))
+                                        xs.get("sm"), xs.get("w"))
                 if f_mult is not None:
                     up = apply_fault_mult(up, xs["fm"], stacked=False)
                 if track_valid:
@@ -546,7 +645,8 @@ def make_round_fn(model, fed: FedConfig, specs, *,
             # build zero accumulators with the right structure via one
             # abstract evaluation (no FLOPs at runtime: jitted away)
             def _first_contrib(x):
-                _, up, m = one_client(sstate, x["b"], x["cid"], x.get("sm"))
+                _, up, m = one_client(sstate, x["b"], x["cid"], x.get("sm"),
+                                      x.get("w"))
                 return contrib(up, x.get("w")), m
 
             acc_shape = jax.eval_shape(_first_contrib,

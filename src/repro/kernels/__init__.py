@@ -12,8 +12,16 @@ per round over every parameter (DESIGN.md §5):
 ``clipacc``      fused per-client L2 clip + weighted accumulate over the
                  (S, model-size) upload stack for client-level DP
                  (repro.privacy)
+``uploadfuse``   one-pass upload megakernel: error-feedback fold +
+                 per-client DP clip + int8/int4 quantize-pack +
+                 decoded-norm re-clip + weighted accumulate over the
+                 stacked upload in a single read (subsumes clipacc +
+                 quantpack on the upload path; both layouts)
 
 Each kernel ships ``ops.py`` (jit'd wrapper) and ``ref.py`` (pure-jnp
-oracle); tests sweep shapes/dtypes with assert_allclose. Kernels target
-TPU (VMEM BlockSpec tiling) and validate under ``interpret=True`` on CPU.
+oracle); tests sweep shapes/dtypes with assert_allclose, and the
+property harness (tests/test_kernel_properties.py, docs/kernels.md)
+fuzzes every kernel against its oracle over generated shape/value
+corpora. Kernels target TPU (VMEM BlockSpec tiling) and validate under
+``interpret=True`` on CPU.
 """

@@ -1,0 +1,15 @@
+"""One-pass fused upload path: clip + error-feedback fold + int8/int4
+quantize-pack + weighted accumulate over the stacked (S, ...) upload in
+a single Pallas kernel (``FedConfig.use_pallas_uploadfuse``)."""
+from .ops import (UploadFuseResult, force_impl, tree_upload_fuse,
+                  wire_payloads)
+from .ref import upload_fuse_ref, upload_fuse_semantic
+from .uploadfuse import (BLOCK_ROWS, LANES, NORM_FLOOR, SCALE_FLOOR,
+                         upload_fuse_3d)
+
+__all__ = [
+    "BLOCK_ROWS", "LANES", "NORM_FLOOR", "SCALE_FLOOR",
+    "UploadFuseResult", "force_impl", "tree_upload_fuse",
+    "upload_fuse_3d", "upload_fuse_ref", "upload_fuse_semantic",
+    "wire_payloads",
+]

@@ -1,0 +1,177 @@
+"""Tree-level wrapper for the fused upload megakernel.
+
+``tree_upload_fuse`` takes the stacked ``(S, ...)`` raw-delta pytree
+(plus optional error-feedback stack and per-client PRNG keys), lays the
+leaves out as one ``(S, R, LANES)`` block — each leaf padded to a whole
+number of row-block tiles so no tile spans a leaf boundary — and runs
+the one-pass clip / fold / quantize / accumulate kernel over it.
+
+The zero padding is invariant-safe by construction: pads contribute 0 to
+the squared norms, 0 to the absmax, quantize to code 0 (int4: code 8,
+the same zero code ``pack_nibbles`` pads odd tails with) and add 0 to
+the accumulate.
+
+Stochastic-rounding noise for int4 reproduces the jnp codec bit stream
+exactly: per (client, leaf), ``uniform(fold_in(client_key, leaf_index),
+(leaf_size,))`` — the same per-leaf fold ``leafwise_codec`` applies, and
+Threefry draws are row-major so the flat draw equals the leaf-shaped
+draw of the unfused path.
+
+``force_impl("ref")`` reroutes every call (including the engine's) to
+the bit-exact chained oracle — the composition parity tests run whole
+training trajectories under both implementations and compare bytes.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ref import upload_fuse_ref
+from .uploadfuse import BLOCK_ROWS, LANES, upload_fuse_3d
+
+_IMPL = "kernel"
+
+
+@contextlib.contextmanager
+def force_impl(impl: str):
+    """Reroute tree_upload_fuse to ``impl`` ("kernel" | "ref") within
+    the context (test hook for engine-level bit-parity runs)."""
+    assert impl in ("kernel", "ref"), impl
+    global _IMPL
+    prev, _IMPL = _IMPL, impl
+    try:
+        yield
+    finally:
+        _IMPL = prev
+
+
+class UploadFuseResult(NamedTuple):
+    mean: Any                       # weighted-accumulated delta tree
+    residual: Optional[Any]         # (S, ...) new error-feedback stack
+    clip_factors: jax.Array         # (S,) DP clip factor (1.0 when off)
+    reclip_factors: jax.Array       # (S,) decoded-norm re-clip factor
+    scales: Optional[jax.Array]     # (S, n_leaves) quantization scales
+    codes: Optional[jax.Array]      # raw (S, R, LANES[/2]) wire codes
+
+
+def _layout(leaves):
+    sizes = [int(np.prod(leaf.shape[1:])) for leaf in leaves]
+    rows = []
+    for sz in sizes:
+        nr = -(-sz // LANES)
+        rows.append(max(-(-nr // BLOCK_ROWS) * BLOCK_ROWS, BLOCK_ROWS))
+    return sizes, rows
+
+
+def _stack3d(leaves, sizes, rows, s_n):
+    blocks = []
+    for leaf, sz, nr in zip(leaves, sizes, rows):
+        flat = leaf.reshape(s_n, -1).astype(jnp.float32)
+        pad = nr * LANES - sz
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        blocks.append(flat.reshape(s_n, nr, LANES))
+    return jnp.concatenate(blocks, axis=1)
+
+
+def tree_upload_fuse(stacked, ef_stacked=None, *, bits: int, clip,
+                     weights: jax.Array, keys: Optional[jax.Array] = None,
+                     interpret: bool = True,
+                     impl: Optional[str] = None) -> UploadFuseResult:
+    """Fused upload over a stacked ``(S, ...)`` delta pytree.
+
+    bits: 0 (no codec) | 8 | 4; clip: static Python float L2 bound
+    (<= 0 disables the DP clip stages); weights: (S,) f32 final
+    accumulation coefficients (aggregation weights x validity masks,
+    already renormalized); keys: (S, ...) stacked PRNG keys, required
+    for ``bits == 4`` (stochastic rounding).
+    """
+    impl = impl or _IMPL
+    clip = float(clip) if clip is not None else 0.0
+    dp = clip > 0.0
+    ef = ef_stacked is not None
+    if bits not in (0, 4, 8):
+        raise ValueError(f"uploadfuse: unsupported bit width {bits}")
+    if bits == 4 and keys is None:
+        raise ValueError("uploadfuse: int4 stochastic rounding needs "
+                         "per-client keys")
+
+    leaves, treedef = jax.tree.flatten(stacked)
+    s_n = leaves[0].shape[0]
+    sizes, rows = _layout(leaves)
+    n_leaves = len(leaves)
+    x3 = _stack3d(leaves, sizes, rows, s_n)
+    ef_leaves = None
+    e3 = None
+    if ef:
+        ef_leaves = jax.tree.leaves(ef_stacked)
+        assert len(ef_leaves) == n_leaves
+        e3 = _stack3d(ef_leaves, sizes, rows, s_n)
+    u3 = None
+    if bits == 4:
+        ublocks = []
+        for i, (sz, nr) in enumerate(zip(sizes, rows)):
+            ui = jax.vmap(lambda k, i=i, sz=sz: jax.random.uniform(
+                jax.random.fold_in(k, i), (sz,), jnp.float32))(keys)
+            pad = nr * LANES - sz
+            if pad:
+                ui = jnp.pad(ui, ((0, 0), (0, pad)))
+            ublocks.append(ui.reshape(s_n, nr, LANES))
+        u3 = jnp.concatenate(ublocks, axis=1)
+    seg = np.repeat(np.arange(n_leaves, dtype=np.int32),
+                    [nr // BLOCK_ROWS for nr in rows])
+
+    kw = dict(bits=bits, dp=dp, ef=ef, n_leaves=n_leaves)
+    if impl == "kernel":
+        acc, stats, codes, res = upload_fuse_3d(
+            x3, e3, u3, weights, clip, seg, interpret=interpret, **kw)
+    else:
+        acc, stats, codes, res = upload_fuse_ref(
+            x3, e3, u3, weights, clip, seg, **kw)
+
+    mean_leaves, row0 = [], 0
+    for leaf, sz, nr in zip(leaves, sizes, rows):
+        flat = acc[row0:row0 + nr].reshape(-1)[:sz]
+        mean_leaves.append(flat.reshape(leaf.shape[1:]).astype(leaf.dtype))
+        row0 += nr
+    mean = jax.tree.unflatten(treedef, mean_leaves)
+
+    residual = None
+    if ef:
+        res_leaves, row0 = [], 0
+        for leaf, sz, nr in zip(ef_leaves, sizes, rows):
+            flat = res[:, row0:row0 + nr].reshape(s_n, -1)[:, :sz]
+            res_leaves.append(flat.reshape(leaf.shape).astype(leaf.dtype))
+            row0 += nr
+        residual = jax.tree.unflatten(treedef, res_leaves)
+
+    return UploadFuseResult(
+        mean=mean, residual=residual, clip_factors=stats[:, 0],
+        reclip_factors=stats[:, 1],
+        scales=stats[:, 2:] if bits else None, codes=codes)
+
+
+def wire_payloads(stacked, result: UploadFuseResult, *, bits: int
+                  ) -> List[List[dict]]:
+    """Slice the kernel's raw code block into per-client, per-leaf wire
+    payloads ({"q", "scale"}) matching the jnp codec format — int8 codes
+    flat per leaf, int4 packed low-nibble-first with the odd-tail zero
+    code. Used by the wire-parity tests and byte accounting checks."""
+    assert bits in (4, 8) and result.codes is not None
+    leaves, _ = jax.tree.flatten(stacked)
+    s_n = leaves[0].shape[0]
+    sizes, rows = _layout(leaves)
+    out = []
+    for s in range(s_n):
+        per_leaf, row0 = [], 0
+        for i, (sz, nr) in enumerate(zip(sizes, rows)):
+            flat = result.codes[s, row0:row0 + nr].reshape(-1)
+            n = sz if bits == 8 else (sz + 1) // 2
+            per_leaf.append({"q": flat[:n], "scale": result.scales[s, i]})
+            row0 += nr
+        out.append(per_leaf)
+    return out

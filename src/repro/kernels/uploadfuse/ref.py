@@ -1,0 +1,187 @@
+"""Reference implementations for the fused upload megakernel.
+
+Two oracles with different jobs:
+
+* :func:`upload_fuse_ref` — the parity oracle. It replays the kernel's
+  exact operation sequence (per-tile chained f32 sum-of-squares, the
+  same quantize/decode formulas, one cross-client reduction per output
+  tile) with plain jnp ops, so the Pallas kernel must match it
+  BIT-EXACTLY. Tests compare raw bytes against this.
+* :func:`upload_fuse_semantic` — the costing oracle. The same pipeline
+  written the natural unfused way (whole-array clip, per-leaf quantize,
+  decoded copy materialized, re-clip, weighted mean), i.e. the
+  multi-stage program XLA sees without the fusion. The roofline report
+  costs this one, and tests check it agrees with the kernel to float
+  tolerance (it sums in a different order, so bit-equality is not
+  expected).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .uploadfuse import (BLOCK_ROWS, INV_QMAX4, INV_QMAX8, LANES,
+                         NORM_FLOOR, SCALE_FLOOR, n_phases_for)
+
+
+def upload_fuse_ref(x: jax.Array, e: Optional[jax.Array],
+                    u: Optional[jax.Array], w: jax.Array, clip, seg,
+                    *, bits: int, dp: bool, ef: bool, n_leaves: int
+                    ) -> Tuple[jax.Array, jax.Array,
+                               Optional[jax.Array], Optional[jax.Array]]:
+    """Bit-exact oracle for ``upload_fuse_3d`` (same signature minus
+    ``interpret``); ``seg`` must be a host-side int sequence."""
+    x = x.astype(jnp.float32)
+    s_n, r, c = x.shape
+    assert c == LANES and r % BLOCK_ROWS == 0, (s_n, r, c)
+    n_blocks = r // BLOCK_ROWS
+    seg = [int(s) for s in np.asarray(seg)]
+    assert len(seg) == n_blocks, (len(seg), n_blocks)
+    clip = jnp.asarray(clip, jnp.float32)
+    w = w.astype(jnp.float32)
+    tgt = x + e.astype(jnp.float32) if ef else x
+    inv_qmax = INV_QMAX8 if bits == 8 else INV_QMAX4
+
+    def tile(a, i):
+        return a[:, i * BLOCK_ROWS:(i + 1) * BLOCK_ROWS, :]
+
+    # pin mirrors the kernel: bounce each product through the int32
+    # domain (plus a runtime-opaque zero derived from the tile's first
+    # raw element, exactly as the kernel does, so the simplifier cannot
+    # cancel the bitcast pair) to force its rounded f32 value. Without
+    # it XLA contracts a product feeding an add/subtract into an FMA in
+    # one program but not the other — the contraction choice is
+    # contextual, so it must be foreclosed on BOTH sides, including the
+    # products feeding the norm and accumulate reductions.
+    def tile_pin(i):
+        v0 = tile(x, i)[0, 0, 0]
+        pz = (v0 != v0).astype(jnp.int32)
+
+        def pin(v):
+            b = jax.lax.bitcast_convert_type(v, jnp.int32) + pz
+            return jax.lax.bitcast_convert_type(b, jnp.float32)
+
+        return pin
+
+    # phase 0: chained per-tile stats, in tile order (f32 sums are
+    # order-sensitive; the kernel walks tiles sequentially)
+    sumsq = jnp.zeros((s_n,), jnp.float32)
+    absmax = jnp.zeros((s_n, n_leaves), jnp.float32)
+    for i in range(n_blocks):
+        t = tile(tgt, i)
+        pin = tile_pin(i)
+        if dp:
+            sumsq = sumsq + jnp.sum(pin(t * t), axis=(1, 2))
+        if bits:
+            am = jnp.max(jnp.abs(t), axis=(1, 2))
+            absmax = absmax.at[:, seg[i]].set(
+                jnp.maximum(absmax[:, seg[i]], am))
+
+    if dp:
+        cf = jnp.minimum(1.0, clip / jnp.maximum(jnp.sqrt(sumsq),
+                                                 NORM_FLOOR))
+    else:
+        cf = jnp.ones((s_n,), jnp.float32)
+    if bits:
+        scales = jnp.maximum(cf[:, None] * absmax, SCALE_FLOOR) * inv_qmax
+    else:
+        scales = jnp.zeros((s_n, n_leaves), jnp.float32)
+
+    def decode_tile(i):
+        t = tile(tgt, i)
+        pin = tile_pin(i)
+        ctgt = pin(cf[:, None, None] * t) if dp else t
+        if not bits:
+            return None, ctgt, ctgt
+        sc = scales[:, seg[i]][:, None, None]
+        if bits == 8:
+            q = jnp.clip(jnp.round(ctgt / sc), -127.0, 127.0)
+        else:
+            q = jnp.clip(jnp.floor(ctgt / sc + tile(u, i)), -8.0, 7.0)
+        return q, ctgt, pin(q * sc)
+
+    # phase 1 stats (dp + codec only): chained decoded sum-of-squares
+    n_phases = n_phases_for(bits, dp)
+    if n_phases == 3:
+        dsq = jnp.zeros((s_n,), jnp.float32)
+        for i in range(n_blocks):
+            _, _, dec = decode_tile(i)
+            dsq = dsq + jnp.sum(tile_pin(i)(dec * dec), axis=(1, 2))
+        rf = jnp.minimum(1.0, clip / jnp.maximum(jnp.sqrt(dsq),
+                                                 NORM_FLOOR))
+    else:
+        rf = jnp.ones((s_n,), jnp.float32)
+
+    # final phase: codes / accumulate / residual, one reduction per tile
+    acc_tiles, code_tiles, res_tiles = [], [], []
+    for i in range(n_blocks):
+        q, ctgt, dec = decode_tile(i)
+        pin = tile_pin(i)
+        if n_phases == 3:
+            final = pin(rf[:, None, None] * dec)
+        else:
+            final = dec
+        acc_tiles.append(jnp.sum(pin(w[:, None, None] * final), axis=0))
+        if ef:
+            res_tiles.append(ctgt - final)
+        if bits == 8:
+            code_tiles.append(q.astype(jnp.int8))
+        elif bits == 4:
+            c8 = (q + 8.0).astype(jnp.uint8)
+            pairs = c8.reshape(s_n, BLOCK_ROWS, -1, 2)
+            code_tiles.append(pairs[..., 0] | (pairs[..., 1] << 4))
+
+    acc = jnp.concatenate(acc_tiles, axis=0)
+    codes = jnp.concatenate(code_tiles, axis=1) if bits else None
+    res = jnp.concatenate(res_tiles, axis=1) if ef else None
+    stats = jnp.concatenate([cf[:, None], rf[:, None], scales], axis=1)
+    return acc, stats, codes, res
+
+
+def upload_fuse_semantic(x: jax.Array, e: Optional[jax.Array],
+                         u: Optional[jax.Array], w: jax.Array, clip, seg,
+                         *, bits: int, dp: bool, ef: bool, n_leaves: int
+                         ) -> jax.Array:
+    """The unfused multi-stage pipeline (what the engine runs without the
+    kernel): fold, whole-stack clip, per-leaf quantize + decoded copy,
+    re-clip, weighted accumulate. Returns the accumulated mean only —
+    this is the program the roofline costs against the fused kernel.
+    """
+    x = x.astype(jnp.float32)
+    s_n, r, c = x.shape
+    seg = np.asarray(seg)
+    clip = jnp.asarray(clip, jnp.float32)
+    tgt = x + e.astype(jnp.float32) if ef else x
+
+    def clip_stack(a):
+        if not dp:
+            return a
+        norm = jnp.sqrt(jnp.sum(a * a, axis=(1, 2)))
+        f = jnp.minimum(1.0, clip / jnp.maximum(norm, NORM_FLOOR))
+        return f[:, None, None] * a
+
+    ctgt = clip_stack(tgt)
+    if bits:
+        inv_qmax = INV_QMAX8 if bits == 8 else INV_QMAX4
+        parts = []
+        for leaf in range(n_leaves):
+            rows = np.nonzero(np.repeat(seg, BLOCK_ROWS) == leaf)[0]
+            lo, hi = int(rows[0]), int(rows[-1]) + 1
+            sl = ctgt[:, lo:hi, :]
+            scale = jnp.maximum(jnp.max(jnp.abs(sl), axis=(1, 2)),
+                                SCALE_FLOOR) * inv_qmax
+            sc = scale[:, None, None]
+            if bits == 8:
+                q = jnp.clip(jnp.round(sl / sc), -127.0, 127.0)
+            else:
+                q = jnp.clip(jnp.floor(sl / sc + u[:, lo:hi, :]),
+                             -8.0, 7.0)
+            parts.append(q * sc)             # materialized decoded copy
+        dec = jnp.concatenate(parts, axis=1)
+        final = clip_stack(dec) if dp else dec
+    else:
+        final = ctgt
+    return jnp.sum(w.astype(jnp.float32)[:, None, None] * final, axis=0)

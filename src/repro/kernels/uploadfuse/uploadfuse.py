@@ -1,0 +1,315 @@
+"""Pallas TPU megakernel: one-pass fused upload path for federated rounds.
+
+The upload hot path of a DP + compressed round crosses, per client s and
+round (paper Algorithm 2's aggregate step; DP-FedAdamW composes the clip
+into the same pipeline):
+
+    target_s  = delta_s + ef_s                       (error-feedback fold)
+    ctgt_s    = min(1, C/||target_s||) * target_s    (per-client DP clip)
+    q_s       = quantize(ctgt_s / scale_{s,l})       (per-leaf int8/int4)
+    dec_s     = q_s * scale_{s,l}                    (what the wire carries)
+    dec_s     = min(1, C/||dec_s||) * dec_s          (DP re-clip of decoded)
+    ef'_s     = ctgt_s - dec_s                       (residual commit)
+    out       = sum_s w_s * dec_s                    (weighted accumulate)
+
+Unfused that is three separate Pallas kernels (clipacc, quantpack) plus
+XLA reductions, each re-reading the full (S, model-size) upload stack and
+materializing the decoded f32 copy (PR 6's roofline measured bytes_ratio
+55x for clipacc + 3.4x for quantpack against the analytic minimum). This
+kernel runs the whole pipeline in ONE pallas_call with a multi-phase
+sequential grid — the clipacc accumulator idiom widened to a per-client
+stats row — so the stack is read at most three times and the decoded
+copy never exists in HBM:
+
+* phase 0 walks the row-block tiles accumulating, per client, the
+  squared L2 norm of the fold target (for the clip factor) AND the
+  per-(client, leaf) absmax (for the quantization scales) into one
+  SMEM-resident ``(S, n_leaves + 2)`` stats block — a single read
+  produces both because ``absmax(f * x) == f * absmax(x)`` bit-exactly
+  for the nonnegative clip factor f;
+* phase 1 derives the clip factor and per-leaf scales from the stats
+  block, quantizes, writes the packed wire codes, and — when the DP
+  re-clip is needed (dp AND a lossy codec) — accumulates the decoded
+  squared norm into the stats block; otherwise it is the final phase and
+  writes the weighted accumulate + the new error-feedback residual;
+* phase 2 (dp + codec only) recomputes the quantization deterministically
+  (same ops, same operands — bit-identical), applies the decoded-norm
+  re-clip factor, and writes the accumulate + residual.
+
+Leaf boundaries are static: every row-block tile belongs to exactly one
+leaf (the ``ops.py`` wrapper pads each leaf to a tile multiple), and the
+tile's leaf index rides in as a tiny SMEM ``seg`` operand, so per-leaf
+scale selection is a where-mask over the stats columns — no gathers.
+
+After the last tile of the last phase the stats output holds, per
+client: column 0 the clip factor, column 1 the re-clip factor (1.0 when
+unused), columns 2+ the final per-leaf scales — the wire payload's scale
+row and the diagnostics clipped-fraction in one block.
+
+Tiles are (S, BLOCK_ROWS, LANES) with BLOCK_ROWS = 8 (one f32 sublane
+group — the fine granularity keeps per-leaf padding small), VMEM ~32 KiB
+x S per operand.
+
+Bit-exactness vs ``ref.py``: the oracle replicates the kernel's exact
+operation sequence — per-tile chained sum-of-squares (f32 sums are
+order-sensitive), order-invariant maxes, identical quantize/decode
+formulas and the same single cross-client reduction per output tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+import numpy as np
+
+LANES = 1024          # last-dim tile (multiple of 128)
+BLOCK_ROWS = 8        # rows per grid step (f32 sublane group)
+NORM_FLOOR = 1e-12    # guards all-zero client updates (repro.privacy)
+SCALE_FLOOR = 1e-12   # guards all-zero leaves (repro.comm.codecs)
+# f32-rounded reciprocals: a single multiply is bit-deterministic across
+# the jnp codec and kernel paths (the quantpack convention)
+INV_QMAX8 = float(np.float32(1.0 / 127.0))
+INV_QMAX4 = float(np.float32(1.0 / 7.0))
+
+
+def n_phases_for(bits: int, dp: bool) -> int:
+    """3 when the decoded-norm re-clip is needed (dp + lossy codec),
+    else 2 (stats pass + compute pass)."""
+    return 3 if (dp and bits) else 2
+
+
+# NOTE: every pl.program_id call is hoisted to the top of the kernel
+# body — calling it inside a pl.when branch breaks interpret mode (the
+# cond branch is lowered outside the grid axis environment).
+
+def _kernel(clip_ref, w_ref, seg_ref, x_ref, *refs, n_row_blocks: int,
+            n_leaves: int, bits: int, dp: bool, ef: bool):
+    n_phases = n_phases_for(bits, dp)
+    phase = pl.program_id(0)
+    blk = pl.program_id(1)
+    is_first = (phase == 0) & (blk == 0)
+    is_last = (phase == n_phases - 1) & (blk == n_row_blocks - 1)
+
+    refs = list(refs)
+    e_ref = refs.pop(0) if ef else None
+    u_ref = refs.pop(0) if bits == 4 else None
+    acc_ref = refs.pop(0)
+    stats_ref = refs.pop(0)
+    codes_ref = refs.pop(0) if bits else None
+    res_ref = refs.pop(0) if ef else None
+
+    clip = clip_ref[0]
+    leaf = seg_ref[blk]
+    w = w_ref[...]                     # (S,)
+    x = x_ref[...]                     # (S, BLOCK_ROWS, LANES)
+    s_n = x.shape[0]
+    tgt = x + e_ref[...] if ef else x
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s_n, n_leaves + 2), 1)
+    leaf_col = cols == leaf + 2
+    inv_qmax = INV_QMAX8 if bits == 8 else INV_QMAX4
+
+    def clip_factor(stats):
+        if not dp:
+            return jnp.ones((s_n,), jnp.float32)
+        norm = jnp.sqrt(stats[:, 0])
+        return jnp.minimum(1.0, clip / jnp.maximum(norm, NORM_FLOOR))
+
+    # pin(v): force v to its ROUNDED f32 value by bouncing it through
+    # the integer domain with a runtime-opaque zero added, so the
+    # simplifier cannot cancel the bitcast pair. Without this, XLA:CPU
+    # freely contracts a product feeding an add/subtract into an FMA —
+    # differently in the kernel and ref.py programs — breaking
+    # bit-parity. Neither lax.optimization_barrier nor an opaque select
+    # stops that contraction; the integer bounce does, deterministically,
+    # because FMA formation cannot cross the int32 domain. The zero must
+    # come from the DATA: clip/weights reach the engine trace as
+    # compile-time constants, where (clip < 0) would fold and the pin
+    # with it. (v != v) is 0 for every non-NaN input and unprovable for
+    # a runtime tensor; a NaN input perturbs pinned values by one ulp —
+    # identically on both sides, so parity holds even then.
+    v0 = x[0, 0, 0]
+    pin_zero = (v0 != v0).astype(jnp.int32)
+
+    def pin(v):
+        b = jax.lax.bitcast_convert_type(v, jnp.int32) + pin_zero
+        return jax.lax.bitcast_convert_type(b, jnp.float32)
+
+    def decode(stats):
+        """-> (cf, scale, q, ctgt, dec) for THIS tile; called with
+        identical operands in phases 1 and 2, so the recompute is
+        bit-identical to the first pass."""
+        cf = clip_factor(stats)
+        ctgt = pin(cf[:, None, None] * tgt) if dp else tgt
+        if not bits:
+            return cf, None, None, ctgt, ctgt
+        absmax = jnp.max(jnp.where(leaf_col, stats, 0.0), axis=1)  # (S,)
+        scale = jnp.maximum(cf * absmax, SCALE_FLOOR) * inv_qmax
+        sc = scale[:, None, None]
+        if bits == 8:
+            q = jnp.clip(jnp.round(ctgt / sc), -127.0, 127.0)
+        else:
+            q = jnp.clip(jnp.floor(ctgt / sc + u_ref[...]), -8.0, 7.0)
+        return cf, scale, q, ctgt, pin(q * sc)
+
+    def write_codes(q):
+        if bits == 8:
+            codes_ref[...] = q.astype(jnp.int8)
+        else:
+            c8 = (q + 8.0).astype(jnp.uint8)
+            # consecutive lane pairs -> one byte, low nibble first
+            # (matches repro.comm.codecs.pack_nibbles on the flat leaf)
+            pairs = c8.reshape(s_n, c8.shape[1], -1, 2)
+            codes_ref[...] = pairs[..., 0] | (pairs[..., 1] << 4)
+
+    def final_stats(stats, cf, rf):
+        if bits:
+            scales = jnp.maximum(cf[:, None] * stats[:, 2:],
+                                 SCALE_FLOOR) * inv_qmax
+        else:
+            scales = stats[:, 2:]
+        return jnp.concatenate([cf[:, None], rf[:, None], scales], axis=1)
+
+    @pl.when(is_first)
+    def _init():
+        stats_ref[...] = jnp.zeros_like(stats_ref)
+
+    @pl.when(phase == 0)
+    def _phase0():
+        upd = stats_ref[...]
+        if dp:
+            ssq = jnp.sum(pin(tgt * tgt), axis=(1, 2))       # (S,)
+            upd = upd + jnp.where(cols == 0, ssq[:, None], 0.0)
+        if bits:
+            am = jnp.max(jnp.abs(tgt), axis=(1, 2))          # (S,)
+            upd = jnp.where(leaf_col, jnp.maximum(upd, am[:, None]), upd)
+        stats_ref[...] = upd
+        # outputs must be written every visit; later phases overwrite
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if bits:
+            codes_ref[...] = jnp.zeros_like(codes_ref)
+        if ef:
+            res_ref[...] = jnp.zeros_like(res_ref)
+
+    @pl.when(phase == 1)
+    def _phase1():
+        stats = stats_ref[...]
+        cf, scale, q, ctgt, dec = decode(stats)
+        if bits:
+            write_codes(q)
+        if n_phases == 3:
+            # intermediate: the re-clip needs ||dec|| over the whole
+            # stack before any output can be finalized
+            dsq = jnp.sum(pin(dec * dec), axis=(1, 2))
+            stats_ref[...] = stats + jnp.where(cols == 1, dsq[:, None], 0.0)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            if ef:
+                res_ref[...] = jnp.zeros_like(res_ref)
+        else:
+            acc_ref[...] = jnp.sum(pin(w[:, None, None] * dec), axis=0)
+            if ef:
+                res_ref[...] = ctgt - dec
+
+            @pl.when(is_last)
+            def _store():
+                stats_ref[...] = final_stats(stats, cf,
+                                             jnp.ones((s_n,), jnp.float32))
+
+    if n_phases_for(bits, dp) == 3:
+        @pl.when(phase == 2)
+        def _phase2():
+            stats = stats_ref[...]
+            cf, scale, q, ctgt, dec = decode(stats)
+            dnorm = jnp.sqrt(stats[:, 1])
+            rf = jnp.minimum(1.0, clip / jnp.maximum(dnorm, NORM_FLOOR))
+            final = pin(rf[:, None, None] * dec)
+            acc_ref[...] = jnp.sum(pin(w[:, None, None] * final), axis=0)
+            write_codes(q)                     # identical recompute
+            if ef:
+                res_ref[...] = ctgt - final
+
+            @pl.when(is_last)
+            def _store():
+                stats_ref[...] = final_stats(stats, cf, rf)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "dp", "ef", "n_leaves",
+                                    "interpret"))
+def upload_fuse_3d(x: jax.Array, e: Optional[jax.Array],
+                   u: Optional[jax.Array], w: jax.Array, clip, seg,
+                   *, bits: int, dp: bool, ef: bool, n_leaves: int,
+                   interpret: bool = True
+                   ) -> Tuple[jax.Array, jax.Array,
+                              Optional[jax.Array], Optional[jax.Array]]:
+    """x: (S, R, LANES) f32 stacked raw deltas (per-leaf tile-padded, R %
+    BLOCK_ROWS == 0); e: matching error-feedback residual stack (``ef``)
+    or None; u: matching U[0,1) rounding noise (``bits == 4``) or None;
+    w: (S,) f32 final accumulation coefficients (validity and aggregation
+    weights pre-folded); clip: scalar f32 L2 bound (read iff ``dp``);
+    seg: (R // BLOCK_ROWS,) int32 leaf index per row block.
+
+    Returns ``(acc (R, LANES) f32, stats (S, n_leaves + 2) f32,
+    codes | None, residual | None)`` where ``acc = sum_s w[s] *
+    decoded[s]``, stats columns are (clip factor, re-clip factor,
+    per-leaf scales), codes is (S, R, LANES) int8 or (S, R, LANES // 2)
+    packed uint8, and residual is the (S, R, LANES) f32 new
+    error-feedback stack.
+    """
+    s_n, r, c = x.shape
+    assert c == LANES and r % BLOCK_ROWS == 0, (s_n, r, c)
+    assert w.shape == (s_n,), (w.shape, s_n)
+    assert bits in (0, 4, 8), bits
+    n_blocks = r // BLOCK_ROWS
+    grid = (n_phases_for(bits, dp), n_blocks)
+    stack_spec = pl.BlockSpec((s_n, BLOCK_ROWS, LANES),
+                              lambda p, i: (0, i, 0))
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),      # clip scalar
+        pl.BlockSpec(memory_space=pltpu.SMEM),      # weights (S,)
+        pl.BlockSpec(memory_space=pltpu.SMEM),      # seg (n_blocks,)
+        stack_spec,                                 # x
+    ]
+    operands = [jnp.asarray(clip, jnp.float32).reshape(1),
+                w.astype(jnp.float32),
+                jnp.asarray(seg, jnp.int32),
+                x.astype(jnp.float32)]
+    if ef:
+        in_specs.append(stack_spec)
+        operands.append(e.astype(jnp.float32))
+    if bits == 4:
+        in_specs.append(stack_spec)
+        operands.append(u.astype(jnp.float32))
+    out_specs = [
+        pl.BlockSpec((BLOCK_ROWS, LANES), lambda p, i: (i, 0)),
+        pl.BlockSpec((s_n, n_leaves + 2), lambda p, i: (0, 0),
+                     memory_space=pltpu.SMEM),
+    ]
+    out_shape = [jax.ShapeDtypeStruct((r, c), jnp.float32),
+                 jax.ShapeDtypeStruct((s_n, n_leaves + 2), jnp.float32)]
+    if bits == 8:
+        out_specs.append(pl.BlockSpec((s_n, BLOCK_ROWS, LANES),
+                                      lambda p, i: (0, i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((s_n, r, c), jnp.int8))
+    elif bits == 4:
+        out_specs.append(pl.BlockSpec((s_n, BLOCK_ROWS, LANES // 2),
+                                      lambda p, i: (0, i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((s_n, r, c // 2), jnp.uint8))
+    if ef:
+        out_specs.append(stack_spec)
+        out_shape.append(jax.ShapeDtypeStruct((s_n, r, c), jnp.float32))
+    outs = pl.pallas_call(
+        functools.partial(_kernel, n_row_blocks=n_blocks,
+                          n_leaves=n_leaves, bits=bits, dp=dp, ef=ef),
+        grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(*operands)
+    outs = list(outs)
+    acc, stats = outs.pop(0), outs.pop(0)
+    codes = outs.pop(0) if bits else None
+    res = outs.pop(0) if ef else None
+    return acc, stats, codes, res

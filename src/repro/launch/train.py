@@ -169,6 +169,7 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                  target_epsilon: float = 0.0, dp_delta: float = 1e-5,
                  dp_seed: Optional[int] = None,
                  use_pallas_clipacc: bool = False,
+                 use_pallas_uploadfuse: bool = False,
                  ckpt_dir: str = "", ckpt_every: int = 0,
                  resume: bool = False,
                  fault_drop: float = 0.0, fault_nan: float = 0.0,
@@ -206,6 +207,7 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         target_epsilon=target_epsilon, dp_delta=dp_delta,
         dp_seed=seed if dp_seed is None else dp_seed,
         use_pallas_clipacc=use_pallas_clipacc,
+        use_pallas_uploadfuse=use_pallas_uploadfuse,
         fault_drop=fault_drop, fault_nan=fault_nan,
         fault_scale=fault_scale, fault_scale_factor=fault_scale_factor,
         fault_seed=seed if fault_seed is None else fault_seed,
@@ -605,6 +607,12 @@ def main() -> None:
                     help="route the DP clip + aggregation of the delta "
                          "entry through the fused clip-accumulate kernel "
                          "(client_parallel, codec-free)")
+    ap.add_argument("--pallas-uploadfuse", action="store_true",
+                    help="route the whole upload path — error-feedback "
+                         "fold, DP clip, int8/int4 quantize, decoded "
+                         "re-clip, weighted accumulate — through the "
+                         "one-pass fused upload kernel (both layouts; "
+                         "composes DP with the upload codecs)")
     ap.add_argument("--ckpt-dir", default="",
                     help="checkpoint directory (empty = no checkpoints)")
     ap.add_argument("--ckpt-every", type=int, default=0,
@@ -677,6 +685,7 @@ def main() -> None:
         dp_noise_multiplier=args.dp_noise_multiplier,
         target_epsilon=args.target_epsilon, dp_delta=args.dp_delta,
         dp_seed=args.dp_seed, use_pallas_clipacc=args.pallas_clipacc,
+        use_pallas_uploadfuse=args.pallas_uploadfuse,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         resume=args.resume,
         fault_drop=args.fault_drop, fault_nan=args.fault_nan,

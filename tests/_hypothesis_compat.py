@@ -3,30 +3,101 @@
 Tier-1 must run green on a bare interpreter (the CI image installs only
 jax + numpy + pytest). When ``hypothesis`` is importable the real
 ``given``/``settings``/``strategies`` are re-exported unchanged; when it
-is not, ``given`` expands each strategy into a small deterministic sample
-set and runs the test body over an evenly-spaced slice of their cartesian
+is not, ``given`` expands each strategy into a deterministic sample set
+and runs the test body over an evenly-spaced slice of their cartesian
 product — the same assertions, a fixed handful of examples.
+
+The kernel fuzz harness (tests/test_kernel_properties.py) layers two
+extensions on top, available in BOTH modes:
+
+* ``KERNEL_FUZZ_EXAMPLES=<n>`` env var raises the per-test example count
+  (the CI kernel-fuzz job runs the seeded 200-case corpus this way).
+  In fallback mode, counts beyond the cartesian product are drawn from a
+  seeded RNG over each strategy's domain, so the corpus stays
+  deterministic and shrinkable-by-seed.
+* :func:`adversarial_array` — the shared value-kind generator for
+  kernel inputs: dense normals, exact zeros, subnormals, huge norms,
+  near-underflow tinies and mixed outliers, all seeded.
 """
 from __future__ import annotations
 
-__all__ = ["given", "settings", "st"]
+import os
+
+import numpy as np
+
+__all__ = ["VALUE_KINDS", "adversarial_array", "given", "settings", "st"]
+
+#: adversarial value families for kernel-input fuzzing
+VALUE_KINDS = ("normal", "zeros", "subnormal", "huge", "tiny", "mixed")
+
+
+def adversarial_array(kind: str, shape, seed: int) -> np.ndarray:
+    """Deterministic f32 test tensor of the given adversarial family.
+
+    ``subnormal`` values sit below the f32 normal range (~1.18e-38), so
+    squared norms flush to zero and exercise the NORM_FLOOR / SCALE_FLOOR
+    guards; ``huge`` drives clip factors toward 0 and quantization scales
+    toward overflow; ``mixed`` plants sparse outliers in a normal field
+    (the absmax is decided by a handful of entries)."""
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal(shape)
+    if kind == "normal":
+        out = base
+    elif kind == "zeros":
+        out = np.zeros(shape)
+    elif kind == "subnormal":
+        out = base * 1e-41
+    elif kind == "huge":
+        out = base * 1e30
+    elif kind == "tiny":
+        out = base * 1e-30
+    elif kind == "mixed":
+        out = np.where(rng.random(shape) < 0.1, base * 1e6,
+                       np.where(rng.random(shape) < 0.3, 0.0, base))
+    else:
+        raise ValueError(f"unknown value kind {kind!r}")
+    return np.asarray(out, np.float32)
+
+
+def _env_examples() -> int:
+    return int(os.environ.get("KERNEL_FUZZ_EXAMPLES", "0"))
+
 
 try:
-    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import given  # noqa: F401
+    from hypothesis import settings as _hyp_settings
     from hypothesis import strategies as st  # noqa: F401
+
+    def settings(*args, **kwargs):
+        """hypothesis.settings with the KERNEL_FUZZ_EXAMPLES override."""
+        n = _env_examples()
+        if n:
+            kwargs["max_examples"] = n
+        return _hyp_settings(*args, **kwargs)
+
 except ImportError:
     import itertools
+    import random
 
     class _Strategy:
-        """Carries the deterministic examples used in fallback mode."""
+        """Carries the deterministic examples used in fallback mode plus
+        an optional seeded draw over the full domain (for corpus sizes
+        beyond the fixed cartesian product)."""
 
-        def __init__(self, samples):
+        def __init__(self, samples, draw=None):
             self.samples = list(samples)
+            self._draw = draw
+
+        def draw(self, rng):
+            if self._draw is not None:
+                return self._draw(rng)
+            return rng.choice(self.samples)
 
     class _St:
         @staticmethod
         def integers(lo, hi):
-            return _Strategy(dict.fromkeys((lo, (lo + hi) // 2, hi)))
+            return _Strategy(dict.fromkeys((lo, (lo + hi) // 2, hi)),
+                             draw=lambda rng: rng.randint(lo, hi))
 
         @staticmethod
         def sampled_from(xs):
@@ -34,7 +105,8 @@ except ImportError:
 
         @staticmethod
         def floats(lo, hi, **_kw):
-            return _Strategy(dict.fromkeys((lo, (lo + hi) / 2, hi)))
+            return _Strategy(dict.fromkeys((lo, (lo + hi) / 2, hi)),
+                             draw=lambda rng: rng.uniform(lo, hi))
 
         @staticmethod
         def booleans():
@@ -42,21 +114,37 @@ except ImportError:
 
     st = _St()
     _MAX_EXAMPLES = 12
+    _FUZZ_SEED = 0xFEDADA
 
-    def settings(*_a, **_kw):
-        return lambda fn: fn
+    def settings(*_a, max_examples=None, **_kw):
+        def deco(fn):
+            if max_examples is not None:
+                fn._fallback_max_examples = max_examples
+            return fn
+        return deco
 
     def given(**strategies):
         names = list(strategies)
-        combos = list(itertools.product(
-            *(strategies[n].samples for n in names)))
-        if len(combos) > _MAX_EXAMPLES:
-            # evenly-spaced slice so every strategy still varies
-            step = len(combos) / _MAX_EXAMPLES
-            combos = [combos[int(i * step)] for i in range(_MAX_EXAMPLES)]
 
         def deco(fn):
             def wrapper(*args, **kwargs):
+                # resolved at CALL time: the env var and the settings()
+                # decorator (applied above @given, i.e. to this wrapper)
+                # both override the default
+                n = (_env_examples()
+                     or getattr(wrapper, "_fallback_max_examples", None)
+                     or _MAX_EXAMPLES)
+                combos = list(itertools.product(
+                    *(strategies[nm].samples for nm in names)))
+                if len(combos) > n:
+                    # evenly-spaced slice so every strategy still varies
+                    step = len(combos) / n
+                    combos = [combos[int(i * step)] for i in range(n)]
+                elif len(combos) < n:
+                    rng = random.Random(_FUZZ_SEED)
+                    combos += [
+                        tuple(strategies[nm].draw(rng) for nm in names)
+                        for _ in range(n - len(combos))]
                 for combo in combos:
                     fn(*args, **dict(zip(names, combo)), **kwargs)
             wrapper.__name__ = fn.__name__

@@ -244,11 +244,25 @@ def test_constraint_table_names_unique_and_each_rule_fires():
                                           robust_agg="trimmed0.25"),
         "clipacc-no-faults": dict(use_pallas_clipacc=True, dp_clip=1.0,
                                   fault_nan=0.1),
+        "uploadfuse-codec-kind": dict(use_pallas_uploadfuse=True,
+                                      algorithm="fedadamw+topk0.1"),
+        "uploadfuse-xor-clipacc": dict(use_pallas_uploadfuse=True,
+                                       use_pallas_clipacc=True,
+                                       dp_clip=1.0),
+        "uploadfuse-no-corruption": dict(use_pallas_uploadfuse=True,
+                                         fault_nan=0.1),
+        "uploadfuse-no-defense": dict(use_pallas_uploadfuse=True,
+                                      robust_agg="trimmed0.25"),
+        "uploadfuse-sequential-no-drop": dict(
+            use_pallas_uploadfuse=True, layout="client_sequential",
+            fault_drop=0.3),
     }
     assert set(violating) == set(names)   # every table row is exercised
+    _CODEC_FOR = {"clipacc-no-codec": "int8",
+                  "uploadfuse-codec-kind": "topk0.1"}
     base = FedConfig(num_clients=4, clients_per_round=2)
     for c in CONSTRAINTS:
-        codec = "int8" if c.name == "clipacc-no-codec" else ""
+        codec = _CODEC_FOR.get(c.name, "")
         bad = FedConfig(num_clients=4, clients_per_round=2,
                         **violating[c.name])
         assert c.check(bad, codec), c.name

@@ -1,0 +1,219 @@
+"""Composition parity for the fused upload megakernel.
+
+The engine-level contract: with ``use_pallas_uploadfuse=True`` the whole
+training trajectory (losses, params, server state incl. EF tables) is
+BIT-IDENTICAL whether ``tree_upload_fuse`` routes to the Pallas kernel
+or to the chained jnp oracle (``force_impl``), across the full
+{DP on/off} x {int8 / int4 / no codec} x {drop faults} x layout matrix;
+fused-vs-unfused trajectories agree to float tolerance (the unfused
+engine reduces in a different order); and with the flag OFF the traced
+round jaxpr is byte-identical to a config that never mentions it.
+
+Wire-code parity pins the codec contract: the kernel's packed codes and
+scales reproduce ``repro.comm.codecs`` byte-for-byte, per client and
+per leaf.
+
+Set ``REPRO_LAYOUT=client_parallel|client_sequential`` to pin the layout
+matrix to one entry (the CI layout matrix does)."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import build_tiny
+from repro.comm.codecs import get_codec
+from repro.config import FedConfig
+from repro.config.fed_config import CONSTRAINTS
+from repro.core import build_fed_state
+from repro.core.rounds import trace_round_jaxpr
+from repro.data import RoundBatchGenerator, make_task
+from repro.kernels.uploadfuse import (force_impl, tree_upload_fuse,
+                                      wire_payloads)
+from repro.launch.pipeline import (HostPrefetcher, RoundEngine,
+                                   plan_round_blocks)
+from repro.metrics import MetricsSpool
+
+_ENV_LAYOUT = os.environ.get("REPRO_LAYOUT")
+LAYOUTS = ([_ENV_LAYOUT] if _ENV_LAYOUT
+           else ["client_parallel", "client_sequential"])
+
+ALGS = ("fedadamw", "fedadamw+int8", "fedadamw+int4")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg, model, _ = build_tiny("dense")
+    task = make_task("class_lm", vocab_size=cfg.vocab_size, seq_len=16,
+                     num_samples=256, num_clients=4, dirichlet_alpha=0.6,
+                     seed=0)
+    return cfg, model, task
+
+
+def _drive(model, cfg, task, fed, impl="kernel"):
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    engine = RoundEngine(model, fed, specs, alg=alg, donate=False)
+    gen = RoundBatchGenerator(task, num_clients=fed.num_clients,
+                              clients_per_round=fed.clients_per_round,
+                              local_steps=fed.local_steps, batch_size=2,
+                              rng=7)
+    pre = HostPrefetcher(gen, plan_round_blocks(3, 3, 1), depth=0,
+                         stacked=engine.stacked)
+    spool = MetricsSpool()
+    with force_impl(impl):
+        for start, size, batches, cids in pre:
+            params, sstate, m = engine.run_block(params, sstate, batches,
+                                                 cids, start, size)
+            spool.append(start, m, size)
+    losses = [m["loss_mean"] for _, m in spool.flush()]
+    return losses, params, sstate
+
+
+def _assert_bit_identical(a, b, tag):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), tag
+    for x, y in zip(la, lb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        assert xa.tobytes() == ya.tobytes(), (
+            f"{tag}: kernel/ref trajectories diverged "
+            f"(max |diff| {np.max(np.abs(xa - ya))})")
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("algorithm", ALGS)
+@pytest.mark.parametrize("dp", [False, True])
+def test_engine_kernel_ref_parity_and_unfused_drift(tiny, layout,
+                                                    algorithm, dp):
+    cfg, model, task = tiny
+    fed = FedConfig(algorithm=algorithm, num_clients=4,
+                    clients_per_round=2, local_steps=2, lr=1e-3,
+                    layout=layout, sequential_clients=2,
+                    dp_clip=(0.05 if dp else 0.0),
+                    use_pallas_uploadfuse=True)
+    lk, pk, sk = _drive(model, cfg, task, fed, "kernel")
+    lr_, pr, sr = _drive(model, cfg, task, fed, "ref")
+    assert lk == lr_, f"losses diverged: {lk} vs {lr_}"
+    _assert_bit_identical(pk, pr, "params")
+    _assert_bit_identical(sk, sr, "server state")
+    # fused vs stock unfused: same pipeline, different reduction order
+    unfused = dataclasses.replace(fed, use_pallas_uploadfuse=False)
+    lu, _, _ = _drive(model, cfg, task, unfused)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(lu),
+                               rtol=1e-4, atol=1e-5,
+                               err_msg="fused drifted from unfused")
+
+
+@pytest.mark.parametrize("algorithm", ["fedadamw+int8", "fedadamw+int4"])
+@pytest.mark.parametrize("weighting", ["uniform", "data_size"])
+def test_engine_parity_with_drop_faults_and_weights(tiny, algorithm,
+                                                    weighting):
+    """Drop faults (validity-masked, renormalized accumulation weights)
+    and data-size aggregation weights ride the same fused kernel —
+    client_parallel only per uploadfuse-sequential-no-drop."""
+    if _ENV_LAYOUT == "client_sequential":
+        pytest.skip("layout pinned by REPRO_LAYOUT")
+    cfg, model, task = tiny
+    fed = FedConfig(algorithm=algorithm, num_clients=4,
+                    clients_per_round=3, local_steps=2, lr=1e-3,
+                    layout="client_parallel", agg_weighting=weighting,
+                    fault_drop=0.4, fault_seed=5,
+                    use_pallas_uploadfuse=True)
+    lk, pk, sk = _drive(model, cfg, task, fed, "kernel")
+    lr_, pr, sr = _drive(model, cfg, task, fed, "ref")
+    assert lk == lr_
+    _assert_bit_identical((pk, sk), (pr, sr), "params+state")
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("algorithm", ALGS)
+def test_flag_off_jaxpr_byte_identical(tiny, layout, algorithm):
+    """use_pallas_uploadfuse=False must be trace-invisible: the round
+    program is byte-identical to one built without the flag (the RA201
+    gate-parity rows audit the same invariant in CI)."""
+    cfg, model, _ = tiny
+    base = FedConfig(algorithm=algorithm, num_clients=4,
+                     clients_per_round=2, local_steps=2, lr=1e-3,
+                     layout=layout, sequential_clients=2)
+    off = dataclasses.replace(base, use_pallas_uploadfuse=False)
+    assert (str(trace_round_jaxpr(model, off, cfg=cfg)[0])
+            == str(trace_round_jaxpr(model, base, cfg=cfg)[0]))
+
+
+# ----------------------------------------------------- wire-code parity
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_wire_codes_match_jnp_codec(bits):
+    """Per-client per-leaf {"q", "scale"} payloads sliced out of the
+    kernel's code block equal the jnp codec's encode bytes."""
+    s = 3
+    shapes = {"a": (130,), "b": (9, 5), "c": (2048,)}
+    rng = np.random.default_rng(42)
+    stacked = {k: jnp.asarray(rng.standard_normal((s,) + shp),
+                              jnp.float32) for k, shp in shapes.items()}
+    keys = jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.PRNGKey(11), i))(jnp.arange(s))
+    res = tree_upload_fuse(stacked, None, bits=bits, clip=0.0,
+                           weights=jnp.full((s,), 1.0 / s, jnp.float32),
+                           keys=keys if bits == 4 else None)
+    payloads = wire_payloads(stacked, res, bits=bits)
+    codec = get_codec("int8" if bits == 8 else "int4")
+    for c in range(s):
+        client_tree = jax.tree.map(lambda a: a[c], stacked)
+        enc = codec.encode(client_tree,
+                           keys[c] if bits == 4 else jax.random.PRNGKey(0))
+        assert len(enc.data) == len(payloads[c])
+        for li, (want, got) in enumerate(zip(enc.data, payloads[c])):
+            for fld in ("q", "scale"):
+                assert (np.asarray(got[fld]).tobytes()
+                        == np.asarray(want[fld]).tobytes()), (bits, c,
+                                                              li, fld)
+
+
+# ------------------------------------------------ constraint redirects
+
+def test_clipacc_constraints_redirect_to_uploadfuse():
+    """The clipacc CONSTRAINTS rows the megakernel lifts now point at
+    the flag that lifts them."""
+    by_name = {c.name: c for c in CONSTRAINTS}
+    for name, cfg_kw, codec in (
+            ("clipacc-no-codec",
+             dict(use_pallas_clipacc=True, dp_clip=1.0), "int8"),
+            ("clipacc-parallel-only",
+             dict(use_pallas_clipacc=True, dp_clip=1.0,
+                  layout="client_sequential"), "")):
+        bad = FedConfig(num_clients=4, clients_per_round=2, **cfg_kw)
+        msg = by_name[name].check(bad, codec)
+        assert msg and "use_pallas_uploadfuse" in msg, (name, msg)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(algorithm="fedadamw+topk0.1"),
+    dict(algorithm="fedadamw+lowrank2"),
+    dict(use_pallas_clipacc=True, dp_clip=1.0),
+    dict(fault_nan=0.1),
+    dict(fault_scale=0.1),
+    dict(robust_agg="trimmed0.25"),
+    dict(layout="client_sequential", sequential_clients=2,
+         fault_drop=0.3),
+])
+def test_uploadfuse_constraints_reject(kw):
+    fed = FedConfig(num_clients=4, clients_per_round=2,
+                    use_pallas_uploadfuse=True, **kw)
+    with pytest.raises(ValueError, match="uploadfuse"):
+        fed.validate()
+
+
+@pytest.mark.parametrize("kw", [
+    dict(algorithm="fedadamw+int8", dp_clip=0.5),
+    dict(algorithm="fedadamw+int4"),
+    dict(algorithm="fedadamw", fault_drop=0.3),
+    dict(layout="client_sequential", sequential_clients=2,
+         algorithm="fedadamw+int8"),
+])
+def test_uploadfuse_constraints_accept_fast_path(kw):
+    fed = FedConfig(num_clients=4, clients_per_round=2,
+                    use_pallas_uploadfuse=True, **kw)
+    fed.validate()
