@@ -174,6 +174,16 @@ def audit_matrix(layouts: Tuple[str, ...] = LAYOUTS) -> List[AuditCase]:
         cases.append(AuditCase(
             f"diag_on[{lay}]", _base_fed(lay, telemetry_diagnostics=True),
             differs_from=b))
+        # per-client flight recorder (telemetry.ledger): off must be
+        # byte-identical even while unrelated inert knobs move; on must
+        # actually attach the (S, n_stats) block
+        cases.append(AuditCase(
+            f"ledger_off[{lay}]",
+            _base_fed(lay, telemetry_ledger=False, scenario_seed=9),
+            parity_with=b, in_telemetry_session=True))
+        cases.append(AuditCase(
+            f"ledger_on[{lay}]", _base_fed(lay, telemetry_ledger=True),
+            differs_from=b))
         cases.append(AuditCase(
             f"scenario_on[{lay}]",
             _base_fed(lay, straggler_frac=0.5, agg_weighting="inv_steps"),

@@ -156,6 +156,16 @@ class FedConfig:
     # controlled here — they live outside the jitted program entirely.
     telemetry_diagnostics: bool = False
 
+    # opt-in per-client flight recorder (repro.telemetry.ledger,
+    # docs/observability.md): every round emits an (S, n_stats) stats
+    # block — participation, executed steps, upload L2, drift
+    # contribution, DP clip activation, wire arrival, fault/defense
+    # verdicts — riding the MetricsSpool like any other metric, drained
+    # at eval boundaries and spilled as npz + manifest by the launcher.
+    # Off (default) is statically gated exactly like the diagnostics:
+    # byte-identical traced program, no extra keys.
+    telemetry_ledger: bool = False
+
     # gradient micro-batching inside each local step: the per-step batch is
     # split into this many chunks whose gradients are accumulated (identical
     # semantics — the mean of micro-gradients IS the batch gradient) so the

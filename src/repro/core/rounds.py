@@ -97,12 +97,17 @@ from repro.core import partition
 from repro.core.fedadamw import FedAlgorithm, get_algorithm
 from repro.core.tree_util import tree_sub
 from repro.faults import FAULT_DROP_KEY, FAULT_MULT_KEY
-from repro.faults.defense import (apply_fault_mult, parse_robust_agg,
-                                  robust_aggregate, upload_validity)
+from repro.faults.defense import (apply_fault_mult, injected_codes,
+                                  parse_robust_agg, robust_aggregate,
+                                  upload_validity)
 from repro.privacy import add_round_noise, clip_tree_by_l2, clip_upload_aux
 from repro.scenario import AGG_WEIGHTS_KEY, STEP_MASK_KEY
 from repro.telemetry.diagnostics import (attach_round_diagnostics,
-                                         local_diagnostics)
+                                         local_diagnostics, tree_sqnorm)
+from repro.telemetry.ledger import (LEDGER_METRIC_KEY,
+                                    finalize_ledger_block,
+                                    local_ledger_stats,
+                                    split_ledger_stats)
 
 Array = jax.Array
 
@@ -213,6 +218,7 @@ def make_local_phase(loss_fn: Callable, alg: FedAlgorithm, fed: FedConfig,
     clip_delta_here = dp_on and not (fed.use_pallas_clipacc
                                      or fed.use_pallas_uploadfuse)
     diag_on = fed.telemetry_diagnostics
+    ledger_on = fed.telemetry_ledger
 
     def local_phase(gparams, sstate, batches, lr_scale, client_id=None,
                     step_valid=None):
@@ -298,11 +304,20 @@ def make_local_phase(loss_fn: Callable, alg: FedAlgorithm, fed: FedConfig,
             metrics = {"loss_first": losses[0], "loss_last": losses[last],
                        "loss_mean": (losses * v).sum() / n_valid}
         delta = tree_sub(params_k, gparams)
+        # flight recorder: the clip-activation column needs the PRE-clip
+        # squared norm — measured here regardless of which component
+        # (local clip, clipacc, uploadfuse) performs the actual clip,
+        # since all three bound the same raw delta
+        raw_sq = tree_sqnorm(delta) if (ledger_on and dp_on) else None
         if clip_delta_here:
             delta = clip_tree_by_l2(delta, fed.dp_clip)
         up = alg.upload(delta, cstate_k, specs, fed)
         if dp_on:
             up = clip_upload_aux(up, fed.dp_clip)
+        if ledger_on:
+            metrics = {**metrics, **local_ledger_stats(
+                raw_sq, up.get("delta", delta), step_valid=step_valid,
+                num_steps=losses.shape[0])}
         if diag_on:
             # per-client scalar accumulators for the Figure-2 gauges
             # (repro.telemetry.diagnostics); measured on the upload's
@@ -333,6 +348,7 @@ def make_round_fn(model, fed: FedConfig, specs, *,
     dp_on = fed.dp_clip > 0.0
     dp_noise_on = dp_on and fed.dp_noise_multiplier > 0.0
     diag_on = fed.telemetry_diagnostics
+    ledger_on = fed.telemetry_ledger
     # defense layer (repro.faults, docs/faults.md) — statically gated:
     # robust_agg == "none" with no fault keys on the batch traces the
     # exact pre-fault program
@@ -392,6 +408,12 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                         local_phase, in_axes=(None, None, 0, None, 0, 0),
                         out_axes=0)(gparams, sstate, batches, lr_scale,
                                     client_ids, step_mask)
+            if ledger_on:
+                # the led_* stats are (S,)-resolution: strip them before
+                # the cross-client metric mean below and re-attach as
+                # the per-round stats block once the aggregate is known
+                metrics, led_stats = split_ledger_stats(metrics)
+            led_valid = None  # set by the defense branch when it runs
             if fuse_on:
                 # one fused pass over the stacked raw deltas: pull the
                 # delta stack (and the clients' current residual rows)
@@ -465,6 +487,7 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                             norm_mult=fed.robust_norm_mult)
                     else:
                         valid = arrived
+                    led_valid = valid
                     mean_up, n_valid = robust_aggregate(
                         uploads, valid, agg_w,
                         kind=robust_kind if defense_on else "mean",
@@ -513,6 +536,15 @@ def make_round_fn(model, fed: FedConfig, specs, *,
             if diag_on:
                 out_metrics = attach_round_diagnostics(out_metrics,
                                                        clean_up)
+            if ledger_on:
+                out_metrics[LEDGER_METRIC_KEY] = finalize_ledger_block(
+                    led_stats, client_ids=client_ids,
+                    mean_delta_sq=tree_sqnorm(clean_up["delta"]),
+                    dp_clip=fed.dp_clip,
+                    arrived=(None if f_drop is None
+                             else jnp.logical_not(f_drop)),
+                    valid=led_valid,
+                    injected=injected_codes(f_drop, f_mult))
             return new_params, new_state, out_metrics
 
     else:  # client_sequential
@@ -614,6 +646,10 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                     acc_up, acc_m, n, sst = acc
                 sst, up, m = one_client(sst, xs["b"], xs["cid"],
                                         xs.get("sm"), xs.get("w"))
+                if ledger_on:
+                    # per-client scalars leave the scan as stacked ys —
+                    # they must NOT fold into the metric sum below
+                    m, led = split_ledger_stats(m)
                 if f_mult is not None:
                     up = apply_fault_mult(up, xs["fm"], stacked=False)
                 if track_valid:
@@ -629,9 +665,20 @@ def make_round_fn(model, fed: FedConfig, specs, *,
                 acc_up = jax.tree.map(jnp.add, acc_up,
                                       contrib(up, xs.get("w")))
                 acc_m = jax.tree.map(jnp.add, acc_m, m)
+                ys = None
+                if ledger_on:
+                    # same ingredients the parallel layout hands
+                    # finalize_ledger_block, one client at a time
+                    ys = dict(led)
+                    if faults_on:
+                        ys["arrived"] = jnp.logical_not(xs["fd"])
+                        ys["injected"] = injected_codes(xs["fd"],
+                                                        xs["fm"])
+                    if track_valid:
+                        ys["valid"] = ok
                 if track_valid:
-                    return (acc_up, acc_m, n + 1, nv, ws, sst), None
-                return (acc_up, acc_m, n + 1, sst), None
+                    return (acc_up, acc_m, n + 1, nv, ws, sst), ys
+                return (acc_up, acc_m, n + 1, sst), ys
 
             xs = {"b": batches, "cid": client_ids}
             if step_mask is not None:
@@ -647,6 +694,8 @@ def make_round_fn(model, fed: FedConfig, specs, *,
             def _first_contrib(x):
                 _, up, m = one_client(sstate, x["b"], x["cid"], x.get("sm"),
                                       x.get("w"))
+                if ledger_on:
+                    m, _ = split_ledger_stats(m)
                 return contrib(up, x.get("w")), m
 
             acc_shape = jax.eval_shape(_first_contrib,
@@ -660,10 +709,10 @@ def make_round_fn(model, fed: FedConfig, specs, *,
             # constructing the scanned client program, not device time
             with telemetry.span("trace/local_phase", "trace"):
                 if track_valid:
-                    (sum_up, sum_m, n, n_valid, wsum, sstate_k), _ = \
-                        jax.lax.scan(scan_client, carry0, xs)
+                    (sum_up, sum_m, n, n_valid, wsum, sstate_k), led_rows \
+                        = jax.lax.scan(scan_client, carry0, xs)
                 else:
-                    (sum_up, sum_m, n, sstate_k), _ = jax.lax.scan(
+                    (sum_up, sum_m, n, sstate_k), led_rows = jax.lax.scan(
                         scan_client, carry0, xs)
                     n_valid = None
             with telemetry.span("trace/aggregate", "trace"):
@@ -700,6 +749,16 @@ def make_round_fn(model, fed: FedConfig, specs, *,
             if diag_on:
                 out_metrics = attach_round_diagnostics(out_metrics,
                                                        clean_up)
+            if ledger_on:
+                # led_rows: scan-stacked (S,) ingredients — identical
+                # column math to the parallel layout by construction
+                out_metrics[LEDGER_METRIC_KEY] = finalize_ledger_block(
+                    led_rows, client_ids=client_ids,
+                    mean_delta_sq=tree_sqnorm(clean_up["delta"]),
+                    dp_clip=fed.dp_clip,
+                    arrived=led_rows.get("arrived"),
+                    valid=led_rows.get("valid"),
+                    injected=led_rows.get("injected"))
             return new_params, new_state, out_metrics
 
     return round_fn

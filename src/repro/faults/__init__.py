@@ -35,14 +35,18 @@ FAULT_MULT_KEY = "_fault_mult"  # (S,) f32: 1.0 clean, NaN corrupt, or
 
 from repro.faults.injection import FaultModel  # noqa: E402
 from repro.faults.defense import (  # noqa: E402
+    INJECTED_CODES,
     ROBUST_AGGREGATORS,
+    VERDICT_CODES,
     apply_fault_mult,
     clamp_nonneg_entries,
     client_sq_norms,
+    injected_codes,
     masked_median,
     parse_robust_agg,
     robust_aggregate,
     upload_validity,
+    verdict_codes,
 )
 from repro.faults.watchdog import NaNWatchdog, WatchdogRollback  # noqa: E402
 
@@ -52,5 +56,6 @@ __all__ = [
     "ROBUST_AGGREGATORS", "parse_robust_agg", "apply_fault_mult",
     "upload_validity", "client_sq_norms", "masked_median",
     "robust_aggregate", "clamp_nonneg_entries",
+    "INJECTED_CODES", "VERDICT_CODES", "injected_codes", "verdict_codes",
     "NaNWatchdog", "WatchdogRollback",
 ]

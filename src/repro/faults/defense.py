@@ -297,3 +297,82 @@ def robust_aggregate(uploads: Tree, valid: jax.Array,
                          f"known: {ROBUST_AGGREGATORS}")
 
     return clamp_nonneg_entries(mean_up), n_valid
+
+
+# ------------------------------------------------------------------
+# Reason-code taxonomy for the per-client flight recorder
+# (repro.telemetry.ledger, docs/observability.md). Codes are small
+# floats so they ride the f32 ledger stats block unchanged; both
+# helpers are elementwise and layout-agnostic — the parallel layout
+# calls them on (S,) vectors, the sequential layout on per-client
+# scalars inside its scan — so the two layouts record identical rows.
+
+#: what the fault injector did to this client's upload this round
+INJECT_NONE = 0.0    # clean upload
+INJECT_DROP = 1.0    # upload never arrived (FAULT_DROP_KEY)
+INJECT_NAN = 2.0     # NaN/Inf corruption (FAULT_MULT_KEY is non-finite)
+INJECT_SCALE = 3.0   # norm inflation (FAULT_MULT_KEY != 1, finite)
+
+#: what the server concluded about this client's upload this round
+VERDICT_ACCEPTED = 0.0  # arrived and passed validation
+VERDICT_DROPPED = 1.0   # never arrived (transport fault)
+VERDICT_REJECTED = 2.0  # arrived but rejected by the upload validator
+
+INJECTED_CODES = {"none": INJECT_NONE, "drop": INJECT_DROP,
+                  "nan": INJECT_NAN, "scale": INJECT_SCALE}
+VERDICT_CODES = {"accepted": VERDICT_ACCEPTED, "dropped": VERDICT_DROPPED,
+                 "rejected": VERDICT_REJECTED}
+
+
+def injected_codes(f_drop: Optional[jax.Array],
+                   f_mult: Optional[jax.Array]) -> Optional[jax.Array]:
+    """Elementwise fault-injection reason code from the reserved-key
+    payloads (``None`` payloads mean the fault process is off). Drop
+    dominates corruption: a dropped upload never reaches the validator,
+    so its corruption (if any) is unobservable.
+
+    >>> import jax.numpy as jnp
+    >>> d = jnp.array([False, True, False, False])
+    >>> m = jnp.array([1.0, 1.0, jnp.nan, 1e3])
+    >>> [int(c) for c in injected_codes(d, m)]
+    [0, 1, 2, 3]
+    >>> injected_codes(None, None) is None
+    True
+    """
+    if f_drop is None and f_mult is None:
+        return None
+    ref = f_drop if f_drop is not None else f_mult
+    drop = (jnp.zeros(jnp.shape(ref), jnp.bool_)
+            if f_drop is None else jnp.asarray(f_drop, jnp.bool_))
+    mult = (jnp.ones(jnp.shape(ref), jnp.float32)
+            if f_mult is None else jnp.asarray(f_mult, jnp.float32))
+    return jnp.where(
+        drop, INJECT_DROP,
+        jnp.where(~jnp.isfinite(mult), INJECT_NAN,
+                  jnp.where(mult != 1.0, INJECT_SCALE,
+                            INJECT_NONE))).astype(jnp.float32)
+
+
+def verdict_codes(arrived: Optional[jax.Array],
+                  valid: Optional[jax.Array]) -> jax.Array:
+    """Elementwise server verdict. ``arrived`` is the transport mask
+    (``None`` = no drop process, everyone arrived); ``valid`` is the
+    validator's combined mask as produced by :func:`upload_validity`
+    (which already ANDs in ``arrived`` — ``None`` = no validator ran).
+
+    >>> import jax.numpy as jnp
+    >>> a = jnp.array([True, False, True])
+    >>> v = jnp.array([True, False, False])
+    >>> [int(c) for c in verdict_codes(a, v)]
+    [0, 1, 2]
+    >>> [int(c) for c in verdict_codes(None, jnp.array([True, False]))]
+    [0, 2]
+    """
+    ref = valid if valid is not None else arrived
+    arr = (jnp.ones(jnp.shape(ref), jnp.bool_)
+           if arrived is None else jnp.asarray(arrived, jnp.bool_))
+    ok = arr if valid is None else jnp.asarray(valid, jnp.bool_)
+    return jnp.where(
+        ~arr, VERDICT_DROPPED,
+        jnp.where(~ok, VERDICT_REJECTED,
+                  VERDICT_ACCEPTED)).astype(jnp.float32)

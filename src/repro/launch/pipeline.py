@@ -279,6 +279,31 @@ class RoundEngine:
                                 cosine_total_rounds=cosine_total_rounds),
             donate_argnums=donate_argnums)
         self.stacked = fed.rounds_per_call > 1
+        # compile-event accounting (docs/observability.md): every
+        # dispatch is keyed by its program signature — (which jitted fn,
+        # input treedef, leaf shapes/dtypes). A jit-cache growth on a
+        # signature seen before is a STEADY-STATE RECOMPILE, the exact
+        # failure mode (shape churn, weak-type flip-flop) that silently
+        # multiplies step time on the big sharded configs.
+        self.compiles = 0
+        self.compile_s = 0.0
+        self.steady_state_recompiles = 0
+        self._seen_signatures: set = set()
+
+    def _dispatch_signature(self, batches, client_ids):
+        leaves, treedef = jax.tree.flatten((batches, client_ids))
+        return (self.stacked, str(treedef),
+                tuple((tuple(l.shape), str(jnp.asarray(l).dtype))
+                      for l in leaves))
+
+    @staticmethod
+    def _cache_size(fn) -> int:
+        # jax's jitted callables expose a private trace-cache size; fall
+        # back to 0 (compile accounting disabled) if the API moves
+        try:
+            return int(fn._cache_size())
+        except Exception:
+            return 0
 
     def run_block(self, params, sstate, batches, client_ids,
                   start: int, size: int):
@@ -288,8 +313,49 @@ class RoundEngine:
         (consumed) when donation is on."""
         with telemetry.span("dispatch"):
             telemetry.add("rounds/completed", size)
-            if self.stacked:
-                return self.multi_round_fn(params, sstate, batches,
-                                           client_ids, jnp.asarray(start))
-            return self.round_fn(params, sstate, batches, client_ids,
-                                 jnp.asarray(start))
+            fn = self.multi_round_fn if self.stacked else self.round_fn
+            sig = self._dispatch_signature(batches, client_ids)
+            cache0 = self._cache_size(fn)
+            t0 = time.perf_counter()
+            out = fn(params, sstate, batches, client_ids,
+                     jnp.asarray(start))
+            grown = self._cache_size(fn) - cache0
+            if grown > 0:
+                # trace+lower+compile run synchronously inside the
+                # triggering call, so its wall time IS the compile cost
+                # (plus one dispatch, which is noise next to it)
+                dt = time.perf_counter() - t0
+                self.compiles += grown
+                self.compile_s += dt
+                telemetry.add("jit/compiles", grown)
+                telemetry.add("jit/compile_s", dt)
+                if sig in self._seen_signatures:
+                    self.steady_state_recompiles += grown
+                    telemetry.add("jit/steady_state_recompiles", grown)
+            self._seen_signatures.add(sig)
+            return out
+
+
+def sample_memory_gauges(device=None) -> dict:
+    """Set ``mem/live_bytes`` / ``mem/peak_bytes`` gauges from
+    ``device.memory_stats()`` and return the sampled values.
+
+    Called at eval boundaries (host is already synchronizing there, so
+    the query adds no pipeline stall). Backends without allocator stats
+    (CPU returns ``None``) are a silent no-op — the gauges simply never
+    appear in the counter export.
+    """
+    dev = device if device is not None else jax.devices()[0]
+    stats = getattr(dev, "memory_stats", lambda: None)()
+    if not stats:
+        return {}
+    out = {}
+    live = stats.get("bytes_in_use")
+    peak = stats.get("peak_bytes_in_use")
+    if live is not None:
+        telemetry.set_gauge("mem/live_bytes", float(live))
+        out["mem/live_bytes"] = float(live)
+    if peak is not None:
+        telemetry.set_gauge("mem/peak_bytes", float(peak))
+        out["mem/peak_bytes"] = float(peak)
+    return out

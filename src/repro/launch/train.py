@@ -68,8 +68,10 @@ from repro.core import build_fed_state, upload_shape_spec
 from repro.data import RoundBatchGenerator, make_task
 from repro.faults import FaultModel, NaNWatchdog, WatchdogRollback
 from repro.launch.pipeline import (HostPrefetcher, RoundEngine,
-                                   eval_boundaries, plan_round_blocks)
+                                   eval_boundaries, plan_round_blocks,
+                                   sample_memory_gauges)
 from repro.metrics import CSVLogger, Meter, MetricsSpool
+from repro.telemetry.ledger import LEDGER_METRIC_KEY, FlightRecorder
 from repro.models import build_model
 from repro.privacy import (RDPAccountant, released_entry_count,
                            resolve_dp_noise)
@@ -180,7 +182,12 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                  min_quorum: int = 0,
                  watchdog: bool = False, watchdog_max_rollbacks: int = 2,
                  trace_dir: str = "",
-                 telemetry_diagnostics: bool = False) -> Dict[str, list]:
+                 telemetry_diagnostics: bool = False,
+                 telemetry_ledger: bool = False,
+                 ledger_dir: str = "") -> Dict[str, list]:
+    # a --ledger-dir implies the device-side recorder, like --trace-dir
+    # implies the host session
+    telemetry_ledger = telemetry_ledger or bool(ledger_dir)
     cfg = get_arch(arch)
     if reduce_model:
         cfg = reduced_variant(cfg)
@@ -213,7 +220,8 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         fault_seed=seed if fault_seed is None else fault_seed,
         robust_agg=robust_agg, robust_norm_mult=robust_norm_mult,
         min_quorum=min_quorum,
-        telemetry_diagnostics=telemetry_diagnostics)
+        telemetry_diagnostics=telemetry_diagnostics,
+        telemetry_ledger=telemetry_ledger)
     model = build_model(cfg, compute_dtype=jnp.float32)
     task = make_task(task_kind, vocab_size=cfg.vocab_size, seq_len=seq_len,
                      num_samples=max(2048, 64 * num_clients),
@@ -343,6 +351,35 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
     codec = codec_for(fed.algorithm)
     comm_bytes = upload_wire_bytes(upload_spec, codec)
 
+    # per-client flight recorder (repro.telemetry.ledger,
+    # docs/observability.md): the engine attaches an (S, n_stats) block
+    # per round under LEDGER_METRIC_KEY; it rides the spool with the
+    # scalar metrics and is drained into the recorder at every flush.
+    # The on-device wire column is a 0/1 arrival indicator — the
+    # recorder scales it by the static per-client wire bytes here.
+    recorder = None
+    if fed.telemetry_ledger and ledger_dir:
+        recorder = FlightRecorder(
+            ledger_dir, wire_bytes_per_client=comm_bytes,
+            meta={"arch": arch, "algorithm": fed.algorithm,
+                  "layout": fed.layout, "seed": seed,
+                  "clients_per_round": fed.clients_per_round,
+                  "num_clients": fed.num_clients})
+
+    def _new_spool() -> MetricsSpool:
+        # the ledger block is the one non-scalar metric: rank 2 per
+        # round, so the spool returns it as an ndarray instead of float
+        return MetricsSpool(array_ndim={LEDGER_METRIC_KEY: 2})
+
+    def _drain_ledger(flushed):
+        # strip the block off every flushed record (scalar consumers
+        # below never see it) and feed the recorder when one is active
+        for r, m in flushed:
+            block = m.pop(LEDGER_METRIC_KEY, None)
+            if block is not None and recorder is not None:
+                recorder.record(r, block)
+        return flushed
+
     # telemetry session (repro.telemetry, docs/observability.md): when a
     # --trace-dir is given, install the session BEFORE the prefetcher is
     # built so its wait/produce counters register in the session's
@@ -358,7 +395,7 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
     # the newest VALID checkpoint and replay, at most max_rollbacks
     # times, then abort with the telemetry trace exported
     wd = NaNWatchdog(watchdog_max_rollbacks) if watchdog else None
-    spool = MetricsSpool()
+    spool = _new_spool()
     prefetcher = None
     resume_round = start_round
     static_s = fed.clients_per_round
@@ -407,7 +444,10 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                     eval_rec["host_blocked_frac"] = hbf
                     history["host_blocked_frac"].append(hbf)
                     with telemetry.span("flush"):
-                        flushed = spool.flush()
+                        flushed = _drain_ledger(spool.flush())
+                    # the host blocks here anyway — sample allocator
+                    # stats while the sync is free (no-op on CPU)
+                    sample_memory_gauges()
                     if track_faults:
                         # canonical defense counters, fed from the
                         # per-round survivor metric the engine emitted
@@ -482,8 +522,12 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
                 params = jax.device_put(rest_p)
                 sstate = jax.device_put(rest_s)
                 gen = fresh_gen(resume_round)
-                spool = MetricsSpool()  # poisoned block's rows discarded
+                spool = _new_spool()  # poisoned block's rows discarded
                 _trim_history(history, resume_round)
+                if recorder is not None:
+                    # replayed rounds re-record; drop the rolled-back
+                    # ledger rows exactly like the history trim
+                    recorder.trim(resume_round)
                 if accountant is not None:
                     # replayed rounds must not double-charge: restart
                     # the ledger and charge the completed rounds at the
@@ -500,7 +544,7 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
             # salvage rounds computed since the last eval boundary (an
             # interrupt mid-interval must not drop logged rows the
             # device already produced); no-op on a clean exit
-            for r, m in spool.flush():
+            for r, m in _drain_ledger(spool.flush()):
                 history["train_loss"].append(m["loss_mean"])
                 if logger:
                     logger.log({"round": r, "train_loss": m["loss_mean"],
@@ -509,6 +553,13 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
             pass  # never mask the original in-flight exception
         if logger:
             logger.close()
+        if recorder is not None:
+            try:
+                # same crash-export contract as the trace files: the
+                # partial flight recording survives the wreck
+                recorder.export()
+            except Exception:
+                pass  # never mask the original in-flight exception
         if tele is not None:
             # export even on a crashed run: the partial trace is often
             # exactly what you need to debug the crash
@@ -521,6 +572,13 @@ def run_training(*, arch: str = "vit-tiny-fl", algorithm: str = "fedadamw",
         "host_wait_s": prefetcher.wait_s, "produce_s": prefetcher.produce_s,
         "start_round": start_round,
         "trace_dir": trace_dir,
+        "ledger_dir": ledger_dir,
+        # compile-event accounting (docs/observability.md): a healthy
+        # run compiles each program signature once — steady-state
+        # recompiles mean shape churn is silently eating throughput
+        "jit_compiles": engine.compiles,
+        "jit_compile_s": engine.compile_s,
+        "jit_steady_state_recompiles": engine.steady_state_recompiles,
     }
     if wd is not None:
         history["engine"]["watchdog_rollbacks"] = wd.rollbacks
@@ -660,6 +718,12 @@ def main() -> None:
                     help="compute per-round client-drift RMS and v-bar "
                          "cross-client variance on device (the paper's "
                          "Figure-2 quantities) and log them per round")
+    ap.add_argument("--ledger-dir", default="",
+                    help="record the per-client flight recorder (steps, "
+                         "upload norm, drift contribution, DP clip, "
+                         "wire bytes, fault/defense verdicts per client "
+                         "per round) and export ledger.npz + manifest "
+                         "here (docs/observability.md)")
     args = ap.parse_args()
     t0 = time.time()
     hist = run_training(
@@ -698,7 +762,8 @@ def main() -> None:
         watchdog=args.watchdog,
         watchdog_max_rollbacks=args.watchdog_max_rollbacks,
         trace_dir=args.trace_dir,
-        telemetry_diagnostics=args.diagnostics)
+        telemetry_diagnostics=args.diagnostics,
+        ledger_dir=args.ledger_dir)
     out = {"wall_s": round(time.time() - t0, 1)}
     if hist["train_loss"]:
         out.update(

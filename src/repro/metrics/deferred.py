@@ -22,10 +22,21 @@ once at a boundary (runs under ``python -m doctest``):
 [(0, {'loss': 1.5}), (1, {'loss': 2.5}), (2, {'loss': 3.5})]
 >>> spool.flush()                    # drained
 []
+
+Non-scalar metrics (the per-client flight-recorder block) declare their
+per-round rank via ``array_ndim`` and come back as numpy arrays instead
+of floats — same single fetch, same fused-block splitting:
+
+>>> spool = MetricsSpool(array_ndim={"blk": 1})
+>>> spool.append(0, {"blk": jnp.asarray([1.0, 2.0])})    # one round
+>>> spool.append(1, {"blk": jnp.asarray([[3.0], [4.0]])},
+...              num_rounds=2)                           # fused block
+>>> [(r, m["blk"].tolist()) for r, m in spool.flush()]
+[(0, [1.0, 2.0]), (1, [3.0]), (2, [4.0])]
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import numpy as np
@@ -39,10 +50,16 @@ class MetricsSpool:
     ``append(start_round, metrics)`` accepts either scalar leaves (one
     round) or leaves with a leading round axis of length ``num_rounds``
     (a fused multi-round block).
+
+    ``array_ndim`` maps metric names to their PER-ROUND rank (default 0
+    = scalar). A leaf whose rank exceeds its per-round rank carries the
+    leading fused-round axis and is split per round; rank-0 entries are
+    converted to ``float``, higher ranks stay numpy arrays.
     """
 
-    def __init__(self):
+    def __init__(self, array_ndim: Optional[Mapping[str, int]] = None):
         self._pending: List[Tuple[int, int, Dict[str, Any]]] = []
+        self._array_ndim = dict(array_ndim or {})
 
     def append(self, start_round: int, metrics: Dict[str, Any],
                num_rounds: int = 1) -> None:
@@ -51,18 +68,21 @@ class MetricsSpool:
     def __len__(self) -> int:
         return sum(n for _, n, _ in self._pending)
 
-    def flush(self) -> List[Tuple[int, Dict[str, float]]]:
+    def flush(self) -> List[Tuple[int, Dict[str, Any]]]:
         """One blocking fetch of everything spooled since the last flush,
         in round order."""
         if not self._pending:
             return []
         fetched = jax.device_get([m for _, _, m in self._pending])
-        out: List[Tuple[int, Dict[str, float]]] = []
+        out: List[Tuple[int, Dict[str, Any]]] = []
         for (start, n, _), metrics in zip(self._pending, fetched):
             arrs = {k: np.asarray(v) for k, v in metrics.items()}
             for i in range(n):
-                out.append((start + i, {
-                    k: float(a) if a.ndim == 0 else float(a[i])
-                    for k, a in arrs.items()}))
+                rec: Dict[str, Any] = {}
+                for k, a in arrs.items():
+                    base = self._array_ndim.get(k, 0)
+                    v = a if a.ndim == base else a[i]
+                    rec[k] = np.asarray(v) if base else float(v)
+                out.append((start + i, rec))
         self._pending.clear()
         return out

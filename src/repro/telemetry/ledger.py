@@ -1,0 +1,236 @@
+"""Per-client flight recorder (docs/observability.md).
+
+The PR 6 diagnostics answer "how much drift / v̄ variance this round,
+on average"; this module answers "which CLIENT drifted, got clipped,
+was dropped or rejected, and how many bytes it put on the wire" — the
+per-client view of the paper's Figure-2 decomposition that the async
+and personalization roadmap items need.
+
+Device side: when ``FedConfig.telemetry_ledger`` is on,
+``core.rounds`` adds a handful of per-client scalar stats to the
+local-phase metrics (``led_*`` keys), strips them back out of the
+cross-client metric reduction, and attaches one ``(S, n_stats)``
+f32 block per round to the output metrics under
+:data:`LEDGER_METRIC_KEY`. The block rides the existing
+:class:`~repro.metrics.MetricsSpool` exactly like any scalar metric —
+no extra host sync, and under ``rounds_per_call`` fusion it comes back
+``(M, S, n_stats)``-stacked with everything else. Both placement
+layouts funnel through the same :func:`finalize_ledger_block`, so the
+recorded math is identical by construction.
+
+Host side: :class:`FlightRecorder` collects the blocks the launcher
+pops off each spool flush, scales the wire column by the static
+per-client wire bytes, and spills an atomic ``ledger.npz`` + JSON
+manifest — exported on crash through the same ``finally`` path as the
+trace files. ``tools/ledger_report.py`` renders it stdlib-only.
+
+Off (default) is statically gated: no keys, byte-identical jaxpr
+(RA201 rows ``ledger_off[*]`` in ``analysis/jaxpr_audit.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import telemetry
+from repro.faults.defense import (INJECTED_CODES, VERDICT_CODES,
+                                  injected_codes, verdict_codes)
+from repro.telemetry.diagnostics import tree_sqnorm
+
+Tree = Dict[str, object]
+
+#: metrics-dict key the per-round ``(S, n_stats)`` block rides under.
+#: The leading underscore keeps it out of CSV/history scalar paths —
+#: the launcher pops it right after every spool flush.
+LEDGER_METRIC_KEY = "_ledger"
+
+#: column order of the stats block (axis -1). ``wire_bytes`` is
+#: recorded on device as a 0/1 arrival indicator and scaled by the
+#: static per-client wire bytes in :meth:`FlightRecorder.record`.
+LEDGER_COLUMNS = (
+    "client_id",       # population client id (f32 cast)
+    "steps",           # local steps actually executed (straggler mask)
+    "upload_l2",       # L2 norm of this client's upload delta
+    "drift_sq",        # ||delta_i||^2 - ||mean delta||^2 — this
+    #                    client's contribution to the Fig. 2 drift
+    #                    variance (mean over clients = drift RMS^2)
+    "dp_clipped",      # 1.0 if the DP clip actually bit (raw norm > C)
+    "wire_bytes",      # arrival indicator on device; bytes after record
+    "fault_injected",  # defense.INJECTED_CODES
+    "verdict",         # defense.VERDICT_CODES
+)
+
+# device-side per-client scalar stat keys riding the local-phase
+# metrics dict (vmapped / scanned with everything else, then stripped
+# from the cross-client reduction by split_ledger_stats)
+LEDGER_STAT_PREFIX = "led_"
+LED_STEPS = "led_steps"          # executed local steps
+LED_UPLOAD_SQ = "led_upload_sq"  # squared L2 of the upload delta
+LED_CLIP_SQ = "led_clip_sq"      # PRE-clip squared L2 (dp_clip > 0 only)
+
+
+def local_ledger_stats(raw_sq: Optional[jax.Array],
+                       upload_delta: Tree,
+                       *, step_valid: Optional[jax.Array],
+                       num_steps: int) -> Dict[str, jax.Array]:
+    """Per-client scalar stats computed inside the local phase.
+
+    ``raw_sq`` is the squared norm of the raw (pre-DP-clip) delta —
+    pass ``None`` when DP is off and the clip-activation column should
+    stay statically absent.
+    """
+    if step_valid is not None:
+        steps = step_valid.astype(jnp.float32).sum()
+    else:
+        steps = jnp.full((), num_steps, jnp.float32)
+    led = {LED_STEPS: steps, LED_UPLOAD_SQ: tree_sqnorm(upload_delta)}
+    if raw_sq is not None:
+        led[LED_CLIP_SQ] = raw_sq
+    return led
+
+
+def split_ledger_stats(metrics: Tree) -> Tuple[Tree, Dict[str, jax.Array]]:
+    """Pop the ``led_*`` stat keys out of a metrics dict so they bypass
+    the cross-client metric reduction (mean in the parallel layout,
+    online sum in the sequential scan)."""
+    rest = dict(metrics)
+    led = {k: rest.pop(k) for k in list(rest)
+           if k.startswith(LEDGER_STAT_PREFIX)}
+    return rest, led
+
+
+def finalize_ledger_block(led: Dict[str, jax.Array],
+                          *, client_ids: jax.Array,
+                          mean_delta_sq: jax.Array,
+                          dp_clip: float,
+                          arrived: Optional[jax.Array] = None,
+                          valid: Optional[jax.Array] = None,
+                          injected: Optional[jax.Array] = None
+                          ) -> jax.Array:
+    """Assemble the ``(S, n_stats)`` block from (S,)-shaped per-client
+    ingredients. Shared by both layouts: the parallel layout passes
+    vmapped vectors, the sequential layout passes its scan-stacked
+    outputs — every column is elementwise from there, so the layouts
+    agree bit-for-bit given equal inputs.
+    """
+    cid = jnp.asarray(client_ids).astype(jnp.float32)
+    s = cid.shape[0]
+    upload_sq = led[LED_UPLOAD_SQ]
+    cols = {
+        "client_id": cid,
+        "steps": led[LED_STEPS],
+        "upload_l2": jnp.sqrt(upload_sq),
+        "drift_sq": upload_sq - mean_delta_sq,
+    }
+    if LED_CLIP_SQ in led:
+        clip_sq = jnp.float32(float(dp_clip) ** 2)
+        cols["dp_clipped"] = (led[LED_CLIP_SQ] > clip_sq).astype(
+            jnp.float32)
+    else:
+        cols["dp_clipped"] = jnp.zeros((s,), jnp.float32)
+    arr = (jnp.ones((s,), jnp.bool_) if arrived is None
+           else jnp.asarray(arrived, jnp.bool_))
+    cols["wire_bytes"] = arr.astype(jnp.float32)
+    inj = injected
+    cols["fault_injected"] = (jnp.zeros((s,), jnp.float32)
+                              if inj is None else jnp.asarray(inj))
+    if arrived is None and valid is None:
+        cols["verdict"] = jnp.zeros((s,), jnp.float32)
+    else:
+        cols["verdict"] = verdict_codes(arrived, valid)
+    return jnp.stack([jnp.broadcast_to(cols[name], (s,))
+                      for name in LEDGER_COLUMNS], axis=-1)
+
+
+# ----------------------------------------------------------- host side
+
+LEDGER_NPZ = "ledger.npz"
+LEDGER_MANIFEST = "ledger_manifest.json"
+
+_WIRE_COL = LEDGER_COLUMNS.index("wire_bytes")
+
+
+class FlightRecorder:
+    """Host-side accumulator for per-round ledger blocks.
+
+    The launcher pops :data:`LEDGER_METRIC_KEY` off every spool flush
+    and feeds the blocks here; ``export()`` writes ``ledger.npz``
+    (arrays ``rounds`` (R,) and ``stats`` (R, S, n_stats)) plus a JSON
+    manifest, both atomically (tmp + ``os.replace``), so a crash
+    mid-export never leaves a torn file. ``trim()`` mirrors the
+    watchdog's history rollback: rounds at or past the resume point are
+    re-recorded after the retry.
+    """
+
+    def __init__(self, ledger_dir: str, *,
+                 wire_bytes_per_client: int = 0,
+                 meta: Optional[dict] = None):
+        self.ledger_dir = ledger_dir
+        self.wire_bytes_per_client = int(wire_bytes_per_client)
+        self.meta = dict(meta or {})
+        self._rows: Dict[int, "object"] = {}  # round -> (S, C) ndarray
+
+    def record(self, round_index: int, block) -> None:
+        import numpy as np
+        blk = np.array(block, dtype=np.float32, copy=True)
+        if blk.ndim != 2 or blk.shape[-1] != len(LEDGER_COLUMNS):
+            raise ValueError(f"ledger block shape {blk.shape} != "
+                             f"(S, {len(LEDGER_COLUMNS)})")
+        if self.wire_bytes_per_client:
+            blk[:, _WIRE_COL] *= self.wire_bytes_per_client
+        self._rows[int(round_index)] = blk
+        telemetry.add("ledger/rounds_recorded", 1)
+
+    def trim(self, resume_round: int) -> None:
+        """Drop rounds >= ``resume_round`` (watchdog rollback)."""
+        for r in [r for r in self._rows if r >= resume_round]:
+            del self._rows[r]
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def export(self) -> str:
+        import numpy as np
+        os.makedirs(self.ledger_dir, exist_ok=True)
+        rounds = sorted(self._rows)
+        stats = (np.stack([self._rows[r] for r in rounds])
+                 if rounds else np.zeros((0, 0, len(LEDGER_COLUMNS)),
+                                         np.float32))
+        npz_path = os.path.join(self.ledger_dir, LEDGER_NPZ)
+        tmp = npz_path + ".tmp"
+        with open(tmp, "wb") as fh:
+            np.savez_compressed(
+                fh, rounds=np.asarray(rounds, np.int64), stats=stats)
+        os.replace(tmp, npz_path)
+        manifest = {
+            "columns": list(LEDGER_COLUMNS),
+            "injected_codes": INJECTED_CODES,
+            "verdict_codes": VERDICT_CODES,
+            "rounds_recorded": len(rounds),
+            "clients_per_round": int(stats.shape[1]) if rounds else 0,
+            "wire_bytes_per_client": self.wire_bytes_per_client,
+            "wire_col_scaled": bool(self.wire_bytes_per_client),
+            "meta": self.meta,
+        }
+        man_path = os.path.join(self.ledger_dir, LEDGER_MANIFEST)
+        tmp = man_path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(manifest, fh, indent=1, sort_keys=True)
+        os.replace(tmp, man_path)
+        telemetry.add("ledger/exports", 1)
+        return self.ledger_dir
+
+
+def load_ledger(ledger_dir: str):
+    """Load an exported flight recording: ``(manifest, rounds, stats)``
+    with ``rounds`` (R,) int64 and ``stats`` (R, S, n_stats) f32."""
+    import numpy as np
+    with open(os.path.join(ledger_dir, LEDGER_MANIFEST)) as fh:
+        manifest = json.load(fh)
+    with np.load(os.path.join(ledger_dir, LEDGER_NPZ)) as npz:
+        rounds, stats = npz["rounds"], npz["stats"]
+    return manifest, rounds, stats

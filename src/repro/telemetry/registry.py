@@ -25,6 +25,16 @@ name                                  kind     meaning
 ``rounds/quorum_skipped``             counter  rounds frozen by quorum
 ``watchdog/rollbacks``                counter  checkpoint rollbacks taken
 ``prefetch/shutdown_abandoned``       gauge    1 if close() hit deadline
+``jit/compiles``                      counter  jit cache entries compiled
+``jit/compile_s``                     counter  wall time inside compiles
+``jit/steady_state_recompiles``       counter  recompiles of a seen
+                                               program signature (== 0
+                                               in a healthy run)
+``mem/live_bytes``                    gauge    device bytes in use at
+                                               last eval boundary
+``mem/peak_bytes``                    gauge    peak device bytes in use
+``ledger/rounds_recorded``            counter  flight-recorder rounds
+``ledger/exports``                    counter  ledger npz+manifest writes
 ====================================  =======  ==========================
 
 Usage::
@@ -67,6 +77,13 @@ CANONICAL_METRICS: Dict[str, str] = {
     "rounds/quorum_skipped": "counter",
     "watchdog/rollbacks": "counter",
     "prefetch/shutdown_abandoned": "gauge",
+    "jit/compiles": "counter",
+    "jit/compile_s": "counter",
+    "jit/steady_state_recompiles": "counter",
+    "mem/live_bytes": "gauge",
+    "mem/peak_bytes": "gauge",
+    "ledger/rounds_recorded": "counter",
+    "ledger/exports": "counter",
 }
 
 

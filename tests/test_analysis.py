@@ -124,6 +124,26 @@ def test_ra104_metric_name_catalog():
                 "tests/test_x.py") == []
 
 
+def test_ra104_covers_compile_and_ledger_metrics():
+    """The compile-observability and flight-recorder names are in the
+    catalog: the canonical spelling lints clean, a near-miss is caught
+    with the canonical name as the suggested fix."""
+    good = lint("""\
+        from repro import telemetry
+        telemetry.add("jit/compiles", 1.0)
+        telemetry.add("jit/compile_s", 0.5)
+        telemetry.add("ledger/rounds_recorded", 1.0)
+        telemetry.set_gauge("mem/peak_bytes", 2.0**30)
+    """, "src/repro/launch/somefile.py")
+    assert good == []
+    bad = lint("""\
+        from repro import telemetry
+        telemetry.add("jit/compile_secs", 0.5)
+    """, "src/repro/launch/somefile.py")
+    assert codes(bad) == ["RA104"]
+    assert "jit/compile_s" in bad[0].fixit     # difflib suggestion
+
+
 def test_ra105_wallclock_and_global_randomness():
     bad = lint("""\
         import time

@@ -1,0 +1,116 @@
+"""tools/bench_gate.py comparison logic on fabricated reports: green on
+a matching baseline, red on a same-machine slowdown or parity break,
+machine/config-mismatch skips, and the perturbation helper the CI
+red-canary uses. Pure dict plumbing — no measurement, no jax."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_gate", os.path.join(os.path.dirname(__file__), "..",
+                               "tools", "bench_gate.py"))
+bench_gate = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_gate)
+
+
+def _report(machine="box-a", smoke=False, rps=(10.0, 30.0, 40.0),
+            parity=True):
+    modes = dict(zip(bench_gate.MODES, rps))
+    return {
+        "machine": {"host": machine, "cpu": "x86"},
+        "config": {"smoke": smoke, "rounds": 32},
+        "parity_bitexact": parity,
+        "speedup_pipelined_fused_vs_eager": rps[2] / rps[0],
+        "modes": {m: {"rounds_per_s": v} for m, v in modes.items()},
+    }
+
+
+def test_gate_green_on_identical_reports():
+    base = _report()
+    ok, lines = bench_gate.compare_reports(_report(), base)
+    assert ok
+    assert sum(ln.startswith("PASS") for ln in lines) == 5  # C1+C2+3xC3
+    assert not any(ln.startswith("FAIL") for ln in lines)
+
+
+def test_gate_red_on_same_machine_slowdown():
+    base = _report()
+    slow = bench_gate.perturb_report(_report(), 0.25)
+    ok, lines = bench_gate.compare_reports(slow, base, tol=0.15)
+    assert not ok
+    fails = [ln for ln in lines if ln.startswith("FAIL")]
+    # every mode slowed 25% > 15% tolerance — all three C3 rows trip,
+    # and each diff line names its mode with the percentage
+    assert len(fails) == 3
+    for mode in bench_gate.MODES:
+        assert any(f" C3 {mode}: " in ln and "-25.0%" in ln
+                   for ln in fails), fails
+
+
+def test_gate_red_within_but_speedup_regression():
+    base = _report()
+    fresh = _report(rps=(10.0, 30.0, 15.0))   # fusion speedup 4x -> 1.5x
+    ok, lines = bench_gate.compare_reports(fresh, base, tol_speedup=0.5)
+    assert not ok
+    assert any(ln.startswith("FAIL") and " C2 " in ln for ln in lines)
+
+
+def test_gate_skips_absolute_check_on_machine_mismatch():
+    base = _report(machine="box-a")
+    slow = bench_gate.perturb_report(_report(machine="box-b"), 0.5)
+    ok, lines = bench_gate.compare_reports(slow, base)
+    # a 50% "slowdown" on different hardware is not evidence — C3 must
+    # SKIP (explaining why), and the gate stays green on parity+speedup
+    assert ok
+    assert any(ln.startswith("SKIP") and "C3" in ln and "machine" in ln
+               for ln in lines)
+
+
+def test_gate_skips_relative_checks_on_config_mismatch():
+    base = _report(smoke=False)
+    fresh = _report(smoke=True)
+    ok, lines = bench_gate.compare_reports(fresh, base)
+    assert ok
+    assert any(ln.startswith("SKIP") and "C2" in ln for ln in lines)
+    assert any(ln.startswith("SKIP") and "C3" in ln for ln in lines)
+
+
+def test_gate_parity_break_always_fails():
+    """Trajectory parity is machine-independent: it fails the gate even
+    when every throughput check is skipped."""
+    base = _report(machine="box-a")
+    fresh = _report(machine="box-b", smoke=True, parity=False)
+    ok, lines = bench_gate.compare_reports(fresh, base)
+    assert not ok
+    assert lines[0].startswith("FAIL") and "parity" in lines[0]
+
+
+def test_perturb_report_scales_all_modes_and_copies():
+    orig = _report()
+    hurt = bench_gate.perturb_report(orig, 0.25)
+    for m in bench_gate.MODES:
+        assert hurt["modes"][m]["rounds_per_s"] == pytest.approx(
+            0.75 * orig["modes"][m]["rounds_per_s"])
+    # deep copy — the original must be untouched
+    assert orig["modes"]["eager"]["rounds_per_s"] == 10.0
+    json.dumps(hurt)  # still plain JSON
+
+
+def test_fusion_check_red_on_ratio_collapse():
+    base = {"separate_over_fused": 5.77}
+    good = {"fused_interface_bytes": 2.3e6, "separate_pass_bytes": 1.3e7}
+    ok, _ = bench_gate.compare_fusion(good, base, tol_bytes=0.25)
+    assert ok
+    collapsed = {"fused_interface_bytes": 1.0e7,
+                 "separate_pass_bytes": 1.3e7}   # ratio 1.3x < 4.3x floor
+    ok, lines = bench_gate.compare_fusion(collapsed, base, tol_bytes=0.25)
+    assert not ok
+    assert any(ln.startswith("FAIL") and "ratio" in ln for ln in lines)
+    inverted = {"fused_interface_bytes": 2.0e7,
+                "separate_pass_bytes": 1.3e7}    # fused GREW past separate
+    ok, lines = bench_gate.compare_fusion(inverted, base)
+    assert not ok
+    assert any(ln.startswith("FAIL") and "invariant" in ln
+               for ln in lines)

@@ -1,0 +1,334 @@
+"""Per-client flight recorder (repro.telemetry.ledger): bit-identical
+stats across execution modes and layouts, ledger-off jaxpr byte-parity,
+ledger-on trajectory non-perturbation, run_training export schema
+(wire-bytes accounting, crash salvage), and the compile/memory
+observability counters."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import build_tiny
+from repro import telemetry
+from repro.config import FedConfig
+from repro.core import build_fed_state
+from repro.core.rounds import trace_round_jaxpr
+from repro.data import RoundBatchGenerator, make_task
+from repro.faults.defense import INJECTED_CODES, VERDICT_CODES
+from repro.launch.pipeline import (HostPrefetcher, RoundEngine,
+                                   plan_round_blocks,
+                                   sample_memory_gauges)
+from repro.metrics import MetricsSpool
+from repro.telemetry.ledger import (LEDGER_COLUMNS, LEDGER_MANIFEST,
+                                    LEDGER_METRIC_KEY, LEDGER_NPZ,
+                                    FlightRecorder, load_ledger)
+
+# honor the CI layout matrix (same pattern as test_telemetry.py)
+_ENV_LAYOUT = os.environ.get("REPRO_LAYOUT", "")
+LAYOUTS = ([_ENV_LAYOUT] if _ENV_LAYOUT
+           else ["client_parallel", "client_sequential"])
+
+ROUNDS, EVERY = 6, 3
+_COL = {name: i for i, name in enumerate(LEDGER_COLUMNS)}
+
+
+def _task(cfg, num_clients=8, seq_len=16, num_samples=256, seed=0):
+    return make_task("class_lm", vocab_size=cfg.vocab_size, seq_len=seq_len,
+                     num_samples=num_samples, num_clients=num_clients,
+                     dirichlet_alpha=0.6, seed=seed)
+
+
+def _gen(task, seed=7, local_steps=2, batch_size=2, sample=4):
+    return RoundBatchGenerator(task, num_clients=task.num_clients,
+                               clients_per_round=sample,
+                               local_steps=local_steps,
+                               batch_size=batch_size, rng=seed)
+
+
+def _active_fed(layout, **over):
+    """Every ledger column live at once: stragglers vary the step
+    counts, faults + defense produce verdicts, DP produces clip bits."""
+    kw = dict(algorithm="fedadamw", num_clients=8, clients_per_round=4,
+              local_steps=2, lr=1e-3, layout=layout,
+              sequential_clients=4, straggler_frac=0.5,
+              fault_drop=0.25, fault_nan=0.25, robust_agg="mean",
+              dp_clip=1.0, dp_noise_multiplier=0.5,
+              telemetry_ledger=True)
+    kw.update(over)
+    return FedConfig(**kw)
+
+
+def _drive_blocks(engine, params, sstate, gen, blocks, depth):
+    pre = HostPrefetcher(gen, blocks, depth=depth, stacked=engine.stacked)
+    spool = MetricsSpool(array_ndim={LEDGER_METRIC_KEY: 2})
+    for start, size, batches, cids in pre:
+        params, sstate, m = engine.run_block(params, sstate, batches, cids,
+                                             start, size)
+        spool.append(start, m, size)
+    return spool.flush(), params
+
+
+def _ledger_rows(flushed):
+    return [np.asarray(m[LEDGER_METRIC_KEY]) for _, m in flushed]
+
+
+# ------------------------------------------------ exec-mode bit parity
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_ledger_rows_bit_identical_across_exec_modes(layout):
+    """The (S, 8) stats block is the SAME ARRAY no matter how the round
+    program executes: eager depth-0, prefetched depth-2, and fused
+    rounds_per_call=3 must agree bit-for-bit — the flight recording is a
+    property of the round, not of the execution schedule."""
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg)
+    fed = _active_fed(layout)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+
+    runs = {}
+    for name, (depth, rpc) in {"eager": (0, 1), "prefetched": (2, 1),
+                               "fused": (0, 3)}.items():
+        f = dataclasses.replace(fed, rounds_per_call=rpc)
+        engine = RoundEngine(model, f, specs, alg=alg, donate=False)
+        flushed, _ = _drive_blocks(engine, params, sstate, _gen(task),
+                                   plan_round_blocks(ROUNDS, EVERY, rpc),
+                                   depth)
+        runs[name] = _ledger_rows(flushed)
+
+    for name in ("prefetched", "fused"):
+        assert len(runs[name]) == len(runs["eager"]) == ROUNDS
+        for r, (a, b) in enumerate(zip(runs["eager"], runs[name])):
+            assert a.shape == (fed.clients_per_round, len(LEDGER_COLUMNS))
+            assert np.array_equal(a, b), (name, r)
+
+    blk = runs["eager"][0]
+    assert np.all(np.isfinite(blk))      # even with NaN faults injected
+    assert set(np.unique(blk[:, _COL["verdict"]])) <= set(
+        float(v) for v in VERDICT_CODES.values())
+    assert set(np.unique(blk[:, _COL["fault_injected"]])) <= set(
+        float(v) for v in INJECTED_CODES.values())
+
+
+def test_ledger_cross_layout_parity():
+    """Both layouts (vmap vs scan) record the same per-client stats."""
+    if _ENV_LAYOUT:
+        pytest.skip("layout matrix pins a single layout")
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg)
+    rows = {}
+    for layout in ("client_parallel", "client_sequential"):
+        fed = _active_fed(layout)
+        params, specs, alg, sstate = build_fed_state(
+            model, fed, jax.random.key(0), cfg=cfg)
+        engine = RoundEngine(model, fed, specs, alg=alg, donate=False)
+        flushed, _ = _drive_blocks(engine, params, sstate, _gen(task),
+                                   plan_round_blocks(3, 3, 1), 0)
+        rows[layout] = _ledger_rows(flushed)
+    for a, b in zip(rows["client_parallel"], rows["client_sequential"]):
+        # discrete columns exactly; accumulated floats to tight tol
+        for col in ("client_id", "steps", "dp_clipped", "wire_bytes",
+                    "fault_injected", "verdict"):
+            assert np.array_equal(a[:, _COL[col]], b[:, _COL[col]])
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-7)
+
+
+# ----------------------------------------------- zero-cost-off parity
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_ledger_off_jaxpr_byte_identical(layout):
+    """telemetry_ledger=False must be FREE: the round program — single
+    round and rounds_per_call-fused — is byte-identical to a config
+    that never heard of the ledger (same RA201 gate the analyzer runs).
+    The enabled program must differ (the stats block exists)."""
+    cfg, model, _ = build_tiny("dense")
+    base = FedConfig(algorithm="fedadamw", num_clients=8,
+                     clients_per_round=2, local_steps=2, lr=1e-3,
+                     layout=layout, sequential_clients=2)
+    off = dataclasses.replace(base, telemetry_ledger=False)
+    on = dataclasses.replace(base, telemetry_ledger=True)
+    for mr in (0, 3):
+        base_txt = str(trace_round_jaxpr(model, base, cfg=cfg,
+                                         multi_rounds=mr)[0])
+        off_txt = str(trace_round_jaxpr(model, off, cfg=cfg,
+                                        multi_rounds=mr)[0])
+        on_txt = str(trace_round_jaxpr(model, on, cfg=cfg,
+                                       multi_rounds=mr)[0])
+        assert base_txt == off_txt, f"multi_rounds={mr}"
+        assert base_txt != on_txt, f"multi_rounds={mr}"
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_ledger_does_not_perturb_training(layout):
+    """The recorder only READS the uploads: enabling it must leave the
+    loss stream and final params bit-identical (same contract as
+    telemetry_diagnostics)."""
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg, num_clients=4)
+    fed = FedConfig(algorithm="fedadamw", num_clients=4,
+                    clients_per_round=2, local_steps=2, lr=1e-3,
+                    layout=layout, sequential_clients=2)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    led_fed = dataclasses.replace(fed, telemetry_ledger=True)
+    plain = RoundEngine(model, fed, specs, alg=alg, donate=False)
+    led = RoundEngine(model, led_fed, specs, alg=alg, donate=False)
+    blocks = plan_round_blocks(4, 4, 1)
+
+    rows_p, p_plain = _drive_blocks(plain, params, sstate,
+                                    _gen(task, sample=2), blocks, 0)
+    rows_l, p_led = _drive_blocks(led, params, sstate,
+                                  _gen(task, sample=2), blocks, 0)
+    assert [m["loss_mean"] for _, m in rows_p] == \
+        [m["loss_mean"] for _, m in rows_l]
+    for a, b in zip(jax.tree.leaves(p_plain), jax.tree.leaves(p_led)):
+        assert jnp.array_equal(a, b)
+    for _, m in rows_l:
+        assert m[LEDGER_METRIC_KEY].shape == (2, len(LEDGER_COLUMNS))
+
+
+# -------------------------------------------------- run_training export
+
+def test_run_training_ledger_export_schema(tmp_path):
+    """--ledger-dir yields an atomic npz + manifest whose wire column is
+    the static per-upload byte cost gated by arrival, and whose verdict
+    column explains every defense decision."""
+    from repro.launch.train import run_training
+    ld = str(tmp_path / "ledger")
+    h = run_training(arch="vit-tiny-fl", algorithm="fedadamw", rounds=4,
+                     num_clients=8, clients_per_round=4, local_steps=2,
+                     batch_size=4, eval_every=2, seed=3,
+                     straggler_frac=0.5, fault_drop=0.25, fault_nan=0.25,
+                     robust_agg="mean", ledger_dir=ld)
+    man, rounds, stats = load_ledger(ld)
+    assert man["columns"] == list(LEDGER_COLUMNS)
+    assert man["injected_codes"] == INJECTED_CODES
+    assert man["verdict_codes"] == VERDICT_CODES
+    assert man["rounds_recorded"] == 4 and list(rounds) == [0, 1, 2, 3]
+    assert stats.shape == (4, 4, len(LEDGER_COLUMNS))
+    assert np.all(np.isfinite(stats))
+
+    # wire bytes: comm_bytes iff the upload arrived, 0 iff dropped
+    comm = man["wire_bytes_per_client"]
+    assert comm > 0 and man["wire_col_scaled"]
+    wire = stats[:, :, _COL["wire_bytes"]]
+    verdict = stats[:, :, _COL["verdict"]]
+    dropped = verdict == VERDICT_CODES["dropped"]
+    assert np.array_equal(wire, np.where(dropped, 0.0, float(comm)))
+    # the fault schedule actually fired in this config
+    assert (stats[:, :, _COL["fault_injected"]] != 0).any()
+    # stragglers: steps per client in [1, local_steps], not all equal
+    steps = stats[:, :, _COL["steps"]]
+    assert steps.min() >= 1 and steps.max() <= 2
+    # engine history carries the run's ledger linkage
+    assert h["engine"]["ledger_dir"] == ld
+    assert h["engine"]["jit_steady_state_recompiles"] == 0
+
+
+def test_ledger_drift_column_matches_diagnostics(tmp_path):
+    """mean_S(drift_sq) is the per-client decomposition of the round's
+    client_drift_rms^2 gauge (paper Fig. 2 — docs/paper_map.md): the
+    two observability paths must agree on the same quantity."""
+    from repro.launch.train import run_training
+    ld = str(tmp_path / "ledger")
+    h = run_training(arch="vit-tiny-fl", algorithm="fedadamw", rounds=3,
+                     num_clients=8, clients_per_round=4, local_steps=2,
+                     batch_size=4, eval_every=3, seed=5,
+                     telemetry_diagnostics=True, ledger_dir=ld)
+    _, _, stats = load_ledger(ld)
+    per_round = stats[:, :, _COL["drift_sq"]].mean(axis=1)
+    for r, rms in enumerate(h["client_drift_rms"]):
+        assert per_round[r] == pytest.approx(rms ** 2, rel=1e-4,
+                                             abs=1e-10)
+
+
+def test_run_training_crash_still_exports_ledger(tmp_path, monkeypatch):
+    """A crash mid-run must salvage the rounds recorded so far through
+    the same ``finally`` path that saves traces — the flight recorder
+    is most valuable exactly when the run died."""
+    import repro.launch.train as train_mod
+
+    def boom(*a, **k):
+        raise RuntimeError("eval exploded")
+
+    monkeypatch.setattr(train_mod, "evaluate", boom)
+    ld = str(tmp_path / "ledger")
+    with pytest.raises(RuntimeError, match="eval exploded"):
+        train_mod.run_training(
+            arch="vit-tiny-fl", algorithm="fedadamw", rounds=4,
+            num_clients=4, clients_per_round=2, local_steps=1,
+            batch_size=4, eval_every=2, seed=3, ledger_dir=ld)
+    assert telemetry.active() is None
+    assert os.path.exists(os.path.join(ld, LEDGER_NPZ))
+    man, rounds, stats = load_ledger(ld)
+    assert man["rounds_recorded"] >= 1          # salvaged pre-crash rounds
+    assert stats.shape[0] == len(rounds) == man["rounds_recorded"]
+
+
+def test_flight_recorder_trim_and_atomicity(tmp_path):
+    """trim() drops rounds at/after the rollback point (watchdog
+    contract) and export() never leaves a partial npz behind."""
+    ld = str(tmp_path / "ledger")
+    rec = FlightRecorder(ld, wire_bytes_per_client=10)
+    blk = np.zeros((2, len(LEDGER_COLUMNS)), dtype=np.float32)
+    blk[:, _COL["wire_bytes"]] = 1.0
+    for r in range(5):
+        rec.record(r, blk)
+    rec.trim(3)
+    assert len(rec) == 3
+    path = rec.export()
+    assert os.path.exists(path)
+    assert not any(f.endswith(".tmp") for f in os.listdir(ld))
+    man, rounds, stats = load_ledger(ld)
+    assert list(rounds) == [0, 1, 2]
+    assert np.all(stats[:, :, _COL["wire_bytes"]] == 10.0)  # scaled once
+    # the manifest is enough to decode without importing repro
+    with open(os.path.join(ld, LEDGER_MANIFEST)) as fh:
+        assert json.load(fh)["columns"] == list(LEDGER_COLUMNS)
+
+
+# ------------------------------------- compile / memory observability
+
+def test_compile_counters_no_steady_state_recompiles():
+    """Across a multi-eval-block run the engine compiles each program
+    signature ONCE: jit/compiles grows on first dispatch, and the
+    steady-state recompile counter stays zero — the assertion that
+    donation/layout churn never silently re-triggers XLA."""
+    cfg, model, _ = build_tiny("dense")
+    task = _task(cfg, num_clients=4)
+    fed = FedConfig(algorithm="fedadamw", num_clients=4,
+                    clients_per_round=2, local_steps=2, lr=1e-3)
+    params, specs, alg, sstate = build_fed_state(
+        model, fed, jax.random.key(0), cfg=cfg)
+    engine = RoundEngine(model, fed, specs, alg=alg, donate=False)
+    with telemetry.session() as sess:
+        _drive_blocks(engine, params, sstate, _gen(task, sample=2),
+                      plan_round_blocks(ROUNDS, EVERY, 1), 0)
+        snap = sess.counters.snapshot()
+    assert engine.compiles >= 1
+    assert engine.steady_state_recompiles == 0
+    assert snap["jit/compiles"] == float(engine.compiles)
+    assert snap["jit/compile_s"] == pytest.approx(engine.compile_s)
+    assert snap.get("jit/steady_state_recompiles", 0.0) == 0.0
+    # one signature, many blocks: compiled far fewer times than rounds
+    assert engine.compiles < ROUNDS
+
+
+def test_sample_memory_gauges_is_total():
+    """On backends without memory_stats (CPU jax) the sampler is a
+    silent no-op; where stats exist both gauges land in the session."""
+    with telemetry.session() as sess:
+        gauges = sample_memory_gauges()
+        snap = sess.counters.snapshot()
+    if gauges:
+        assert set(gauges) == {"mem/live_bytes", "mem/peak_bytes"}
+        assert snap["mem/live_bytes"] > 0
+        assert snap["mem/peak_bytes"] >= snap["mem/live_bytes"]
+    else:
+        assert "mem/live_bytes" not in snap
+    # sampling outside a session must not raise either
+    assert isinstance(sample_memory_gauges(), dict)

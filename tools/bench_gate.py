@@ -1,0 +1,269 @@
+#!/usr/bin/env python
+"""CI perf-regression gate over the committed benchmark baselines.
+
+Re-measures ``benchmarks/round_throughput.py`` (interleaved reps,
+min-of-reps — the benchmark's own noise discipline) and compares the
+fresh report against the committed ``BENCH_round_throughput.json`` with
+explicit tolerances; optionally audits the uploadfuse fusion-bytes
+ratio against ``benchmarks/out/roofline_fusion.json``. Exit 0 = green,
+1 = regression (with an actionable per-check diff), 2 = usage error.
+
+Checks
+------
+C1  parity       fresh ``parity_bitexact`` must be True — the
+                 pipelined/fused engines drifted from the eager
+                 trajectory. Machine-independent, always enforced.
+C2  speedup      fresh ``speedup_pipelined_fused_vs_eager`` must be at
+                 least ``(1 - tol-speedup)`` of the baseline's. Only
+                 comparable when the measurement CONFIG matches the
+                 baseline's (smoke-scale CI runs vs a full-scale
+                 committed baseline measure different dispatch/compute
+                 ratios); skipped with a note otherwise.
+C3  rounds/s     per-mode absolute throughput within ``tol`` of the
+                 baseline. Absolute rounds/s only transfer between
+                 identical machines AND configs, so this check is
+                 skipped (with a note) unless both fingerprints match.
+C4  bytes ratio  fused-interface vs separate-pass bytes from the
+                 roofline fusion audit: a program property (machine
+                 independent), so the fused interface must stay
+                 strictly smaller and the ratio within ``tol-bytes``
+                 of the committed audit. Enabled via ``--roofline``.
+
+``--update-baseline`` re-measures at FULL scale and rewrites the
+baseline JSON. ``--selftest-regression F`` is the CI red-canary: it
+perturbs a fresh measurement by slowing every mode by fraction F and
+exits 0 only if the gate correctly goes red — proving the gate can
+fail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(REPO, "BENCH_round_throughput.json")
+DEFAULT_ROOFLINE = os.path.join(REPO, "benchmarks", "out",
+                                "roofline_fusion.json")
+
+MODES = ("eager", "pipelined", "pipelined_fused")
+
+
+# --------------------------------------------------------- measurement
+
+def measure_throughput(smoke: bool = True) -> dict:
+    """Fresh interleaved-reps measurement via the benchmark's own
+    driver (which asserts bit-exact trajectory parity internally)."""
+    sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from round_throughput import Bench
+    report, _speedup = Bench(smoke=smoke).run()
+    return report
+
+
+def measure_fusion_audit(smoke: bool = True) -> dict:
+    """Fresh uploadfuse fusion-bytes audit (program properties — no
+    timing involved)."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    sys.path.insert(0, REPO)  # roofline_report imports benchmarks.common
+    from benchmarks import roofline_report
+    return roofline_report._fusion_audit(smoke=smoke)
+
+
+# --------------------------------------------------------- comparison
+
+def _machine_match(fresh: dict, base: dict) -> bool:
+    return fresh.get("machine") == base.get("machine")
+
+
+def _config_match(fresh: dict, base: dict) -> bool:
+    return fresh.get("config") == base.get("config")
+
+
+def compare_reports(fresh: dict, base: dict, *, tol: float = 0.15,
+                    tol_speedup: float = 0.5):
+    """Return ``(ok, lines)`` — the gate verdict plus the per-check
+    diff table (one line per check, PASS/FAIL/SKIP prefixed)."""
+    lines = []
+    ok = True
+
+    # C1: parity is sacred — and machine-independent
+    parity = bool(fresh.get("parity_bitexact", False))
+    lines.append(f"{'PASS' if parity else 'FAIL'}  C1 parity_bitexact: "
+                 f"fresh={parity} (required: True)")
+    ok &= parity
+
+    cfg_match = _config_match(fresh, base)
+    m_match = _machine_match(fresh, base)
+
+    # C2: fusion speedup ratio (needs a config match — smoke-scale
+    # blocks amortize dispatch differently than the full-scale baseline)
+    f_spd = float(fresh.get("speedup_pipelined_fused_vs_eager", 0.0))
+    b_spd = float(base.get("speedup_pipelined_fused_vs_eager", 0.0))
+    if cfg_match and b_spd > 0:
+        floor = max(1.0, b_spd * (1.0 - tol_speedup))
+        good = f_spd >= floor
+        lines.append(
+            f"{'PASS' if good else 'FAIL'}  C2 speedup: fresh={f_spd:.2f} "
+            f"baseline={b_spd:.2f} floor={floor:.2f} "
+            f"(tol-speedup={tol_speedup})")
+        ok &= good
+    else:
+        lines.append(
+            f"SKIP  C2 speedup: config mismatch vs baseline "
+            f"(fresh smoke={fresh.get('config', {}).get('smoke')}, "
+            f"baseline smoke={base.get('config', {}).get('smoke')}) — "
+            f"informational: fresh={f_spd:.2f} baseline={b_spd:.2f}")
+
+    # C3: absolute per-mode rounds/s (needs machine AND config match)
+    if m_match and cfg_match:
+        for mode in MODES:
+            f_rs = float(fresh["modes"][mode]["rounds_per_s"])
+            b_rs = float(base["modes"][mode]["rounds_per_s"])
+            floor = b_rs * (1.0 - tol)
+            good = f_rs >= floor
+            pct = 100.0 * (f_rs - b_rs) / b_rs if b_rs else 0.0
+            lines.append(
+                f"{'PASS' if good else 'FAIL'}  C3 {mode}: "
+                f"fresh={f_rs:.1f} r/s baseline={b_rs:.1f} r/s "
+                f"({pct:+.1f}%, floor={floor:.1f}, tol={tol})")
+            ok &= good
+    else:
+        why = ("machine" if not m_match else "config")
+        lines.append(
+            f"SKIP  C3 rounds/s: {why} fingerprint mismatch vs baseline "
+            f"(absolute throughput only transfers between identical "
+            f"machines and configs)")
+
+    return ok, lines
+
+
+def compare_fusion(fresh: dict, base: dict, *, tol_bytes: float = 0.25):
+    """``(ok, lines)`` for the roofline fusion-bytes check (C4)."""
+    lines = []
+    fused = float(fresh["fused_interface_bytes"])
+    sep = float(fresh["separate_pass_bytes"])
+    strict = fused < sep
+    lines.append(f"{'PASS' if strict else 'FAIL'}  C4 fusion invariant: "
+                 f"fused={fused:.0f} B < separate={sep:.0f} B")
+    ok = strict
+    f_ratio = sep / max(fused, 1.0)
+    b_ratio = float(base.get("separate_over_fused", 0.0))
+    if b_ratio > 0:
+        floor = b_ratio * (1.0 - tol_bytes)
+        good = f_ratio >= floor
+        lines.append(
+            f"{'PASS' if good else 'FAIL'}  C4 bytes ratio: "
+            f"fresh={f_ratio:.2f}x baseline={b_ratio:.2f}x "
+            f"floor={floor:.2f}x (tol-bytes={tol_bytes})")
+        ok &= good
+    return ok, lines
+
+
+def perturb_report(report: dict, slowdown: float) -> dict:
+    """A copy of ``report`` with every mode slowed by ``slowdown``
+    (e.g. 0.25 = 25% fewer rounds/s) — the red-canary input."""
+    out = json.loads(json.dumps(report))
+    # every mode slows equally, so the C2 speedup ratio survives — the
+    # canary exercises the absolute C3 check, which is the point
+    for mode in out.get("modes", {}):
+        out["modes"][mode]["rounds_per_s"] *= (1.0 - slowdown)
+    return out
+
+
+# --------------------------------------------------------------- main
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed throughput baseline JSON")
+    ap.add_argument("--roofline", default="",
+                    help="committed roofline_fusion.json to audit the "
+                         "fusion bytes ratio against (C4); empty = skip")
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="relative rounds/s tolerance for C3 "
+                         "(default 0.15 = red at >15%% slowdown)")
+    ap.add_argument("--tol-speedup", type=float, default=0.5,
+                    help="relative tolerance on the fusion speedup "
+                         "ratio for C2")
+    ap.add_argument("--tol-bytes", type=float, default=0.25,
+                    help="relative tolerance on the fusion bytes "
+                         "ratio for C4")
+    ap.add_argument("--full", action="store_true",
+                    help="measure at full scale instead of smoke")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="re-measure at FULL scale and rewrite "
+                         "--baseline instead of gating")
+    ap.add_argument("--selftest-regression", type=float, default=0.0,
+                    metavar="FRAC",
+                    help="red-canary: perturb a fresh measurement by "
+                         "this slowdown fraction and require the gate "
+                         "to go RED (exit 0 iff it does)")
+    args = ap.parse_args(argv)
+
+    if args.update_baseline:
+        report = measure_throughput(smoke=False)
+        tmp = args.baseline + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(report, fh, indent=1, sort_keys=True)
+        os.replace(tmp, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"bench_gate: baseline not found: {args.baseline}",
+              file=sys.stderr)
+        return 2
+
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    fresh = measure_throughput(smoke=not args.full)
+
+    if args.selftest_regression > 0.0:
+        # compare the perturbed fresh report against the UNPERTURBED
+        # fresh one — machine and config match by construction, so the
+        # absolute check C3 is live and must trip
+        hurt = perturb_report(fresh, args.selftest_regression)
+        ok, lines = compare_reports(hurt, fresh, tol=args.tol,
+                                    tol_speedup=args.tol_speedup)
+        print(f"bench_gate self-test (injected "
+              f"{100 * args.selftest_regression:.0f}% slowdown):")
+        print("\n".join("  " + ln for ln in lines))
+        if ok:
+            print("SELF-TEST FAILED: the gate stayed green on an "
+                  "injected regression — it cannot catch real ones",
+                  file=sys.stderr)
+            return 1
+        print("self-test ok: gate goes red on injected regression")
+        return 0
+
+    ok, lines = compare_reports(fresh, base, tol=args.tol,
+                                tol_speedup=args.tol_speedup)
+    if args.roofline:
+        if not os.path.exists(args.roofline):
+            print(f"bench_gate: roofline baseline not found: "
+                  f"{args.roofline}", file=sys.stderr)
+            return 2
+        with open(args.roofline) as fh:
+            roof_base = json.load(fh)
+        roof_fresh = measure_fusion_audit(smoke=True)
+        ok4, lines4 = compare_fusion(roof_fresh, roof_base,
+                                     tol_bytes=args.tol_bytes)
+        ok &= ok4
+        lines += lines4
+
+    print(f"bench_gate vs {os.path.relpath(args.baseline, REPO)}:")
+    print("\n".join("  " + ln for ln in lines))
+    if not ok:
+        print("\nPERF REGRESSION: one or more checks failed. If the "
+              "slowdown is intended (e.g. a correctness fix), refresh "
+              "the baseline with: python tools/bench_gate.py "
+              "--update-baseline", file=sys.stderr)
+        return 1
+    print("bench_gate: green")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,225 @@
+#!/usr/bin/env python
+"""Render a per-client attribution report from a flight recording.
+
+Stdlib-only (like tools/report_run.py): the ``ledger.npz`` written by
+``repro.telemetry.ledger.FlightRecorder`` is a zip of ``.npy`` members,
+parsed here with ``zipfile`` + ``struct`` so the report runs anywhere —
+no numpy, no jax, no repo install.
+
+Sections:
+  - run summary (rounds, cohort size, wire bytes/client)
+  - top-k drifters: clients ranked by mean drift contribution
+    (the per-client Fig. 2 decomposition — docs/paper_map.md)
+  - rejection timeline: rounds where any upload was dropped/rejected,
+    with reason codes
+  - bytes-per-client histogram: who dominates the wire
+  - ``--compare OTHER_DIR``: per-client drift/bytes deltas vs a second
+    recording (same population ids matched by client_id)
+
+Usage: python tools/ledger_report.py LEDGER_DIR [--compare DIR] [--top K]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import struct
+import sys
+import zipfile
+
+LEDGER_NPZ = "ledger.npz"
+LEDGER_MANIFEST = "ledger_manifest.json"
+
+
+# ------------------------------------------------------- npy/npz parsing
+
+def _parse_npy(data: bytes):
+    """Minimal .npy v1/v2 reader -> (shape, flat list of python nums)."""
+    if data[:6] != b"\x93NUMPY":
+        raise ValueError("not a .npy payload")
+    major = data[6]
+    if major == 1:
+        (hlen,) = struct.unpack("<H", data[8:10])
+        off = 10
+    else:
+        (hlen,) = struct.unpack("<I", data[8:12])
+        off = 12
+    header = ast.literal_eval(data[off:off + hlen].decode("latin1"))
+    if header.get("fortran_order"):
+        raise ValueError("fortran-order arrays unsupported")
+    descr, shape = header["descr"], tuple(header["shape"])
+    fmt = {"<f4": "f", "<f8": "d", "<i4": "i", "<i8": "q",
+           "|b1": "?", "<u4": "I", "<u8": "Q"}[descr]
+    count = 1
+    for d in shape:
+        count *= d
+    body = data[off + hlen:]
+    vals = list(struct.unpack(
+        "<%d%s" % (count, fmt), body[:count * struct.calcsize(fmt)]))
+    return shape, vals
+
+
+def load_recording(ledger_dir: str) -> dict:
+    """-> {manifest, rounds: [int], shape: (R, S, C), stats: flat list}"""
+    with open(os.path.join(ledger_dir, LEDGER_MANIFEST)) as fh:
+        manifest = json.load(fh)
+    with zipfile.ZipFile(os.path.join(ledger_dir, LEDGER_NPZ)) as zf:
+        _, rounds = _parse_npy(zf.read("rounds.npy"))
+        shape, stats = _parse_npy(zf.read("stats.npy"))
+    return {"manifest": manifest, "rounds": [int(r) for r in rounds],
+            "shape": shape, "stats": stats}
+
+
+def _cell(rec: dict, r: int, s: int, col: str) -> float:
+    R, S, C = rec["shape"]
+    c = rec["manifest"]["columns"].index(col)
+    return rec["stats"][(r * S + s) * C + c]
+
+
+def per_client(rec: dict) -> dict:
+    """client_id -> {rounds, steps, drift_sum, upload_sum, bytes,
+    clipped, dropped, rejected}"""
+    R, S, _ = rec["shape"]
+    out: dict = {}
+    for r in range(R):
+        for s in range(S):
+            cid = int(_cell(rec, r, s, "client_id"))
+            d = out.setdefault(cid, {
+                "rounds": 0, "steps": 0.0, "drift_sum": 0.0,
+                "upload_sum": 0.0, "bytes": 0.0, "clipped": 0,
+                "dropped": 0, "rejected": 0})
+            d["rounds"] += 1
+            d["steps"] += _cell(rec, r, s, "steps")
+            d["drift_sum"] += _cell(rec, r, s, "drift_sq")
+            d["upload_sum"] += _cell(rec, r, s, "upload_l2")
+            d["bytes"] += _cell(rec, r, s, "wire_bytes")
+            d["clipped"] += int(_cell(rec, r, s, "dp_clipped"))
+            v = _cell(rec, r, s, "verdict")
+            if v == 1.0:
+                d["dropped"] += 1
+            elif v == 2.0:
+                d["rejected"] += 1
+    return out
+
+
+# --------------------------------------------------------------- report
+
+def _fmt(v, nd=3):
+    return f"{v:.{nd}f}" if isinstance(v, float) else str(v)
+
+
+def _table(rows, headers) -> list:
+    cols = [headers] + [[_fmt(c) for c in row] for row in rows]
+    widths = [max(len(r[i]) for r in cols) for i in range(len(headers))]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(headers, widths))]
+    lines.append("  ".join("-" * w for w in widths))
+    for row in cols[1:]:
+        lines.append("  ".join(c.rjust(w) for c, w in zip(row, widths)))
+    return lines
+
+
+def _histogram(items, width=30) -> list:
+    top = max((v for _, v in items), default=0.0)
+    lines = []
+    for label, v in items:
+        bar = "#" * (int(width * v / top) if top else 0)
+        lines.append(f"  {label:>10}  {v:>14.0f}  {bar}")
+    return lines
+
+
+def report(ledger_dir: str, compare_dir: str = "", top: int = 10) -> str:
+    rec = load_recording(ledger_dir)
+    man = rec["manifest"]
+    R, S, C = rec["shape"]
+    inv_verdict = {float(v): k for k, v in man["verdict_codes"].items()}
+    inv_inject = {float(v): k for k, v in man["injected_codes"].items()}
+    out = [f"# flight recording: {ledger_dir}", ""]
+    out.append(f"rounds recorded      {R}")
+    out.append(f"clients per round    {S}")
+    out.append(f"wire bytes/client    {man['wire_bytes_per_client']}")
+    meta = man.get("meta", {})
+    if meta:
+        out.append("meta                 " + ", ".join(
+            f"{k}={v}" for k, v in sorted(meta.items())))
+    clients = per_client(rec)
+
+    out += ["", f"## top {top} drifters (mean per-round drift "
+                "contribution — Fig. 2 decomposition per client)"]
+    ranked = sorted(clients.items(),
+                    key=lambda kv: -kv[1]["drift_sum"] / kv[1]["rounds"])
+    rows = [(cid, d["rounds"], _fmt(d["drift_sum"] / d["rounds"], 5),
+             _fmt(d["upload_sum"] / d["rounds"], 4),
+             d["clipped"], d["dropped"], d["rejected"])
+            for cid, d in ranked[:top]]
+    out += _table(rows, ["client", "rounds", "mean_drift_sq",
+                         "mean_upload_l2", "clipped", "dropped",
+                         "rejected"])
+
+    out += ["", "## rejection timeline (rounds with non-accepted "
+                "verdicts)"]
+    events = []
+    for r in range(R):
+        bad = {}
+        for s in range(S):
+            v = _cell(rec, r, s, "verdict")
+            if v != 0.0:
+                cid = int(_cell(rec, r, s, "client_id"))
+                inj = inv_inject.get(
+                    _cell(rec, r, s, "fault_injected"), "?")
+                bad.setdefault(inv_verdict.get(v, "?"), []).append(
+                    f"{cid}({inj})")
+        if bad:
+            events.append(f"  round {rec['rounds'][r]:>4}:  " + "; ".join(
+                f"{verdict}: {', '.join(cl)}"
+                for verdict, cl in sorted(bad.items())))
+    out += events if events else ["  (none — every upload accepted)"]
+
+    out += ["", "## wire bytes per client (total over recording)"]
+    byte_items = sorted(((f"client {cid}", d["bytes"])
+                         for cid, d in clients.items()),
+                        key=lambda kv: -kv[1])
+    out += _histogram(byte_items[:top])
+
+    if compare_dir:
+        other = per_client(load_recording(compare_dir))
+        out += ["", f"## compare vs {compare_dir} "
+                    "(this-run minus other-run, shared clients)"]
+        shared = sorted(set(clients) & set(other))
+        rows = []
+        for cid in shared:
+            a, b = clients[cid], other[cid]
+            rows.append((cid,
+                         _fmt(a["drift_sum"] / a["rounds"]
+                              - b["drift_sum"] / b["rounds"], 5),
+                         _fmt(a["bytes"] - b["bytes"], 0),
+                         a["rejected"] - b["rejected"]))
+        out += _table(rows, ["client", "d_mean_drift_sq", "d_bytes",
+                             "d_rejected"])
+        only = sorted(set(clients) ^ set(other))
+        if only:
+            out.append(f"  clients in one run only: {only}")
+    return "\n".join(out) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("ledger_dir", help="directory with ledger.npz + "
+                                       "ledger_manifest.json")
+    ap.add_argument("--compare", default="",
+                    help="second recording to diff against")
+    ap.add_argument("--top", type=int, default=10,
+                    help="rows in the ranked sections")
+    args = ap.parse_args(argv)
+    for d in filter(None, (args.ledger_dir, args.compare)):
+        if not os.path.exists(os.path.join(d, LEDGER_MANIFEST)):
+            print(f"ledger_report: no {LEDGER_MANIFEST} in {d}",
+                  file=sys.stderr)
+            return 2
+    print(report(args.ledger_dir, compare_dir=args.compare,
+                 top=args.top), end="")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

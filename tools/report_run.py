@@ -11,6 +11,11 @@ Reads the ``trace.json`` + ``counters.json`` a ``--trace-dir`` run of
   host spans and trace-time ("trace/...") spans separated;
 * derived ratios: ``host_blocked_frac`` (consumer wait over traced
   wall) and producer utilization;
+* resilience/privacy families when present (``faults/*``, ``dp/*``,
+  ``watchdog/*``, quorum skips) with derived rejection-rate and
+  quorum-skip-rate;
+* a pointer to the flight-recorder ledger when one sits next to the
+  trace (or via ``--ledger``) — drill in with tools/ledger_report.py;
 * optionally, the final rows of the run's metrics CSV.
 
 Stdlib only — usable on any box that has the artifacts, no jax needed.
@@ -56,7 +61,37 @@ def span_aggregates(events: List[Dict[str, Any]]) -> Dict[str, Dict]:
     return agg
 
 
-def report(trace_dir: str, csv_path: str = "") -> str:
+#: counter families surfaced in the resilience/privacy section when any
+#: member is present in the snapshot (names from telemetry.registry
+#: CANONICAL_METRICS — see docs/observability.md)
+RESILIENCE_FAMILIES = (
+    "faults/injected", "faults/rejected_uploads",
+    "rounds/quorum_skipped", "watchdog/rollbacks", "dp/epsilon",
+)
+
+
+def resilience_section(counters: Dict[str, float]) -> List[str]:
+    """Lines for the faults/DP/watchdog families, with derived rates;
+    empty when none of the families were emitted by the run."""
+    present = [k for k in RESILIENCE_FAMILIES if k in counters]
+    if not present:
+        return []
+    rows = [[k, _fmt(counters[k])] for k in present]
+    rounds = counters.get("rounds/completed", 0.0)
+    cohort = counters.get("round/cohort_size", 0.0)
+    uploads = rounds * cohort
+    if uploads > 0 and "faults/rejected_uploads" in counters:
+        rows.append(["rejection_rate",
+                     _fmt(counters["faults/rejected_uploads"] / uploads)])
+    if rounds > 0 and "rounds/quorum_skipped" in counters:
+        rows.append(["quorum_skip_rate",
+                     _fmt(counters["rounds/quorum_skipped"] / rounds)])
+    return ["## resilience / privacy",
+            _table(rows, ["name", "value"]), ""]
+
+
+def report(trace_dir: str, csv_path: str = "",
+           ledger_dir: str = "") -> str:
     out: List[str] = [f"# run report: {trace_dir}", ""]
     counters_path = os.path.join(trace_dir, "counters.json")
     trace_path = os.path.join(trace_dir, "trace.json")
@@ -69,6 +104,7 @@ def report(trace_dir: str, csv_path: str = "") -> str:
         out.append(_table([[k, _fmt(v)] for k, v in sorted(counters.items())],
                           ["name", "value"]))
         out.append("")
+        out.extend(resilience_section(counters))
 
     if os.path.exists(trace_path):
         with open(trace_path) as fh:
@@ -99,6 +135,26 @@ def report(trace_dir: str, csv_path: str = "") -> str:
                    "or chrome://tracing")
         out.append("")
 
+    # flight recorder: link the ledger if one sits in --ledger or next
+    # to the trace (train.py exports it at the same shutdown boundary)
+    for cand in filter(None, (ledger_dir, trace_dir)):
+        manifest_path = os.path.join(cand, "ledger_manifest.json")
+        if os.path.exists(manifest_path):
+            with open(manifest_path) as fh:
+                man = json.load(fh)
+            out.append("## flight recorder")
+            out.append(_table([
+                ["ledger_dir", cand],
+                ["rounds_recorded", str(man.get("rounds_recorded", 0))],
+                ["clients_per_round", str(man.get("clients_per_round", 0))],
+                ["wire_bytes_per_client",
+                 _fmt(float(man.get("wire_bytes_per_client", 0)))],
+            ], ["name", "value"]))
+            out.append(f"per-client attribution: python "
+                       f"tools/ledger_report.py {cand}")
+            out.append("")
+            break
+
     if csv_path and os.path.exists(csv_path):
         with open(csv_path, newline="") as fh:
             rows = list(csv.reader(fh))
@@ -113,11 +169,13 @@ def main(argv: List[str]) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("trace_dir", help="directory a --trace-dir run wrote")
     ap.add_argument("--csv", default="", help="run metrics CSV to append")
+    ap.add_argument("--ledger", default="",
+                    help="flight-recorder dir (defaults to trace_dir)")
     args = ap.parse_args(argv)
     if not os.path.isdir(args.trace_dir):
         print(f"not a directory: {args.trace_dir}", file=sys.stderr)
         return 2
-    print(report(args.trace_dir, args.csv))
+    print(report(args.trace_dir, args.csv, ledger_dir=args.ledger))
     return 0
 
 
